@@ -1,0 +1,70 @@
+"""Paper Table 2 / Fig. 7: small gamma0 converges FASTER to a WORSE optimum.
+
+The paper's methodology point: report both time-to-epsilon and the final
+metric, or early-phase speed misleads. Tiny-LM sweep over gamma0 with the
+paper's exponential decay; we record steps-to-epsilon for a loose epsilon
+(small lr wins) and the best loss reached (large lr wins).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.optim import schedules
+
+
+def run(quick: bool = True) -> List[Tuple[str, float, str]]:
+    gammas = [0.05, 0.2, 0.8] if quick else [0.05, 0.1, 0.2, 0.4, 0.8, 1.6]
+    steps = 400 if quick else 1200
+    eps_loose = 3.0
+    rows = []
+    results = {}
+    for g in gammas:
+        model, params, grad_fn, batch_fn, eval_fn = common.tiny_lm_problem(
+            batch=16, seed=0)
+        sched = schedules.exponential_decay(g, 0.94, steps_per_epoch=50)
+
+        @jax.jit
+        def update(p, grads, step):
+            lr = sched(step)
+            return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, grads)
+
+        t0 = time.time()
+        losses = []
+        import jax.numpy as jnp
+        for s in range(steps):
+            _, grads = grad_fn(params, batch_fn(0, s))
+            params = update(params, grads, jnp.asarray(s))
+            if s % 10 == 0:
+                losses.append(eval_fn(params))
+        losses = np.array(losses)
+        t_eps = common.time_to_threshold(np.arange(len(losses)) * 10.0,
+                                         losses, eps_loose)
+        best = float(losses.min())
+        results[g] = {"steps_to_loose_eps": t_eps, "best_loss": best}
+        rows.append((f"lr_sweep.g{g}", (time.time() - t0) * 1e6 / steps,
+                     f"best={best:.3f},t_eps={t_eps}"))
+
+    gs = sorted(results)
+    # paper-shape checks: the largest lr reaches the best optimum; the
+    # smallest lr is not the best optimum
+    best_gamma = min(results, key=lambda g_: results[g_]["best_loss"])
+    rows.append(("lr_sweep.best_gamma", 0.0, str(best_gamma)))
+    rows.append(("lr_sweep.small_lr_worse_optimum", 0.0,
+                 str(results[gs[0]]["best_loss"]
+                     > results[best_gamma]["best_loss"] + 1e-3)))
+    common.save_json("lr_sweep", {
+        "results": {str(k): v for k, v in results.items()},
+        "paper_claim": "Table 2: gamma0=1.125 converges in fewest epochs but"
+                       " to 77.29%; gamma0=9.0 reaches 78.17%",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,93 @@
+"""Paper Fig. 2 / §2.1: simulated gradient staleness degrades the optimum.
+
+The paper trains a 4-layer weight-normalized CNN on MNIST with old
+gradients (staleness 0..50), using a staleness ramp over the first epochs.
+We reproduce on the synthetic MNIST-like set (CPU scale): test error as a
+function of average staleness must increase monotonically, with instability
+beyond staleness ~15 without the ramp.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import async_sim
+from repro.data import mnist_like
+from repro.models import mnist_cnn
+from repro.optim import schedules
+
+
+def _error(model, params, test) -> float:
+    logits = model.forward(params, jnp.asarray(test["images"]))
+    pred = np.asarray(jnp.argmax(logits, -1))
+    return float((pred != test["labels"]).mean())
+
+
+def run(quick: bool = True) -> List[Tuple[str, float, str]]:
+    staleness_values = [0, 5, 10, 15] if quick else [0, 5, 10, 20, 35, 50]
+    steps = 450 if quick else 1500
+    batch = 64
+    data_cfg = mnist_like.MnistLikeConfig(num_train=4096, num_test=1024)
+    train, test = mnist_like.make_dataset(data_cfg)
+    model = mnist_cnn.make(widths=(16, 16, 32, 32))
+
+    # paper §2.1: lower lr needed once staleness >= 20 to avoid blowups;
+    # we use the stable-for-all setting so the DEGRADATION (not
+    # divergence) is what's measured
+    sched = schedules.linear_anneal(0.03, steps, int(steps * 0.6))
+
+    @jax.jit
+    def grad_fn(params, batch_):
+        def loss(p):
+            return model.per_example_loss(p, batch_).mean()
+        return jax.value_and_grad(loss)(params)
+
+    def update_fn(params, opt_state, grads, step):
+        lr = sched(jnp.asarray(step))
+        new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        return new, opt_state
+
+    def batch_fn(step):
+        rng = np.random.RandomState(1000 + step)
+        idx = rng.randint(0, data_cfg.num_train, size=batch)
+        return {"images": jnp.asarray(train["images"][idx]),
+                "labels": jnp.asarray(train["labels"][idx])}
+
+    rows: List[Tuple[str, float, str]] = []
+    errors = {}
+    t_all = time.time()
+    for tau in staleness_values:
+        params0 = model.init(jax.random.PRNGKey(0))
+        t0 = time.time()
+        # paper evaluates on the EMA; alpha scaled to the run length
+        # (0.9999 needs ~25 epochs; 0.99 converges within our budget)
+        res = async_sim.simulate_staleness(
+            grad_fn, update_fn, params0, batch_fn, num_updates=steps,
+            staleness=tau, ramp_steps=max(1, steps // 5),
+            ema_decay=0.99)
+        err = _error(model, res.ema, test)
+        errors[tau] = err
+        us = (time.time() - t0) * 1e6 / steps
+        rows.append((f"staleness.tau{tau}", us, f"test_err={err:.4f}"))
+
+    monotone = all(errors[a] <= errors[b] + 0.02
+                   for a, b in zip(staleness_values, staleness_values[1:]))
+    rows.append(("staleness.monotone_degradation", 0.0, str(monotone)))
+    common.save_json("staleness", {
+        "staleness": staleness_values, "test_error": errors,
+        "steps": steps, "monotone": monotone,
+        "paper_claim": "0.36% err at tau=0 -> 0.79% at tau=50 (scale-shifted"
+                       " here: synthetic data, smaller CNN, fewer steps)",
+        "wall_s": time.time() - t_all,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,61 @@
+"""Host-CPU step-time microbenchmark: wall time per jitted train step for
+every assigned architecture's smoke config (the ``name,us_per_call``
+contract; TPU numbers come from the dry-run roofline, not wall time)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro import configs
+from repro.models import get_model
+from repro.optim import optimizers as opt_lib
+from repro.optim import schedules
+from repro.train.train_step import build_train_step
+
+
+def _bench_arch(arch: str, iters: int) -> float:
+    cfg = configs.get_smoke_config(arch)
+    model = get_model(cfg)
+    opt = opt_lib.sgd(schedules.constant(0.01))
+    step = jax.jit(build_train_step(model, opt, num_workers=4, n_aggregate=3),
+                   donate_argnums=(0, 1))
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    b, s = 8, 32
+    batch = {"tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab_size),
+             "labels": jax.random.randint(k2, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jnp.zeros((b, cfg.num_prefix_embeds,
+                                            cfg.d_model))
+    if cfg.family == "audio":
+        batch["encoder_frames"] = jnp.zeros((b, cfg.encoder_seq_len,
+                                             cfg.d_model))
+    mask = jnp.ones((4,), bool)
+    sc = jnp.asarray(0, jnp.int32)
+    params, opt_state, _, _ = step(params, opt_state, None, sc, batch, mask)
+    jax.block_until_ready(params)
+    t0 = time.time()
+    for i in range(iters):
+        params, opt_state, _, m = step(params, opt_state, None, sc, batch, mask)
+    jax.block_until_ready(params)
+    return (time.time() - t0) * 1e6 / iters
+
+
+def run(quick: bool = True) -> List[Tuple[str, float, str]]:
+    iters = 3 if quick else 20
+    rows = []
+    for arch in configs.list_archs():
+        us = _bench_arch(arch, iters)
+        rows.append((f"step_time.{arch}", us, "smoke-config CPU train step"))
+    common.save_json("step_time", {r[0]: r[1] for r in rows})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,58 @@
+"""Paper Figs. 3 & 4: straggler order statistics on N=100 workers.
+
+Fig. 3: CDF of time to collect the k-th gradient (k = 1, 50, 90, 97..100).
+Fig. 4: mean/median time to collect k gradients.
+Validated claims: flat middle (most mean times 1.4-1.8s), exponential tail
+for the last few gradients, max observed latency <= 310s.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import straggler
+
+
+def run(quick: bool = True) -> List[Tuple[str, float, str]]:
+    iters = 2000 if quick else 20000
+    t0 = time.time()
+    rng = np.random.RandomState(0)
+    lat = straggler.PaperCalibrated().sample(rng, (iters, 100))
+    mean_k, med_k = straggler.mean_median_time_to_k(lat)
+    grid = np.linspace(0, 6.0, 61)
+    cdfs = {k: straggler.cdf_of_time_to_k(lat, k, grid).tolist()
+            for k in (1, 50, 90, 97, 98, 99, 100)}
+    elapsed_us = (time.time() - t0) * 1e6 / iters
+
+    frac_98_under_2s = float(straggler.cdf_of_time_to_k(lat, 98,
+                                                        np.array([2.0]))[0])
+    frac_100_under_2s = float(straggler.cdf_of_time_to_k(lat, 100,
+                                                         np.array([2.0]))[0])
+    common.save_json("straggler", {
+        "iters": iters,
+        "grid": grid.tolist(),
+        "cdf": cdfs,
+        "mean_time_to_k": mean_k.tolist(),
+        "median_time_to_k": med_k.tolist(),
+        "paper_claims": {
+            "frac_98th_under_2s": frac_98_under_2s,     # paper: ~0.8
+            "frac_100th_under_2s": frac_100_under_2s,   # paper: ~0.3
+            "mean_k50": float(mean_k[49]),              # paper: 1.4-1.8
+            "mean_k100": float(mean_k[99]),             # paper: tail explodes
+            "max_latency": float(lat.max()),            # paper: 310s
+        },
+    })
+    return [
+        ("straggler.sim_iter", elapsed_us, f"mean_k50={mean_k[49]:.2f}s"),
+        ("straggler.k98_cdf2s", 0.0, f"{frac_98_under_2s:.2f}"),
+        ("straggler.k100_cdf2s", 0.0, f"{frac_100_under_2s:.2f}"),
+        ("straggler.mean_k100", 0.0, f"{mean_k[99]:.1f}s"),
+    ]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,128 @@
+"""Paper Figs. 8/9 (headline result): Sync-Opt with backup workers
+converges FASTER (simulated wall time) and to a BETTER optimum than
+Async-Opt at matched worker counts; plain Sync (b=0) is slowed by
+stragglers.
+
+Setup: tiny LM, N+b machines under the calibrated latency model.
+  * async: Alg. 1/2 event simulation, staleness ~ N
+  * sync_full: all N+b aggregated, iteration time = max arrival
+  * sync_backup: first N of N+b aggregated (Alg. 3/4)
+Same lr-per-datapoint rule as the paper (A.3) scaled to the tiny problem.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import async_sim, events, straggler
+from repro.core.aggregation import BackupWorkers, FullSync
+
+
+def _sync_run(strategy, n_agg: int, steps: int, lr: float, seed: int = 0):
+    workers = strategy.total_workers
+    model, params, grad_fn, batch_fn, eval_fn = common.tiny_lm_problem(
+        batch=8, workers=workers, seed=seed)
+    sim = events.StragglerSimulator(strategy, straggler.PaperCalibrated(),
+                                    seed=seed)
+
+    @jax.jit
+    def masked_step(params, batches, mask):
+        from repro.core import sync_backup
+        def loss(p):
+            per = []
+            for b in batches:
+                lt, aux = model.per_token_loss(p, b)
+                per.append(lt.mean() + aux)
+            per = jnp.stack(per)
+            return jnp.sum(per * mask.astype(jnp.float32)) / n_agg
+        l, g = jax.value_and_grad(loss)(params)
+        return l, g
+
+    t, losses, times = 0.0, [], []
+    for step in range(steps):
+        ev = sim.next_event()
+        batches = [batch_fn(w, step) for w in range(workers)]
+        _, grads = masked_step(params, batches, jnp.asarray(ev.mask))
+        params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        t += ev.iteration_time
+        if step % 10 == 0:
+            losses.append(eval_fn(params))
+            times.append(t)
+    return np.array(times), np.array(losses), t
+
+
+def run(quick: bool = True) -> List[Tuple[str, float, str]]:
+    n, b = (6, 2) if quick else (12, 4)
+    steps = 250 if quick else 800
+    lr_sync = 0.08 * n            # paper A.3: lr scales with N
+    lr_async = 0.08
+    eps = 2.6
+    rows, out = [], {}
+
+    t0 = time.time()
+    times_b, losses_b, _ = _sync_run(BackupWorkers(n, b), n, steps, lr_sync)
+    rows.append(("sync_vs_async.sync_backup",
+                 (time.time() - t0) * 1e6 / steps,
+                 f"final={losses_b[-1]:.3f}"))
+
+    t0 = time.time()
+    times_f, losses_f, _ = _sync_run(FullSync(n + b), n + b, steps, lr_sync)
+    rows.append(("sync_vs_async.sync_full",
+                 (time.time() - t0) * 1e6 / steps,
+                 f"final={losses_f[-1]:.3f}"))
+
+    # async with the same machine count
+    model, params, grad_fn, batch_fn, eval_fn = common.tiny_lm_problem(
+        batch=8, workers=n + b, seed=0)
+    update = common.sgd_update_fn(lr_async)
+    t0 = time.time()
+    res = async_sim.simulate_async(grad_fn, update, params, batch_fn,
+                                   num_workers=n + b,
+                                   num_updates=steps * (n + b) // 2,
+                                   latency=straggler.PaperCalibrated(),
+                                   seed=0)
+    async_losses, async_times = [], []
+    stride = max(1, len(res.losses) // 60)
+    p = params
+    # re-evaluate on held-out data along the async trajectory is costly;
+    # use the recorded train losses (smoothed) + final held-out loss
+    final_async = eval_fn(res.params)
+    rows.append(("sync_vs_async.async",
+                 (time.time() - t0) * 1e6 / max(res.updates, 1),
+                 f"final={final_async:.3f},mean_staleness="
+                 f"{res.staleness.mean():.1f}"))
+
+    t_sync = common.time_to_threshold(times_b, losses_b, eps)
+    t_full = common.time_to_threshold(times_f, losses_f, eps)
+    smooth = np.convolve(res.losses, np.ones(25) / 25, mode="same")
+    t_async = common.time_to_threshold(res.sim_time, smooth, eps)
+
+    better_final = losses_b[-1] <= final_async + 1e-3
+    faster_than_full = (t_sync or np.inf) <= (t_full or np.inf)
+    rows.append(("sync_vs_async.backup_better_final_than_async", 0.0,
+                 str(bool(better_final))))
+    rows.append(("sync_vs_async.backup_faster_than_fullsync", 0.0,
+                 str(bool(faster_than_full))))
+    common.save_json("sync_vs_async", {
+        "N": n, "b": b, "steps": steps,
+        "sync_backup": {"times": times_b.tolist(), "losses": losses_b.tolist(),
+                        "t_eps": t_sync},
+        "sync_full": {"times": times_f.tolist(), "losses": losses_f.tolist(),
+                      "t_eps": t_full},
+        "async": {"final_heldout": final_async, "t_eps_train": t_async,
+                  "mean_staleness": float(res.staleness.mean()),
+                  "sim_time_total": float(res.sim_time[-1])},
+        "paper_claim": "Fig 8/9: Sync+backup converges faster and to better"
+                       " test metric than Async; Async degrades with N",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,103 @@
+"""Shared benchmark plumbing: tiny-LM problem, timing, result I/O."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def save_json(name: str, payload: Dict) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return path
+
+
+def quick_mode() -> bool:
+    return os.environ.get("REPRO_BENCH_FULL", "0") not in ("1", "true")
+
+
+# ---------------------------------------------------------------------------
+# The benchmark workhorse: a tiny LM on the synthetic Markov stream.
+# Small enough for CPU, expressive enough that lr/staleness/N effects on
+# convergence are measurable (loss floor ~ noise entropy).
+# ---------------------------------------------------------------------------
+
+
+def tiny_lm_config(vocab: int = 64):
+    from repro import configs
+    from repro.configs.base import replace
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    return replace(cfg, vocab_size=vocab, num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                   vocab_pad_multiple=16)
+
+
+def tiny_lm_problem(vocab: int = 64, seq: int = 32, batch: int = 16,
+                    workers: int = 1, seed: int = 0, noise: float = 0.2):
+    """Returns (model, params0, grad_fn, batch_fn, eval_fn).
+
+    grad_fn(params, batch) -> (loss, grads); batch_fn(worker, draw) -> batch;
+    eval_fn(params) -> held-out loss.
+    """
+    from repro.data.synthetic_lm import SyntheticLMConfig, worker_batch
+    from repro.models import get_model
+
+    cfg = tiny_lm_config(vocab)
+    model = get_model(cfg)
+    params0 = model.init(jax.random.PRNGKey(seed))
+    data_cfg = SyntheticLMConfig(vocab_size=vocab, seq_len=seq,
+                                 global_batch=batch * workers,
+                                 num_workers=workers, seed=seed, noise=noise)
+
+    def batch_fn(worker: int, draw: int):
+        b = worker_batch(data_cfg, worker, draw)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    @jax.jit
+    def grad_fn(params, batch):
+        def loss(p):
+            lt, aux = model.per_token_loss(p, batch)
+            return lt.mean() + aux
+        return jax.value_and_grad(loss)(params)
+
+    eval_batches = [batch_fn(997, i) for i in range(4)]   # held-out worker id
+
+    @jax.jit
+    def eval_one(params, batch):
+        lt, _ = model.per_token_loss(params, batch)
+        return lt.mean()
+
+    def eval_fn(params):
+        return float(np.mean([eval_one(params, b) for b in eval_batches]))
+
+    return model, params0, grad_fn, batch_fn, eval_fn
+
+
+def sgd_update_fn(lr: float):
+    @jax.jit
+    def update(params, opt_state, grads, step):
+        new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        return new, opt_state
+    return update
+
+
+def time_to_threshold(times: np.ndarray, losses: np.ndarray,
+                      eps: float) -> Optional[float]:
+    """First (smoothed) time the loss crosses below eps; None if never."""
+    if len(losses) == 0:
+        return None
+    k = max(1, len(losses) // 50)
+    smooth = np.convolve(losses, np.ones(k) / k, mode="same")
+    idx = np.argmax(smooth <= eps)
+    if smooth[idx] > eps:
+        return None
+    return float(times[idx])

@@ -1,0 +1,161 @@
+"""Roofline analysis (§Roofline): three terms per (arch x shape x mesh).
+
+Reads the dry-run JSONs (experiments/dryrun/*.json) and combines:
+  compute term    = analytic HLO flops / (chips x 197 TFLOP/s bf16)
+  memory term     = analytic HBM bytes / (chips x 819 GB/s)
+  collective term = parsed wire bytes / (chips x 50 GB/s ICI link)
+
+Methodology notes (validated in tests):
+  * XLA cost_analysis() counts while-loop bodies once — its raw flops are
+    reported for reference but the compute/memory terms use the analytic
+    model (repro.analysis.perfmodel), cross-checked against unrolled HLO.
+  * Collective bytes come from the compiled HLO with trip-count-aware
+    multiplicities and max(result, operand) payloads per op; the wire
+    model applies 2x for all-reduce (ring both phases), 1x otherwise,
+    with payloads already per-device in partitioned SPMD HLO.
+  * MODEL_FLOPS = 6 N_active D (train) / 2 N_active D (inference);
+    roofline_fraction = ideal model-flops time / max(term) — what MFU
+    would be if the step ran exactly at its binding roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e-class)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def _analytic(cell: Dict[str, Any]) -> Tuple[float, float, float]:
+    """(flops, hbm_bytes, model_flops) global per step for this cell."""
+    from repro import configs
+    from repro.analysis import perfmodel
+    from repro.configs.base import SHAPES_BY_NAME
+
+    cfg = configs.get_config(cell["arch"])
+    shape = SHAPES_BY_NAME[cell["shape"]]
+    chips = cell["devices"]
+    policy = cell.get("policy", {})
+    remat = "full" if cell["kind"] == "train" else "none"
+    f = perfmodel.cell_flops(cfg, shape, remat=remat)
+    b = perfmodel.cell_bytes(cfg, shape, chips=chips, model_shard=16,
+                             zero1=policy.get("zero1", True), remat=remat)
+    if cell["kind"] == "train":
+        return f.train, b.train, f.model_flops_train
+    if cell["kind"] == "prefill":
+        return f.fwd, b.fwd, f.model_flops_fwd
+    t = shape.global_batch * 1
+    from repro.models import registry
+    n_active = registry.param_count(cfg, active_only=True)
+    return f.decode, b.decode, 2.0 * n_active * t
+
+
+def wire_bytes(coll: Dict[str, Any]) -> float:
+    total = 0.0
+    for kind, d in coll.get("per_kind", {}).items():
+        payload = d.get("wire_bytes", d.get("bytes", 0.0))
+        total += WIRE_FACTOR.get(kind, 1.0) * payload
+    return total
+
+
+def analyze_cell(cell: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if cell.get("status") != "ok":
+        return None
+    chips = cell["devices"]
+    flops, hbm, model_flops = _analytic(cell)
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = hbm / (chips * HBM_BW)
+    t_coll = wire_bytes(cell["collectives"]) / ICI_BW   # already per-device
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = terms[dominant]
+    t_ideal = model_flops / (chips * PEAK_FLOPS)
+    mem = cell.get("memory", {})
+    per_dev_gb = ((mem.get("argument_bytes") or 0)
+                  + (mem.get("temp_bytes") or 0)) / 1e9
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "tag": cell.get("tag", ""), "chips": chips,
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant, "bound_s": t_bound,
+        "model_flops": model_flops, "hlo_flops_analytic": flops,
+        "hlo_flops_raw_undercounted": cell["cost"]["flops"],
+        "useful_flops_ratio": model_flops / max(flops, 1.0),
+        "roofline_fraction": t_ideal / max(t_bound, 1e-30),
+        "mem_gb_per_device": per_dev_gb,
+        "policy": cell.get("policy", {}),
+    }
+
+
+def what_would_help(row: Dict[str, Any]) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("cut wire bytes: bf16 grads / reduce-scatter instead of "
+                "all-reduce / fewer per-layer gathers (fuse FSDP prefetch)")
+    if d == "memory":
+        return ("cut HBM traffic: larger microbatch (amortize param reads), "
+                "fuse optimizer, quantize cache/params")
+    return ("raise MXU utilization: bigger per-chip tiles, remove remat "
+            "recompute, fuse attention (Pallas kernel)")
+
+
+def load_rows(tag: str = "") -> List[Dict[str, Any]]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if cell.get("tag", "") != tag:
+            continue
+        r = analyze_cell(cell)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def markdown_table(rows: List[Dict[str, Any]], mesh: str = "single") -> str:
+    lines = ["| arch | shape | comp s | mem s | coll s | dominant | "
+             "roofline frac | useful ratio | GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['mem_gb_per_device']:.1f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True) -> List[Tuple[str, float, str]]:
+    rows = load_rows()
+    if not rows:
+        return [("roofline.cells", 0.0, "no dryrun results found")]
+    from benchmarks import common
+    common.save_json("roofline", {"rows": rows})
+    out = [("roofline.cells", 0.0, str(len(rows)))]
+    worst = sorted((r for r in rows if r["mesh"] == "single"),
+                   key=lambda r: r["roofline_fraction"])
+    for r in worst[:3]:
+        out.append((f"roofline.worst.{r['arch']}.{r['shape']}", 0.0,
+                    f"frac={r['roofline_fraction']:.2f},dom={r['dominant']}"))
+    coll_bound = [r for r in rows if r["dominant"] == "collective"
+                  and r["mesh"] == "single"]
+    out.append(("roofline.collective_bound_cells", 0.0, str(len(coll_bound))))
+    return out
+
+
+if __name__ == "__main__":
+    rows = load_rows()
+    print(markdown_table(rows, "single"))
+    print()
+    print(markdown_table(rows, "multi"))

@@ -1,0 +1,62 @@
+"""Benchmark harness entry point: one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract) and
+writes per-bench JSON artifacts to experiments/bench/. Quick mode by
+default; REPRO_BENCH_FULL=1 for the full-length runs recorded in
+EXPERIMENTS.md.
+
+  bench_straggler        — Figs. 3/4 (arrival order statistics)
+  bench_staleness        — Fig. 2 / §2.1 (staleness degrades the optimum)
+  bench_iterations_vs_n  — Fig. 5 (iterations vs N)
+  bench_time_to_converge — Fig. 6 (optimal N/b split of 100 machines)
+  bench_lr_sweep         — Table 2 / Fig. 7 (speed vs final-metric tradeoff)
+  bench_sync_vs_async    — Figs. 8/9 (the headline comparison)
+  bench_step_time        — host step-time microbenchmark per arch
+  roofline               — §Roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import common
+
+
+def main() -> None:
+    quick = common.quick_mode()
+    from benchmarks import (bench_iterations_vs_n, bench_layer_staleness,
+                            bench_lr_sweep, bench_staleness, bench_step_time,
+                            bench_straggler, bench_sync_vs_async,
+                            bench_time_to_converge, roofline)
+    modules = [
+        ("straggler", bench_straggler),
+        ("layer_staleness", bench_layer_staleness),
+        ("iterations_vs_n", bench_iterations_vs_n),
+        ("time_to_converge", bench_time_to_converge),
+        ("staleness", bench_staleness),
+        ("lr_sweep", bench_lr_sweep),
+        ("sync_vs_async", bench_sync_vs_async),
+        ("step_time", bench_step_time),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            for row in mod.run(quick=quick):
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"{name}.ERROR,0,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"{name}.wall_s,{(time.time() - t0) * 1e6:.0f},total",
+              file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

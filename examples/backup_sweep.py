@@ -1,0 +1,42 @@
+"""Paper Fig. 6: sweep the (N, b) split of a fixed 100-machine budget and
+estimate time-to-convergence = iterations(N) x mean iteration time.
+
+    PYTHONPATH=src python examples/backup_sweep.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import events, straggler
+from repro.core.aggregation import BackupWorkers
+
+
+def main(total: int = 100) -> None:
+    lat = straggler.PaperCalibrated()
+    # iterations(N): interpolate the paper's own Fig. 5 endpoints
+    c = (137.5e3 - 76.2e3) / (1 / 50 - 1 / 100)
+    a = 76.2e3 - c / 100
+    print(f"{'N':>4} {'b':>4} | {'step time':>10} | {'iters':>9} | "
+          f"{'est days':>9}")
+    print("-" * 50)
+    best = (None, np.inf)
+    for n in range(50, 101, 2):
+        st = events.mean_iteration_time(BackupWorkers(n, total - n), lat,
+                                        iters=600, seed=0)
+        iters = a + c / n
+        t = st * iters
+        if t < best[1]:
+            best = (n, t)
+        bar = "#" * int(40 * min(t / (3 * best[1] if best[0] else t), 1.0))
+        print(f"{n:4d} {total - n:4d} | {st:9.2f}s | {iters:9.0f} | "
+              f"{t / 86400:9.2f} {bar}")
+    n, t = best
+    print(f"\noptimum: N={n}, b={total - n} "
+          f"(paper found N=96, b=4 — interior optimum either way)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: synchronous training with backup workers in ~40 lines.
+
+Trains a tiny LM on the synthetic token stream with N=6 workers + b=2
+backups under the paper-calibrated straggler model, and contrasts the
+simulated wall time against plain Sync-Opt (b=0).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                OptimizerConfig, ShapeConfig, TrainConfig)
+from repro.core.straggler import PaperCalibrated
+from repro.train.loop import Trainer
+
+
+def make_trainer(tmp, strategy: str, backups: int) -> Trainer:
+    cfg = TrainConfig(
+        model=configs.get_smoke_config("qwen3-0.6b"),
+        shape=ShapeConfig("quickstart", seq_len=32, global_batch=32,
+                          kind="train"),
+        aggregation=AggregationConfig(strategy=strategy, num_workers=6,
+                                      backup_workers=backups),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.1,
+                                  scale_lr_with_workers=False,
+                                  ema_decay=0.999),
+        checkpoint=CheckpointConfig(directory=tmp, every_steps=25),
+        log_every=10,
+    )
+    tr = Trainer(cfg, latency=PaperCalibrated())
+    tr.init_state()
+    return tr
+
+
+def main(steps: int = 60) -> None:
+    with tempfile.TemporaryDirectory() as tmp:
+        print("== Sync-Opt with backup workers (N=6, b=2) ==")
+        tr = make_trainer(tmp + "/b", "backup", 2)
+        res = tr.run(steps)
+        for m in res.metrics:
+            print(f"  step {m['step']:4d} loss {m['loss']:.3f} "
+                  f"sim_time {m['sim_time']:7.1f}s selected {m['selected']}")
+        backup_time = res.sim_time
+
+    with tempfile.TemporaryDirectory() as tmp:
+        print("== plain Sync-Opt (N=8, b=0) — same machine count ==")
+        tr = make_trainer(tmp + "/f", "full_sync", 0)
+        tr.cfg = tr.cfg  # (full_sync ignores backups)
+        res = tr.run(steps)
+        print(f"  final loss {res.metrics[-1]['loss']:.3f} "
+              f"sim_time {res.sim_time:7.1f}s")
+        print(f"\nbackup workers cut simulated time per {steps} steps: "
+              f"{res.sim_time:.0f}s -> {backup_time:.0f}s "
+              f"({res.sim_time / max(backup_time, 1e-9):.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper §2.1 reproduction: train the 4-layer weight-normalized CNN with
+simulated gradient staleness (old-gradient buffer + ramp-up trick) and
+watch the test error degrade as staleness grows — Fig. 2's shape.
+
+    PYTHONPATH=src python examples/staleness_mnist.py [--steps 600] \
+        [--staleness 0 10 25 50]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import async_sim
+from repro.data import mnist_like
+from repro.models import mnist_cnn
+from repro.optim import schedules
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--staleness", type=int, nargs="+", default=[0, 10, 25])
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.05)
+    args = ap.parse_args()
+
+    data_cfg = mnist_like.MnistLikeConfig(num_train=4096, num_test=1024)
+    train, test = mnist_like.make_dataset(data_cfg)
+    model = mnist_cnn.make(widths=(16, 16, 32, 32))
+    sched = schedules.linear_anneal(args.lr, args.steps,
+                                    int(args.steps * 0.6))
+
+    @jax.jit
+    def grad_fn(params, batch):
+        def loss(p):
+            return model.per_example_loss(p, batch).mean()
+        return jax.value_and_grad(loss)(params)
+
+    def update_fn(params, opt_state, grads, step):
+        lr = sched(jnp.asarray(step))
+        return jax.tree_util.tree_map(lambda p, g: p - lr * g, params,
+                                      grads), opt_state
+
+    def batch_fn(step):
+        rng = np.random.RandomState(step)
+        idx = rng.randint(0, data_cfg.num_train, size=args.batch)
+        return {"images": jnp.asarray(train["images"][idx]),
+                "labels": jnp.asarray(train["labels"][idx])}
+
+    print(f"{'staleness':>9} | {'test err':>8} | {'mean tau':>8} | secs")
+    print("-" * 44)
+    for tau in args.staleness:
+        t0 = time.time()
+        params0 = model.init(jax.random.PRNGKey(0))
+        res = async_sim.simulate_staleness(
+            grad_fn, update_fn, params0, batch_fn, num_updates=args.steps,
+            staleness=tau, ramp_steps=max(1, args.steps // 5),
+            ema_decay=0.999)
+        logits = model.forward(res.ema, jnp.asarray(test["images"]))
+        err = float((np.asarray(jnp.argmax(logits, -1))
+                     != test["labels"]).mean())
+        print(f"{tau:9d} | {err:8.4f} | {res.staleness.mean():8.1f} | "
+              f"{time.time() - t0:.0f}")
+    print("\npaper (real MNIST, 25 epochs): 0.36% @ tau=0, 0.47% @ 20, "
+          "0.79% @ 50 — same monotone shape.")
+
+
+if __name__ == "__main__":
+    main()

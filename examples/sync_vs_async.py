@@ -1,0 +1,32 @@
+"""The paper's headline comparison (Figs. 8/9) at laptop scale:
+Async-Opt vs plain Sync-Opt vs Sync-Opt with backup workers, identical
+machine budget, simulated cluster latencies.
+
+    PYTHONPATH=src python examples/sync_vs_async.py [--steps 250]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=250)
+    args = ap.parse_args()
+    os.environ.setdefault("REPRO_BENCH_FULL", "0")
+
+    from benchmarks import bench_sync_vs_async, common
+    rows = bench_sync_vs_async.run(quick=args.steps <= 250)
+    print(f"{'variant':<45} | result")
+    print("-" * 70)
+    for name, us, derived in rows:
+        print(f"{name:<45} | {derived}")
+    print("\nArtifacts: experiments/bench/sync_vs_async.json "
+          "(full loss/time trajectories).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""The paper's contribution: synchronous optimization with backup workers,
+the async/staleness baselines, straggler models, and EMA evaluation."""
+from repro.core import aggregation, async_sim, ema, events, straggler, sync_backup
+from repro.core.aggregation import BackupWorkers, FullSync, Timeout
+from repro.core.events import StepEvent, StragglerSimulator
+from repro.core.straggler import (DeterministicStragglers, LogNormal,
+                                  PaperCalibrated, Uniform)

@@ -1,0 +1,102 @@
+"""Gradient-aggregation strategies — the paper's protocol knobs.
+
+Each strategy turns one iteration's worker arrival times into
+  (mask over N+b workers, iteration wall time).
+
+* FullSync           — paper's plain Sync-Opt: wait for everyone.
+* BackupWorkers(N,b) — paper Alg. 3/4: first N arrivals count, b dropped.
+* Timeout(d)         — paper §6 future work: everything within d of the
+                       first arrival counts (>=1 always).
+* (Async / SoftSync are event-driven, see repro.core.async_sim.)
+
+The mask is *data* to the SPMD train step: dropped workers still compute
+(their cycles are the price of the insurance — identical to the paper,
+whose backup workers' gradients are discarded on arrival).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+class Strategy:
+    total_workers: int
+
+    def select(self, arrivals: np.ndarray) -> Tuple[np.ndarray, float]:
+        """arrivals: [W] seconds -> (mask bool [W], iteration_time)."""
+        raise NotImplementedError
+
+    def effective_n(self) -> int:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FullSync(Strategy):
+    num_workers: int
+
+    @property
+    def total_workers(self) -> int:
+        return self.num_workers
+
+    def select(self, arrivals):
+        mask = np.ones_like(arrivals, dtype=bool)
+        return mask, float(arrivals.max())
+
+    def effective_n(self) -> int:
+        return self.num_workers
+
+
+@dataclasses.dataclass(frozen=True)
+class BackupWorkers(Strategy):
+    """Aggregate the first N of N+b arrivals (paper Alg. 3/4)."""
+
+    num_workers: int          # N
+    backups: int              # b
+
+    @property
+    def total_workers(self) -> int:
+        return self.num_workers + self.backups
+
+    def select(self, arrivals):
+        n = self.num_workers
+        order = np.argsort(arrivals, kind="stable")
+        mask = np.zeros_like(arrivals, dtype=bool)
+        mask[order[:n]] = True
+        return mask, float(arrivals[order[n - 1]])
+
+    def effective_n(self) -> int:
+        return self.num_workers
+
+
+@dataclasses.dataclass(frozen=True)
+class Timeout(Strategy):
+    """Aggregate all gradients arriving within `deadline_s` of the first."""
+
+    num_workers: int
+    deadline_s: float
+
+    @property
+    def total_workers(self) -> int:
+        return self.num_workers
+
+    def select(self, arrivals):
+        t0 = arrivals.min()
+        cutoff = t0 + self.deadline_s
+        mask = arrivals <= cutoff
+        return mask, float(min(arrivals.max(), cutoff))
+
+    def effective_n(self) -> int:
+        return self.num_workers     # varies per step; N is the upper bound
+
+
+def from_config(agg_cfg) -> Strategy:
+    s = agg_cfg.strategy
+    if s == "full_sync":
+        return FullSync(agg_cfg.total_workers)
+    if s == "backup":
+        return BackupWorkers(agg_cfg.num_workers, agg_cfg.backup_workers)
+    if s == "timeout":
+        return Timeout(agg_cfg.num_workers, agg_cfg.deadline_s)
+    raise ValueError(f"strategy {s!r} is not a synchronous mask strategy")

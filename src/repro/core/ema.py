@@ -1,0 +1,34 @@
+"""Exponential moving average of parameters (paper: eval on \\bar theta,
+alpha = 0.9999). Kept in f32 regardless of the training dtype."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params: Any) -> Any:
+    # explicit copy: astype() on an f32 array aliases the input buffer,
+    # which breaks donation in jitted train steps
+    return jax.tree_util.tree_map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+
+
+def update(ema: Any, params: Any, decay: float) -> Any:
+    """ema <- decay * ema + (1 - decay) * params   (paper Alg. 2/4 last line)."""
+    d = jnp.asarray(decay, jnp.float32)
+    return jax.tree_util.tree_map(
+        lambda e, p: d * e + (1.0 - d) * p.astype(jnp.float32), ema, params)
+
+
+def value(ema: Any, dtype=None) -> Any:
+    if dtype is None:
+        return ema
+    return jax.tree_util.tree_map(lambda e: e.astype(dtype), ema)
+
+
+def debiased(ema: Any, step: jnp.ndarray, decay: float) -> Any:
+    """Bias-corrected EMA for early steps (optional; paper does not debias)."""
+    c = 1.0 - jnp.power(jnp.asarray(decay, jnp.float32), step.astype(jnp.float32) + 1)
+    return jax.tree_util.tree_map(lambda e: e / c, ema)

@@ -1,0 +1,94 @@
+"""Discrete-event iteration timing for synchronous strategies.
+
+Composes a latency model with an aggregation strategy to produce per-step
+worker masks and iteration times — the host-side driver feeding the SPMD
+train step, and the machinery behind Figs. 4/6 (estimated time to converge
+for each (N, b) split of a fixed machine budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.core.aggregation import BackupWorkers, Strategy
+from repro.core.straggler import LatencyModel, PaperCalibrated
+
+
+@dataclasses.dataclass
+class StepEvent:
+    step: int
+    mask: np.ndarray          # [W] bool — workers whose gradients count
+    iteration_time: float     # simulated seconds for this step
+    arrivals: np.ndarray      # [W] raw latencies
+
+
+class StragglerSimulator:
+    """Yields one StepEvent per training step; deterministic in seed.
+
+    ``dead`` workers (failure injection) never arrive: latency = +inf. For
+    BackupWorkers, as long as alive >= N the protocol absorbs failures with
+    zero downtime — the elastic layer only kicks in below that.
+    """
+
+    def __init__(self, strategy: Strategy, latency: Optional[LatencyModel] = None,
+                 seed: int = 0, start_step: int = 0):
+        self.strategy = strategy
+        self.latency = latency or PaperCalibrated()
+        self.seed = seed
+        self.dead = np.zeros(strategy.total_workers, dtype=bool)
+        self._step = start_step
+
+    def kill_worker(self, w: int) -> None:
+        self.dead[w] = True
+
+    def revive_worker(self, w: int) -> None:
+        self.dead[w] = False
+
+    @property
+    def alive(self) -> int:
+        return int((~self.dead).sum())
+
+    def next_event(self) -> StepEvent:
+        # deterministic in (seed, step): checkpoint/resume replays the
+        # exact arrival sequence with no simulator state to persist
+        w = self.strategy.total_workers
+        rng = np.random.RandomState((self.seed * 1_000_003 + self._step)
+                                    % (2 ** 31 - 1))
+        arrivals = self.latency.sample(rng, (w,))
+        arrivals = np.where(self.dead, np.inf, arrivals)
+        mask, t = self.strategy.select(arrivals)
+        mask = mask & ~self.dead
+        ev = StepEvent(self._step, mask, t, arrivals)
+        self._step += 1
+        return ev
+
+    def __iter__(self) -> Iterator[StepEvent]:
+        while True:
+            yield self.next_event()
+
+
+def mean_iteration_time(strategy: Strategy, latency: LatencyModel,
+                        iters: int = 1000, seed: int = 0) -> float:
+    sim = StragglerSimulator(strategy, latency, seed)
+    return float(np.mean([sim.next_event().iteration_time for _ in range(iters)]))
+
+
+def estimate_time_to_converge(n_values: np.ndarray, iters_to_converge: np.ndarray,
+                              total_machines: int, latency: LatencyModel,
+                              sim_iters: int = 2000, seed: int = 0
+                              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Paper Fig. 6: for each N (with b = total - N), estimated convergence
+    time = iterations(N) x mean iteration time of BackupWorkers(N, b).
+
+    iters_to_converge: measured/interpolated iterations for each N.
+    Returns (times [len(n_values)], mean_step_time [len(n_values)]).
+    """
+    times, step_times = [], []
+    for n, it in zip(n_values, iters_to_converge):
+        st = mean_iteration_time(BackupWorkers(int(n), total_machines - int(n)),
+                                 latency, sim_iters, seed)
+        step_times.append(st)
+        times.append(st * it)
+    return np.array(times), np.array(step_times)

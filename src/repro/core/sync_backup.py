@@ -1,0 +1,96 @@
+"""Sync-SGD with backup workers, SPMD-native (paper Alg. 3/4 on a TPU mesh).
+
+The key identity: with the global batch laid out as W contiguous worker
+shards of B/W examples, the paper's update
+
+    theta <- theta - (lr/N) * sum_{w in fastest-N} G_w,
+    G_w = mean gradient over worker w's mini-batch
+
+equals the gradient of the *mask-weighted* loss
+
+    L = sum_b weight_b * loss_b,
+    weight_b = mask[worker_of(b)] * W / (N * B_global)
+
+so no custom collective is needed: each device weights its local examples,
+and the usual data-parallel psum over ('pod','data') performs the paper's
+"aggregate first N" exactly. Dropped (backup) workers still compute — by
+design, as in the paper.
+
+``aggregate_masked`` provides the explicit stacked-gradient formulation
+(used by the simulator, tests, and the Pallas backup_reduce kernel); the
+two are proven equal in tests/test_sync_backup.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def worker_of_example(global_batch: int, num_workers: int) -> np.ndarray:
+    """Example -> worker index, contiguous shards (matches data pipeline)."""
+    per = global_batch // num_workers
+    return np.repeat(np.arange(num_workers), per)
+
+
+def per_example_weights(mask: jnp.ndarray, global_batch: int,
+                        n_aggregate: int) -> jnp.ndarray:
+    """weight_b = mask[worker_of(b)] / (N * per_worker_batch).
+
+    Then sum_b weight_b * loss_b = (1/N) * sum_w mask_w * mean_{b in w} loss_b.
+    """
+    w = mask.shape[0]
+    per = global_batch // w
+    rep = jnp.repeat(mask.astype(jnp.float32), per)
+    return rep / (n_aggregate * per)
+
+
+def weighted_loss(per_example_loss: jnp.ndarray, mask: jnp.ndarray,
+                  n_aggregate: int) -> jnp.ndarray:
+    """per_example_loss: [B] (already averaged over tokens) -> scalar.
+
+    Gradient of this scalar == paper's Alg. 4 update direction.
+    """
+    wts = per_example_weights(mask, per_example_loss.shape[0], n_aggregate)
+    return jnp.sum(per_example_loss * wts)
+
+
+def aggregate_masked(grads_stacked: Any, mask: jnp.ndarray,
+                     n_aggregate: int) -> Any:
+    """Explicit form: grads_stacked is a pytree with leading axis W.
+
+    Returns (1/N) * sum_w mask_w * g_w — Alg. 4 line 7.
+    """
+    m = mask.astype(jnp.float32)
+
+    def agg(g):
+        mm = m.reshape((-1,) + (1,) * (g.ndim - 1))
+        return jnp.sum(g * mm, axis=0) / n_aggregate
+
+    return jax.tree_util.tree_map(agg, grads_stacked)
+
+
+def make_mask(arrival_rank: jnp.ndarray, n_aggregate: int) -> jnp.ndarray:
+    """rank (0 = fastest) -> bool mask selecting the fastest N."""
+    return arrival_rank < n_aggregate
+
+
+def per_worker_grads(loss_fn, params, batch: Dict[str, jnp.ndarray],
+                     num_workers: int):
+    """Reference helper: stack per-worker mean gradients [W, ...].
+
+    Used by tests and the async/staleness simulators — NOT the SPMD path
+    (which uses weighted_loss). loss_fn(params, shard_batch) -> scalar mean.
+    """
+    def reshard(x):
+        b = x.shape[0]
+        return x.reshape((num_workers, b // num_workers) + x.shape[1:])
+
+    sharded = jax.tree_util.tree_map(reshard, batch)
+
+    def worker_grad(shard):
+        return jax.grad(lambda p: loss_fn(p, shard))(params)
+
+    return jax.lax.map(worker_grad, sharded)

@@ -1,0 +1,3 @@
+from repro.data.synthetic_lm import (SyntheticLMConfig, SyntheticLMPipeline,
+                                     global_batch, worker_batch)
+from repro.data.mnist_like import MnistLikeConfig, make_dataset

@@ -1,0 +1,94 @@
+"""Deterministic synthetic LM token pipeline.
+
+Generates a learnable token stream — a mixture of (a) a fixed-order-k Markov
+chain over the vocab (so models can reduce loss well below ln(V)) and (b)
+uniform noise — seeded per (worker, step) so that:
+
+  * every worker draws a DISJOINT batch shard (paper's workers sample
+    independently from X);
+  * the stream is exactly reproducible across restarts given (seed, step) —
+    checkpoint/resume restores the pipeline by restoring the step counter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    num_workers: int = 1
+    seed: int = 0
+    noise: float = 0.1       # probability of a uniform-random token
+    order: int = 1           # Markov order of the deterministic skeleton
+
+
+def _transition(vocab: int, seed: int) -> np.ndarray:
+    """A fixed permutation-like transition: next = (a*tok + b) % V."""
+    rng = np.random.RandomState(seed)
+    a = int(rng.randint(1, vocab - 1)) | 1      # odd => full cycle for pow2 V
+    b = int(rng.randint(0, vocab))
+    return a, b
+
+
+def worker_batch(cfg: SyntheticLMConfig, worker: int, step: int) -> Dict[str, np.ndarray]:
+    """The [B/W, S] shard of the global batch for `worker` at `step`."""
+    per_worker = cfg.global_batch // cfg.num_workers
+    a, b = _transition(cfg.vocab_size, cfg.seed)
+    rng = np.random.RandomState((cfg.seed * 1_000_003 + step) * 4097 + worker)
+    start = rng.randint(0, cfg.vocab_size, size=(per_worker, 1))
+    toks = [start]
+    for _ in range(cfg.seq_len):
+        nxt = (a * toks[-1] + b) % cfg.vocab_size
+        toks.append(nxt)
+    seq = np.concatenate(toks, axis=1)          # [b, S+1]
+    noise_mask = rng.rand(per_worker, cfg.seq_len + 1) < cfg.noise
+    noise_toks = rng.randint(0, cfg.vocab_size, size=seq.shape)
+    seq = np.where(noise_mask, noise_toks, seq).astype(np.int32)
+    return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+
+def global_batch(cfg: SyntheticLMConfig, step: int) -> Dict[str, np.ndarray]:
+    """Concatenation of all workers' shards — what the SPMD step consumes.
+
+    Worker w owns rows [w*B/W, (w+1)*B/W); the sync-backup mask indexes
+    workers by this row blocking (see repro.core.sync_backup).
+    """
+    shards = [worker_batch(cfg, w, step) for w in range(cfg.num_workers)]
+    return {k: np.concatenate([s[k] for s in shards], axis=0) for k in shards[0]}
+
+
+@dataclasses.dataclass
+class PipelineState:
+    step: int = 0
+
+    def save(self) -> Dict:
+        return {"step": self.step}
+
+    @staticmethod
+    def restore(d: Dict) -> "PipelineState":
+        return PipelineState(step=int(d["step"]))
+
+
+class SyntheticLMPipeline:
+    """Stateful iterator with save/restore (checkpointable)."""
+
+    def __init__(self, cfg: SyntheticLMConfig, state: Optional[PipelineState] = None):
+        self.cfg = cfg
+        self.state = state or PipelineState()
+
+    def next(self) -> Dict[str, np.ndarray]:
+        batch = global_batch(self.cfg, self.state.step)
+        self.state.step += 1
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next()

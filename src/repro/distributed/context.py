@@ -1,0 +1,159 @@
+"""Ambient-mesh-aware sharding constraints for model code.
+
+Model definitions stay mesh-agnostic: they call ``constrain_activations(x)``
+at block boundaries, which is a no-op unless (a) a mesh with the expected
+axes is ambient (jax.set_mesh) and (b) sequence-parallel activations were
+enabled by the step builder. This is how Megatron-style SP lands without
+threading mesh objects through every model: the saved residual stream
+inside scanned+rematted blocks is sharded (batch->data, seq->model), which
+divides the dominant activation-memory term by the model-axis size; GSPMD
+inserts the all-gather before attention/matmuls and reduce-scatters after.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _get(name: str, default):
+    return getattr(_state, name, default)
+
+
+@contextlib.contextmanager
+def sequence_parallel(enabled: bool = True):
+    old = _get("sp", False)
+    _state.sp = enabled
+    try:
+        yield
+    finally:
+        _state.sp = old
+
+
+def sp_enabled() -> bool:
+    return _get("sp", False)
+
+
+@contextlib.contextmanager
+def layer_param_constraints(fn):
+    """Install a per-layer param constrainer (see sharding.layer_param_
+    constrainer). Applied by scan bodies right after slicing the layer's
+    params; the TRANSPOSE of a sharding constraint is the same constraint,
+    so the per-layer weight GRADIENTS inside the backward while-loop
+    inherit it too — without this, GSPMD materializes full replicated
+    dW tensors per layer (observed: 1.7 GB f32 buffers on the 104B model)
+    and all-reduces them instead of reduce-scattering."""
+    old = _get("layer_fn", None)
+    _state.layer_fn = fn
+    try:
+        yield
+    finally:
+        _state.layer_fn = old
+
+
+def constrain_layer_params(tree):
+    fn = _get("layer_fn", None)
+    if fn is None:
+        return tree
+    return fn(tree)
+
+
+@contextlib.contextmanager
+def moe_data_sharding(enabled: bool = True):
+    """Route MoE dispatch/combine through a shard_map over the data axes.
+
+    Scatter/gather dispatch is opaque to GSPMD — without this it
+    materializes the GLOBAL [E, C, d] dispatch buffer replicated on every
+    device (observed: 10.7 GB f32 on qwen2-moe train_4k). Under shard_map
+    each data shard dispatches only its local tokens with local capacity
+    (per-group capacity, GShard semantics)."""
+    old = _get("moe_shard", False)
+    _state.moe_shard = enabled
+    try:
+        yield
+    finally:
+        _state.moe_shard = old
+
+
+def moe_shard_axes():
+    """Data axes to shard MoE dispatch over, or None when disabled/no mesh."""
+    if not _get("moe_shard", False):
+        return None
+    mesh = _ambient_axes()
+    if mesh is None:
+        return None
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes or None
+
+
+def _ambient_axes():
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.get_concrete_mesh() or mesh_lib.get_abstract_mesh()
+        if m is None or not m.axis_names:
+            return None
+        return m
+    except Exception:  # noqa: BLE001 — constraint is best-effort sugar
+        return None
+
+
+def constrain_dims(x, kinds):
+    """Best-effort constraint by dimension kind: 'batch' -> data axes,
+    'heads' -> 'model', None -> unconstrained. No-op without an ambient
+    mesh or when nothing divides. Used inside the chunked attention core,
+    where reshape/transpose chains otherwise drop GSPMD's head sharding
+    and the online-softmax accumulators replicate (observed 3.2 GB
+    [nq,B,H,qc,hd] f32 buffers on command-r prefill)."""
+    mesh = _ambient_axes()
+    if mesh is None:
+        return x
+    names = dict(zip(mesh.axis_names, mesh.axis_sizes
+                     if hasattr(mesh, "axis_sizes") else mesh.devices.shape))
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = 1
+    for a in dp_axes:
+        dp *= names[a]
+    model = names.get("model", 1)
+    entries = []
+    nontrivial = False
+    for dim, kind in zip(x.shape, kinds):
+        if kind == "batch" and dp_axes and dim % dp == 0 and dim >= dp:
+            entries.append(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+            nontrivial = True
+        elif kind == "heads" and "model" in names and dim % model == 0 \
+                and dim >= model:
+            entries.append("model")
+            nontrivial = True
+        else:
+            entries.append(None)
+    if not nontrivial:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+def constrain_activations(x):
+    """[B, S, d] residual stream -> (batch: data axes, seq: 'model')."""
+    if not sp_enabled() or x.ndim != 3:
+        return x
+    mesh = _ambient_axes()
+    if mesh is None:
+        return x
+    names = dict(zip(mesh.axis_names, mesh.axis_sizes
+                     if hasattr(mesh, "axis_sizes") else mesh.devices.shape))
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = 1
+    for a in dp_axes:
+        dp *= names[a]
+    model = names.get("model", 1)
+    batch_entry = (dp_axes if len(dp_axes) > 1 else dp_axes[0]) \
+        if (dp_axes and x.shape[0] % dp == 0 and x.shape[0] >= dp) else None
+    seq_entry = "model" if ("model" in names and x.shape[1] % model == 0
+                            and x.shape[1] >= model) else None
+    if batch_entry is None and seq_entry is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(batch_entry, seq_entry, None))

@@ -1,0 +1,254 @@
+"""Sharding rules: parameter/optimizer/input PartitionSpecs per mesh.
+
+Rules are path-based with divisibility guards — a dimension is only
+sharded when it divides evenly by the mesh axis (e.g. gemma3's 4 heads
+stay replicated on a 16-way model axis while its d_ff/vocab shard).
+
+Conventions (single pod mesh ('data','model'); multi-pod adds 'pod'):
+  * batch dims of activations/inputs -> ('pod','data')
+  * TP: attention head dims, FFN hidden dim, vocab -> 'model'
+  * MoE 'ep': expert dim -> 'model'; 'tp': expert d_ff -> 'model'
+  * ZeRO-1: optimizer state additionally shards the first replicated,
+    divisible dimension over ('pod','data')
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def param_spec(path: str, shape: Tuple[int, ...], cfg, model_size: int) -> P:
+    """PartitionSpec for one parameter tensor (leading dim may be layers)."""
+    nd = len(shape)
+    none = (None,) * nd
+
+    def at(axis_idx: int, name: str) -> P:
+        if not _div(shape[axis_idx], model_size):
+            return P(*none)
+        spec = list(none)
+        spec[axis_idx] = name
+        return P(*spec)
+
+    # embeddings: [V, d] shard vocab; output head [d, V] shard vocab
+    if path.endswith("embed/embedding"):
+        return at(0, "model")
+    if re.search(r"(lm_head|head)/w$", path):
+        return at(nd - 1, "model")
+    # MoE experts: [L, E, d_in, d_out]
+    if re.search(r"moe/(w_gate|w_up|w_down)/w$", path):
+        if cfg.moe.partition_mode == "ep":
+            return at(nd - 3, "model")          # expert dim
+        if path.endswith("w_down/w"):
+            return at(nd - 2, "model")          # contract dim = expert d_ff
+        return at(nd - 1, "model")
+    if path.endswith("router/w"):
+        return P(*none)
+    # attention projections
+    if re.search(r"(attn|xattn)/(wq|wk|wv)/w$", path) or \
+       re.search(r"(wkv_b|wq_b|wq)/w$", path):
+        return at(nd - 1, "model")
+    if re.search(r"(attn|xattn)/wo/w$", path) or path.endswith("ssd_out/w"):
+        return at(nd - 2, "model")
+    # dense FFN
+    if re.search(r"(mlp|shared|ffn)/(w_up|w_gate|wk)/w$", path):
+        return at(nd - 1, "model")
+    if re.search(r"(mlp|shared|ffn)/(w_down|wv)/w$", path):
+        return at(nd - 2, "model")
+    # rwkv time-mix projections [L, d, d]
+    if re.search(r"att/(wr|wk|wv|wg)/w$", path):
+        return at(nd - 1, "model")
+    if re.search(r"att/wo/w$", path):
+        return at(nd - 2, "model")
+    # ssd projections [L, d, H*P]
+    if re.search(r"ssd/(wx|wb|wc)/w$", path):
+        return at(nd - 1, "model")
+    # everything else (norms, biases, scalars, router, conv) replicated
+    return P(*none)
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], dp_axes: Tuple[str, ...],
+               dp_size: int, *, prefer_inner: bool = False) -> P:
+    """Additionally shard over the data axes (ZeRO-1 opt state / FSDP params
+    / ZeRO-2 gradient accumulators).
+
+    Picks the first replicated, divisible dimension. ``prefer_inner`` skips
+    the leading (layer-stack) dim when a later dim qualifies, so FSDP
+    all-gathers stream per layer instead of gathering the whole stack.
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    order = list(range(len(shape)))
+    if prefer_inner and len(shape) > 1:
+        order = order[1:] + [0]
+    for i in order:
+        if entries[i] is None and _div(shape[i], dp_size) and shape[i] >= dp_size:
+            entries[i] = dp
+            return P(*entries)
+    return spec
+
+
+def param_shardings(cfg, mesh: Mesh, shape_tree: Any, *,
+                    fsdp: bool = False) -> Any:
+    """Pytree of NamedShardings matching a model's param shapes.
+
+    fsdp=True additionally shards every parameter over the data axes
+    (ZeRO-3): XLA all-gathers each layer's weights at use inside the
+    scanned stack and the memory per device drops by the DP size.
+    """
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = names.get("model", 1)
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_size = int(np.prod([names[a] for a in dp_axes])) if dp_axes else 1
+
+    def leaf(path, x):
+        spec = param_spec(_path_str(path), x.shape, cfg, model_size)
+        if fsdp:
+            spec = zero1_spec(spec, x.shape, dp_axes, dp_size, prefer_inner=True)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, shape_tree)
+
+
+def layer_param_constrainer(cfg, mesh: Mesh, *, fsdp: bool = False):
+    """Returns fn(layer_param_tree) applying with_sharding_constraint to
+    every leaf using the same path rules as param_shardings (paths inside a
+    layer match because the rules are suffix-based). Installed via
+    distributed.context.layer_param_constraints inside scan bodies."""
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = names.get("model", 1)
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_size = int(np.prod([names[a] for a in dp_axes])) if dp_axes else 1
+
+    def constrain(tree):
+        def leaf(path, x):
+            spec = param_spec(_path_str(path), x.shape, cfg, model_size)
+            if fsdp:
+                spec = zero1_spec(spec, x.shape, dp_axes, dp_size,
+                                  prefer_inner=True)
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+        return jax.tree_util.tree_map_with_path(leaf, tree)
+
+    return constrain
+
+
+def grad_shardings(cfg, mesh: Mesh, shape_tree: Any) -> Any:
+    """ZeRO-2 gradient(-accumulator) shardings: param spec + data axes.
+
+    Constraining per-microbatch grads to this turns the DP all-reduce into
+    a reduce-scatter and keeps the accumulator sharded."""
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = names.get("model", 1)
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_size = int(np.prod([names[a] for a in dp_axes])) if dp_axes else 1
+
+    def leaf(path, x):
+        spec = param_spec(_path_str(path), x.shape, cfg, model_size)
+        spec = zero1_spec(spec, x.shape, dp_axes, dp_size, prefer_inner=True)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, shape_tree)
+
+
+def opt_state_shardings(cfg, mesh: Mesh, opt_shape_tree: Any,
+                        zero1: bool = False) -> Any:
+    """Optimizer state mirrors param sharding (+ ZeRO-1 data sharding)."""
+    model_size = mesh.shape.get("model", 1) if hasattr(mesh.shape, "get") else \
+        dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_size = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                           for a in dp_axes])) if dp_axes else 1
+
+    def leaf(path, x):
+        # strip the optimizer-state prefix (ms/mom/m/v/acc) to match params
+        pstr = _path_str(path)
+        pstr = re.sub(r"^(ms|mom|m|v|acc)/", "", pstr)
+        spec = param_spec(pstr, x.shape, cfg, model_size)
+        if zero1:
+            spec = zero1_spec(spec, x.shape, dp_axes, dp_size)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, opt_shape_tree)
+
+
+def batch_shardings(mesh: Mesh, batch_tree: Any, *,
+                    seq_sharded: bool = False) -> Any:
+    """Inputs: batch dim over ('pod','data'); [W] masks/scalars replicated.
+
+    seq_sharded=True shards axis 1 (sequence) instead — the long-context
+    decode layout where batch=1 (sequence parallelism).
+    """
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    dp_size = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                           for a in dp_axes])) if dp_axes else 1
+
+    def leaf(x):
+        if x.ndim == 0 or x.shape[0] == 0:
+            return NamedSharding(mesh, P())
+        if seq_sharded:
+            if x.ndim >= 2 and _div(x.shape[1], dp_size):
+                return NamedSharding(mesh, P(None, dp))
+            return NamedSharding(mesh, P())
+        if _div(x.shape[0], dp_size):
+            return NamedSharding(mesh, P(dp))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(leaf, batch_tree)
+
+
+def cache_shardings(cfg, mesh: Mesh, cache_tree: Any) -> Any:
+    """KV/state caches [B, S, heads, hd] (or [B, S, rank] / state tensors).
+
+    Unified rule:
+      * batch over ('pod','data') when divisible (decode_32k layout);
+        otherwise the sequence axis takes the data axes (long_500k,
+        batch=1 — sequence parallelism, partial-softmax psums);
+      * the head axis takes 'model' when divisible (qwen2-moe kv=16);
+        otherwise the sequence axis (additionally) takes 'model' — decode
+        attention contracts S, so GSPMD lowers the softmax to psums over
+        'model' (flash-decoding-style split-KV).
+    """
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = names.get("model", 1)
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    dp_size = int(np.prod([names[a] for a in dp_axes])) if dp_axes else 1
+
+    def leaf(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec: list = [None] * x.ndim
+        batch_sharded = _div(x.shape[0], dp_size) and x.shape[0] >= dp_size
+        if batch_sharded:
+            spec[0] = dp
+        if x.ndim >= 3 and _div(x.shape[2], model_size) and x.shape[2] >= model_size:
+            spec[2] = "model"
+        elif x.ndim >= 2:
+            seq_axes = (() if batch_sharded else dp_axes) + ("model",)
+            total = int(np.prod([names[a] for a in seq_axes]))
+            if _div(x.shape[1], total) and x.shape[1] >= total:
+                spec[1] = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(leaf, cache_tree)

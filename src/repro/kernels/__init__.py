@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+flash_attention (causal/window/GQA/softcap), rwkv6 chunked wkv,
+backup_reduce (masked worker-gradient reduction). See ops.py for the
+jitted wrappers and ref.py for the jnp oracles."""
+from repro.kernels import ops, ref

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: masked backup-worker gradient reduction.
+
+The on-chip half of the paper's Alg. 4 line 7: given W stacked worker
+gradients (one shard each, flattened) and the [W] selection mask, produce
+(1/N) * sum_{selected} g_w as a single fused pass — a [W] x [W, BN] matvec
+per grid block, with the gradient tile streamed through VMEM once (the op
+is bandwidth-bound; fusing mask+scale+reduce avoids a second HBM pass over
+the W-times-larger stacked buffer).
+
+Grid: 1-D over flattened-parameter blocks. Mask lives in a [W] VMEM block
+replicated to every grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(g_ref, m_ref, o_ref, *, inv_n: float):
+    g = g_ref[...].astype(jnp.float32)              # [W, BN]
+    m = m_ref[...].astype(jnp.float32)              # [W]
+    o_ref[...] = (jnp.dot(m, g, preferred_element_type=jnp.float32)
+                  * inv_n).astype(o_ref.dtype)
+
+
+def backup_reduce(grads: jnp.ndarray, mask: jnp.ndarray, n_aggregate: int, *,
+                  block: int = 4096, interpret: bool = False) -> jnp.ndarray:
+    """grads: [W, N] stacked worker grads; mask: [W] -> [N] masked mean."""
+    w, n = grads.shape
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    kernel = functools.partial(_reduce_kernel, inv_n=1.0 / n_aggregate)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((w, block), lambda i: (0, i)),
+            pl.BlockSpec((w,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(grads, mask.astype(jnp.float32))

@@ -1,0 +1,114 @@
+"""Pallas TPU flash attention: causal + sliding-window + GQA + softcap.
+
+TPU-native blocking: the grid is (batch, q_head, q_blocks, kv_blocks); the
+kv axis is the minormost grid dimension, which Pallas TPU iterates
+sequentially per (b, h, iq) — the online-softmax accumulators (m, l, acc)
+live in VMEM scratch and carry across kv iterations. Block shapes are
+(BQ, D) / (BK, D) tiles resident in VMEM, MXU-aligned (multiples of 128
+in the contracted dims when D allows).
+
+Layouts (arranged by ops.py): q [B, H, S, D]; k/v [B, KV, S, D]; the GQA
+group mapping (kv_head = q_head // q_per_kv) happens in the k/v index_map —
+no repeated-KV materialization in HBM.
+
+Numerical scheme: f32 accumulation, running max-shifted exponentials —
+identical algebra to ref.reference_attention (tested allclose over shape
+and dtype sweeps in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  window: int, softcap: float, num_kv_blocks: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # [BQ, D]
+    k = k_ref[0, 0].astype(jnp.float32)                     # [BK, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    diff = qpos - kpos
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask = mask & (diff >= 0)
+    if window > 0:
+        mask = mask & (diff < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0, softcap: float = 0.0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [B, H, S, D]; k/v: [B, KV, S, D] -> [B, H, S, D]."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    assert h % kv == 0, (h, kv)
+    q_per_kv = h // kv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, softcap=softcap, num_kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, iq, ik: (ib, ih // q_per_kv, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, iq, ik: (ib, ih // q_per_kv, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # running max m
+            pltpu.VMEM((block_q,), jnp.float32),        # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),      # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

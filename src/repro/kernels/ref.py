@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: [B, H, S, D]; k/v: [B, KV, S, D] -> [B, H, S, D]. f32 math."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    rep = h // kv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    pos = jnp.arange(s)
+    diff = pos[:, None] - pos[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = mask & (diff >= 0)
+    if window > 0:
+        mask = mask & (diff < window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def reference_wkv6(r, k, v, w, u, state=None):
+    """Sequential RWKV-6 recurrence. r/k/v/w: [B, H, S, D]; u: [H, D].
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T;  o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+    Returns (out [B,H,S,D], final_state [B,H,D,D]).
+    """
+    b, h, s, d = r.shape
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    if state is None:
+        state = jnp.zeros((b, h, d, d), f32)
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp                                   # [B,H,D]
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhd,bhde->bhe", rt, st + u[None, :, :, None] * kv)
+        return wt[..., :, None] * st + kv, out
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (r, k, v, w))  # [S,B,H,D]
+    state, outs = jax.lax.scan(step, state, xs)
+    return outs.transpose(1, 2, 0, 3), state
+
+
+def reference_backup_reduce(grads, mask, n_aggregate: int):
+    """grads: [W, N]; mask: [W] -> [N] = (1/N_agg) sum_w mask_w grads_w."""
+    m = mask.astype(jnp.float32)
+    return (m @ grads.astype(jnp.float32)) / n_aggregate

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: chunked RWKV-6 wkv recurrence (data-dependent decay).
+
+Grid (B, H, n_chunks); the chunk axis is minormost, so the [D, D] head
+state carries across chunk iterations in VMEM scratch. Each step loads
+(r, k, v, w) chunk tiles [C, D], computes the intra-chunk lower-triangular
+attention form plus the carried-state term, and updates the state:
+
+    A      = cumsum(log w)                  (inclusive, per channel)
+    scores = (r * exp(A_excl)) @ (k * exp(-A))^T   (strictly lower tri)
+    out    = scores @ v + (r u k) * v + (r * exp(A_excl)) @ S
+    S      = diag(exp(A_C)) S + (k * exp(A_C - A))^T @ v
+
+Chunk of 16 with |log w| clamped <= 5 upstream keeps exp(-A) finite in f32
+(see repro.models.rwkv6). This is the TPU adaptation of the RWKV CUDA
+kernel: a serial per-token loop becomes MXU-shaped [C,D]x[D,C] matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *,
+                chunk: int, d: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)                 # [C, D]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                    # [D]
+
+    logw = jnp.log(jnp.maximum(w, 1e-30))
+    acc = jnp.cumsum(logw, axis=0)                      # inclusive [C, D]
+    acc_ex = acc - logw                                 # exclusive
+
+    ri = r * jnp.exp(acc_ex)                            # decay-weighted read
+    kj = k * jnp.exp(-acc)
+    scores = jnp.dot(ri, kj.T, preferred_element_type=jnp.float32)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(ti > tj, scores, 0.0)            # strictly lower tri
+
+    bonus = jnp.sum(r * u[None, :] * k, axis=1)         # diagonal (t == j)
+    st = state_ref[...]                                 # [D, D]
+    out = (jnp.dot(scores, v, preferred_element_type=jnp.float32)
+           + bonus[:, None] * v
+           + jnp.dot(ri, st, preferred_element_type=jnp.float32))
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+    a_all = jnp.exp(acc[-1, :])                         # [D]
+    k_dec = k * jnp.exp(acc[-1:, :] - acc)              # decay-to-chunk-end
+    state_ref[...] = (a_all[:, None] * st
+                      + jnp.dot(k_dec.T, v, preferred_element_type=jnp.float32))
+
+
+def wkv6_chunked(r, k, v, w, u, *, chunk: int = 16,
+                 interpret: bool = False) -> jnp.ndarray:
+    """r/k/v/w: [B, H, S, D]; u: [H, D] -> out [B, H, S, D] (zero init state)."""
+    b, h, s, d = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, d=d)
+    spec = pl.BlockSpec((1, 1, chunk, d), lambda ib, ih, ic: (ib, ih, ic, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, d), lambda ib, ih, ic: (ih, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), r.dtype),
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

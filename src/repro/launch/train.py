@@ -1,0 +1,81 @@
+"""Training launcher CLI.
+
+    python -m repro.launch.train --arch qwen3-0.6b --smoke --steps 50 \
+        --strategy backup --workers 6 --backups 2 [--resume]
+
+--smoke uses the reduced per-arch config (CPU-runnable); without it the
+full published config is built (TPU-scale — on this host use the dry-run
+instead). The loop drives the straggler simulator, masked sync-backup
+aggregation, RMSProp+momentum with the paper's lr rule, EMA, atomic
+checkpoints, and elastic rescale on worker failures.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro import configs
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                OptimizerConfig, ShapeConfig, TrainConfig)
+from repro.core.straggler import PaperCalibrated
+from repro.train.loop import Trainer
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=configs.list_archs(),
+                    default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch-per-worker", type=int, default=4)
+    ap.add_argument("--strategy", choices=["backup", "full_sync", "timeout"],
+                    default="backup")
+    ap.add_argument("--workers", type=int, default=6)
+    ap.add_argument("--backups", type=int, default=2)
+    ap.add_argument("--deadline", type=float, default=2.0)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--optimizer", default="rmsprop_momentum")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    model_cfg = (configs.get_smoke_config(args.arch) if args.smoke
+                 else configs.get_config(args.arch))
+    total = args.workers + (args.backups if args.strategy == "backup" else 0)
+    cfg = TrainConfig(
+        model=model_cfg,
+        shape=ShapeConfig("cli", args.seq, args.batch_per_worker * total,
+                          "train"),
+        aggregation=AggregationConfig(strategy=args.strategy,
+                                      num_workers=args.workers,
+                                      backup_workers=args.backups,
+                                      deadline_s=args.deadline),
+        optimizer=OptimizerConfig(name=args.optimizer,
+                                  learning_rate=args.lr,
+                                  scale_lr_with_workers=True,
+                                  ema_decay=0.999),
+        checkpoint=CheckpointConfig(directory=args.ckpt,
+                                    every_steps=args.ckpt_every),
+        seed=args.seed, log_every=10)
+
+    tr = Trainer(cfg, latency=PaperCalibrated())
+    import os
+    if args.resume and os.path.exists(os.path.join(args.ckpt, "LATEST")):
+        tr.restore_checkpoint()
+        print(f"[train] resumed at step {tr.step}")
+    else:
+        tr.init_state()
+    res = tr.run(args.steps)
+    for m in res.metrics:
+        print(f"[train] step {m['step']:5d} loss {m['loss']:.4f} "
+              f"sim {m['sim_time']:8.1f}s selected {m['selected']}")
+    tr.save_checkpoint()
+    print(f"[train] done: {res.steps} steps, sim_time {res.sim_time:.0f}s, "
+          f"restarts {res.restarts}, checkpoint {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: unified transformer (dense/moe/vlm), hymba, rwkv6, whisper, CNN."""
+from repro.models import registry
+
+get_model = registry.get_model
+param_count = registry.param_count

@@ -1,0 +1,193 @@
+"""Shared building blocks: inits, norms, rope, dense layers, losses.
+
+All models in this repo are pure functions over pytrees of jnp arrays:
+``init(key, cfg) -> params`` and ``apply(params, cfg, ...) -> out``. No flax —
+the parameterization is explicit so sharding rules can be attached by path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def trunc_normal(key, shape, std, dtype=jnp.float32):
+    # 2-sigma truncated normal, the LM-standard init
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, *, bias: bool = False,
+               std: Optional[float] = None) -> Params:
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": trunc_normal(key, (d_in, d_out), std, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32, std: float = 0.02) -> Params:
+    return {"embedding": trunc_normal(key, (vocab, d), std, dtype)}
+
+
+def embed(params: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["embedding"], ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # [D/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., S, 1, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def activation(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+        "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),
+        "swiglu": jax.nn.silu,  # gate activation inside SwiGLU
+    }[name]
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          valid_vocab: Optional[int] = None) -> jnp.ndarray:
+    """Per-position CE, numerically stable, vocab-sharding friendly.
+
+    Written as ``lse - label_logit`` with explicit reductions over the vocab
+    axis so that GSPMD keeps vocab-sharded logits sharded (the reductions
+    lower to small psums instead of an all-gather of the logits).
+    """
+    logits = logits.astype(jnp.float32)
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        pad_mask = jnp.arange(logits.shape[-1]) >= valid_vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    label_logit = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - label_logit
+
+
+def chunked_cross_entropy(x: jnp.ndarray, out_embed: jnp.ndarray, labels: jnp.ndarray,
+                          valid_vocab: int, chunk: int = 4096) -> jnp.ndarray:
+    """CE over huge vocabs without materializing full [T, V] logits.
+
+    Scans over token chunks; each chunk's logits live only inside the scan
+    body (rematerialized in backward). x: [T, d]; out_embed: [d, V] (possibly
+    vocab-sharded); labels: [T]. Returns per-token loss [T].
+    """
+    t = x.shape[0]
+    n = max(1, -(-t // chunk))
+    pad = n * chunk - t
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], 0)
+        labels = jnp.concatenate([labels, jnp.zeros((pad,), labels.dtype)], 0)
+    xs = x.reshape(n, chunk, x.shape[1])
+    ls = labels.reshape(n, chunk)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xc, lc = inp
+        logits = xc @ out_embed
+        return carry, softmax_cross_entropy(logits, lc, valid_vocab)
+
+    _, losses = jax.lax.scan(body, (), (xs, ls))
+    losses = losses.reshape(n * chunk)
+    return losses[:t]
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

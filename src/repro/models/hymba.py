@@ -1,0 +1,159 @@
+"""Hymba-style hybrid: parallel attention + SSM heads in every block.
+
+Each block computes, from the same pre-norm input,
+    y = beta_a * attn(x) + beta_s * ssd(x)
+(learnable per-block scalars), followed by a SwiGLU FFN. Attention is
+sliding-window (cfg.sliding_window) for *all* layers — Hymba keeps only 3
+global layers; at the 500k-decode shape the SSM path carries long-range
+state, so we adopt window-everywhere (recorded in DESIGN.md). The SSM path
+is the multi-head SSD mixer from ``repro.models.mamba``.
+
+Decode caches are O(window) for attention + O(1) SSD state per layer, which
+is what makes the ``long_500k`` cell feasible for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, mamba, mlp
+from repro.models.common import Params
+
+
+def _ssd_dims(cfg):
+    h = cfg.num_heads
+    hd = cfg.resolved_head_dim
+    return h, hd, cfg.ssm.state_dim
+
+
+def block_init(key, cfg, dtype) -> Params:
+    k1, k2, k3 = common.split_keys(key, 3)
+    h, hd, n = _ssd_dims(cfg)
+    return {
+        "ln1": common.rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention.gqa_init(k1, cfg, dtype),
+        "ssd": mamba.ssd_init(k2, cfg.d_model, h, hd, n, dtype),
+        "ssd_out": common.dense_init(jax.random.fold_in(k2, 1), h * hd,
+                                     cfg.d_model, dtype),
+        "beta_a": jnp.full((), 0.5, jnp.float32),
+        "beta_s": jnp.full((), 0.5, jnp.float32),
+        "ln2": common.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.hidden_act, dtype),
+    }
+
+
+def block_apply(p: Params, cfg, x, positions, ssd_state=None, chunked=True):
+    h_, hd, n = _ssd_dims(cfg)
+    hn = common.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if x.shape[1] > 8192:
+        attn_out = attention.gqa_attend_chunked(p["attn"], cfg, hn, positions,
+                                                window=cfg.sliding_window)
+    else:
+        attn_out = attention.gqa_attend(p["attn"], cfg, hn, positions,
+                                        window=cfg.sliding_window)
+    ssd_y, new_state = mamba.ssd_apply(p["ssd"], hn, h_, hd, n, ssd_state,
+                                       chunked=chunked)
+    b, s = x.shape[:2]
+    ssd_out = common.dense(p["ssd_out"], ssd_y.reshape(b, s, h_ * hd))
+    mix = (p["beta_a"] * attn_out.astype(jnp.float32)
+           + p["beta_s"] * ssd_out.astype(jnp.float32)).astype(x.dtype)
+    x = x + mix
+    hn = common.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + mlp.mlp_apply(p["mlp"], hn, cfg.hidden_act)
+    return x, new_state
+
+
+class HymbaLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.dtype = common.dtype_of(cfg.dtype)
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        kE, kB = jax.random.split(key)
+        keys = jax.random.split(kB, cfg.num_layers)
+        return {
+            "embed": common.embed_init(kE, cfg.padded_vocab, cfg.d_model, self.dtype),
+            "blocks": jax.vmap(lambda k: block_init(k, cfg, self.dtype))(keys),
+            "final_norm": common.rmsnorm_init(cfg.d_model, self.dtype),
+        }
+
+    def forward(self, params, tokens, prefix_embeds=None):
+        cfg = self.cfg
+        x = common.embed(params["embed"], tokens).astype(self.dtype)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def body(carry, p_l):
+            from repro.distributed.context import constrain_layer_params
+            h, _ = carry
+            p_l = constrain_layer_params(p_l)
+            h, _st = block_apply(p_l, cfg, h, positions)
+            return (h, 0.0), None
+
+        from repro.models.transformer import _remat_wrap
+        body = _remat_wrap(body, cfg.remat)
+        (x, _), _ = jax.lax.scan(body, (x, 0.0), params["blocks"])
+        x = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x @ params["embed"]["embedding"].T
+
+    def per_token_loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"])
+        labels = batch["labels"]
+        safe = jnp.maximum(labels, 0)
+        loss = common.softmax_cross_entropy(logits, safe, self.cfg.vocab_size)
+        return jnp.where(labels >= 0, loss, 0.0), jnp.zeros((), jnp.float32)
+
+    # -- decode ---------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        h, hd, n = _ssd_dims(cfg)
+        w = min(max_len, cfg.sliding_window) if cfg.sliding_window > 0 else max_len
+        return {
+            "lens": jnp.zeros((), jnp.int32),
+            "attn": [attention.gqa_init_cache(cfg, batch, w, dtype)
+                     for _ in range(cfg.num_layers)],
+            "ssd": [mamba.ssd_init_state(batch, h, hd, n)
+                    for _ in range(cfg.num_layers)],
+        }
+
+    def decode_step(self, params, token, cache):
+        cfg = self.cfg
+        h_, hd, n = _ssd_dims(cfg)
+        cache = dict(cache)
+        cache_len = cache["lens"]
+        x = common.embed(params["embed"], token).astype(self.dtype)
+        attn_caches = list(cache["attn"])
+        ssd_states = list(cache["ssd"])
+        for i in range(cfg.num_layers):
+            p = jax.tree_util.tree_map(lambda t: t[i], params["blocks"])
+            hn = common.rmsnorm(p["ln1"], x, cfg.norm_eps)
+            size = attn_caches[i]["k"].shape[1]
+            is_ring = cfg.sliding_window > 0 and size <= cfg.sliding_window
+            attn_out, attn_caches[i] = attention.gqa_decode(
+                p["attn"], cfg, hn, attn_caches[i], cache_len,
+                window=0 if is_ring else cfg.sliding_window,
+                write_pos=cache_len % size if is_ring else None)
+            ssd_y, ssd_states[i] = mamba.ssd_apply(p["ssd"], hn, h_, hd, n,
+                                                   ssd_states[i], chunked=False)
+            ssd_out = common.dense(p["ssd_out"], ssd_y.reshape(x.shape[0], 1, -1))
+            mix = (p["beta_a"] * attn_out.astype(jnp.float32)
+                   + p["beta_s"] * ssd_out.astype(jnp.float32)).astype(x.dtype)
+            x = x + mix
+            hn = common.rmsnorm(p["ln2"], x, cfg.norm_eps)
+            x = x + mlp.mlp_apply(p["mlp"], hn, cfg.hidden_act)
+        x = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = (x @ params["embed"]["embedding"].T)[:, 0]
+        cache.update(attn=attn_caches, ssd=ssd_states, lens=cache_len + 1)
+        return logits, cache
+
+    def prefill(self, params, tokens, prefix_embeds=None):
+        logits = self.forward(params, tokens)
+        return logits[:, -1]
+
+
+def make(cfg) -> HymbaLM:
+    return HymbaLM(cfg)

@@ -1,0 +1,132 @@
+"""Mamba-2 / SSD-style selective state-space head (used by Hymba).
+
+Multi-head SSD with scalar-per-head decay a_t = exp(-softplus(dt) * A):
+
+    S_t = a_t * S_{t-1} + dt_t * B_t x_t^T        state: [N, P] per head
+    y_t = C_t^T S_t + D x_t
+
+where N = ssm state dim, P = head dim. Sequential scan (oracle/decode) and
+chunked-parallel training form (same algebra as rwkv6 but scalar decay per
+head, which keeps the chunked form stable without clamping).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Params
+
+
+def ssd_init(key, d_in: int, num_heads: int, head_dim: int, state_dim: int,
+             dtype=jnp.float32) -> Params:
+    """Projections for a multi-head SSD mixer over input x: [B,S,d_in]."""
+    ks = common.split_keys(key, 5)
+    h, p, n = num_heads, head_dim, state_dim
+    return {
+        "wx": common.dense_init(ks[0], d_in, h * p, dtype),       # value path
+        "wb": common.dense_init(ks[1], d_in, h * n, dtype),       # input gate B
+        "wc": common.dense_init(ks[2], d_in, h * n, dtype),       # output gate C
+        "wdt": common.dense_init(ks[3], d_in, h, dtype),          # per-head dt
+        "a_log": jnp.zeros((h,), jnp.float32),                    # A = -exp(a_log)
+        "d_skip": jnp.ones((h, p), dtype),                        # D skip
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+    }
+
+
+def ssd_project(params: Params, x: jnp.ndarray, num_heads: int, head_dim: int,
+                state_dim: int):
+    b, s, _ = x.shape
+    h, p, n = num_heads, head_dim, state_dim
+    xv = common.dense(params["wx"], x).reshape(b, s, h, p)
+    bb = common.dense(params["wb"], x).reshape(b, s, h, n)
+    cc = common.dense(params["wc"], x).reshape(b, s, h, n)
+    dt = jax.nn.softplus(common.dense(params["wdt"], x).astype(jnp.float32)
+                         + params["dt_bias"])                      # [B,S,H]
+    a = -jnp.exp(params["a_log"])                                  # [H], negative
+    decay = jnp.exp(dt * a)                                        # in (0,1)
+    return xv, bb, cc, dt, decay
+
+
+def ssd_scan(xv, bb, cc, dt, decay, d_skip, state=None):
+    """Sequential oracle. xv: [B,S,H,P]; bb/cc: [B,S,H,N]; dt/decay: [B,S,H]."""
+    b, s, h, p = xv.shape
+    n = bb.shape[-1]
+    f32 = jnp.float32
+    xv32, bb32, cc32 = xv.astype(f32), bb.astype(f32), cc.astype(f32)
+    if state is None:
+        state = jnp.zeros((b, h, n, p), f32)
+
+    def step(st, inp):
+        x_t, b_t, c_t, dt_t, a_t = inp
+        st = a_t[..., None, None] * st + (dt_t[..., None, None]
+                                          * b_t[..., :, None] * x_t[..., None, :])
+        y = jnp.einsum("bhn,bhnp->bhp", c_t, st)
+        return st, y
+
+    xs = (xv32.transpose(1, 0, 2, 3), bb32.transpose(1, 0, 2, 3),
+          cc32.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          decay.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3) + d_skip[None, None] * xv32
+    return y.astype(xv.dtype), state
+
+
+def ssd_chunked(xv, bb, cc, dt, decay, d_skip, state=None, chunk: int = 64):
+    """Chunked-parallel SSD (scalar per-head decay => stable log-space form)."""
+    b, s, h, p = xv.shape
+    n = bb.shape[-1]
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((b, h, n, p), f32)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        xv = jnp.pad(xv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    xs_ = xv.astype(f32).reshape(b, nc, chunk, h, p).transpose(1, 0, 3, 2, 4)   # [nc,B,H,C,P]
+    bs_ = bb.astype(f32).reshape(b, nc, chunk, h, n).transpose(1, 0, 3, 2, 4)
+    cs_ = cc.astype(f32).reshape(b, nc, chunk, h, n).transpose(1, 0, 3, 2, 4)
+    dts = dt.reshape(b, nc, chunk, h).transpose(1, 0, 3, 2)                      # [nc,B,H,C]
+    dcs = decay.reshape(b, nc, chunk, h).transpose(1, 0, 3, 2)
+
+    def chunk_step(st, inp):
+        xc, bc, cc_, dtc, ac = inp
+        logd = jnp.log(jnp.maximum(ac, 1e-30))                     # [B,H,C]
+        acc = jnp.cumsum(logd, axis=-1)                            # inclusive
+        # intra-chunk: y_t += sum_{j<=t} C_t·B_j dt_j x_j * exp(acc_t - acc_j)
+        scores = jnp.einsum("bhtn,bhjn->bhtj", cc_, bc * dtc[..., None])
+        diff = acc[..., :, None] - acc[..., None, :]               # [B,H,C,C]
+        tri = jnp.tril(jnp.ones((xc.shape[2], xc.shape[2]), bool))
+        gate = jnp.where(tri[None, None], jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        y = jnp.einsum("bhtj,bhjp->bhtp", scores * gate, xc)
+        # carried state: y_t += C_t · exp(acc_t) S_in
+        y = y + jnp.einsum("bhtn,bhnp->bhtp", cc_ * jnp.exp(acc)[..., None], st)
+        # state update
+        a_all = jnp.exp(acc[..., -1])                              # [B,H]
+        w_j = jnp.exp(acc[..., -1:] - acc)                         # decay to end
+        st = (a_all[..., None, None] * st
+              + jnp.einsum("bhjn,bhjp->bhnp", bc * (dtc * w_j)[..., None], xc))
+        return st, y
+
+    state, ys = jax.lax.scan(chunk_step, state, (xs_, bs_, cs_, dts, dcs))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, nc * chunk, h, p)[:, :s]
+    y = y + d_skip[None, None] * xv[:, :s].astype(f32)
+    return y.astype(xv.dtype), state
+
+
+def ssd_apply(params: Params, x: jnp.ndarray, num_heads: int, head_dim: int,
+              state_dim: int, state=None, chunked: bool = True):
+    xv, bb, cc, dt, decay = ssd_project(params, x, num_heads, head_dim, state_dim)
+    fn = ssd_chunked if (chunked and x.shape[1] > 1) else ssd_scan
+    y, state = fn(xv, bb, cc, dt, decay, params["d_skip"].astype(jnp.float32), state)
+    return y, state
+
+
+def ssd_init_state(batch: int, num_heads: int, head_dim: int, state_dim: int):
+    return jnp.zeros((batch, num_heads, state_dim, head_dim), jnp.float32)

@@ -1,0 +1,36 @@
+"""Dense FFN blocks: SwiGLU / GELU / squared-ReLU."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Params
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32,
+             bias: bool = False) -> Params:
+    ks = common.split_keys(key, 3)
+    p = {
+        "w_up": common.dense_init(ks[0], d_model, d_ff, dtype, bias=bias),
+        "w_down": common.dense_init(ks[1], d_ff, d_model, dtype, bias=bias),
+    }
+    if act == "swiglu":
+        p["w_gate"] = common.dense_init(ks[2], d_model, d_ff, dtype, bias=bias)
+    return p
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    f = common.activation(act)
+    up = common.dense(params["w_up"], x)
+    if act == "swiglu":
+        h = f(common.dense(params["w_gate"], x)) * up
+    else:
+        h = f(up)
+    return common.dense(params["w_down"], h)
+
+
+def mlp_param_count(d_model: int, d_ff: int, act: str) -> int:
+    n = 2 * d_model * d_ff
+    if act == "swiglu":
+        n += d_model * d_ff
+    return n

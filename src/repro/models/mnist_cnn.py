@@ -1,0 +1,88 @@
+"""The paper's §2.1 / Appendix A.1 model: 4-layer 3x3 CNN with max-pooling
+and weight normalization in every layer, for the staleness experiments.
+
+Weight norm (Salimans & Kingma): w = g * v / ||v||, per output channel.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Params
+
+
+def _wn_conv_init(key, k: int, c_in: int, c_out: int) -> Params:
+    v = common.trunc_normal(key, (k, k, c_in, c_out), 0.05)
+    return {"v": v, "g": jnp.ones((c_out,)), "b": jnp.zeros((c_out,))}
+
+
+def _wn_conv(p: Params, x: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    v = p["v"]
+    norm = jnp.sqrt(jnp.sum(jnp.square(v), axis=(0, 1, 2), keepdims=True) + 1e-8)
+    w = p["g"] * v / norm
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _wn_dense_init(key, d_in: int, d_out: int) -> Params:
+    v = common.trunc_normal(key, (d_in, d_out), 0.05)
+    return {"v": v, "g": jnp.ones((d_out,)), "b": jnp.zeros((d_out,))}
+
+
+def _wn_dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    v = p["v"]
+    norm = jnp.sqrt(jnp.sum(jnp.square(v), axis=0, keepdims=True) + 1e-8)
+    return x @ (p["g"] * v / norm) + p["b"]
+
+
+def _maxpool(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+class MnistCNN:
+    """Input: [B, 28, 28, 1]; 10-way classifier."""
+
+    num_classes = 10
+
+    def __init__(self, widths=(32, 32, 64, 64)):
+        self.widths = widths
+
+    def init(self, key) -> Params:
+        ks = common.split_keys(key, 5)
+        w = self.widths
+        return {
+            "c1": _wn_conv_init(ks[0], 3, 1, w[0]),
+            "c2": _wn_conv_init(ks[1], 3, w[0], w[1]),
+            "c3": _wn_conv_init(ks[2], 3, w[1], w[2]),
+            "c4": _wn_conv_init(ks[3], 3, w[2], w[3]),
+            "fc": _wn_dense_init(ks[4], 7 * 7 * w[3], self.num_classes),
+        }
+
+    def forward(self, params, images) -> jnp.ndarray:
+        x = images
+        x = jax.nn.relu(_wn_conv(params["c1"], x))
+        x = jax.nn.relu(_wn_conv(params["c2"], x))
+        x = _maxpool(x)                                     # 28 -> 14
+        x = jax.nn.relu(_wn_conv(params["c3"], x))
+        x = jax.nn.relu(_wn_conv(params["c4"], x))
+        x = _maxpool(x)                                     # 14 -> 7
+        x = x.reshape(x.shape[0], -1)
+        return _wn_dense(params["fc"], x)
+
+    def per_example_loss(self, params, batch) -> jnp.ndarray:
+        logits = self.forward(params, batch["images"])
+        return common.softmax_cross_entropy(logits, batch["labels"])
+
+    def accuracy(self, params, batch) -> jnp.ndarray:
+        logits = self.forward(params, batch["images"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+
+
+def make(widths=(32, 32, 64, 64)) -> MnistCNN:
+    return MnistCNN(widths)

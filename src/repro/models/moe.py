@@ -1,0 +1,225 @@
+"""Mixture-of-experts FFN: shared + routed experts, top-k, capacity dispatch.
+
+Dispatch is the sort-free scatter/gather formulation:
+  1. router softmax -> top-k (expert id, weight) per token
+  2. position-in-expert via a one-hot cumulative count (capacity C per expert;
+     overflow tokens are dropped, matching GShard/Switch semantics)
+  3. scatter tokens to a [E, C, d] buffer, batched expert einsum, weighted
+     scatter-add back to [T, d]
+
+Partitioning (cfg.moe.partition_mode):
+  * 'tp' — every expert's d_ff is sharded over the 'model' axis (works for
+    any expert count, e.g. qwen2-moe's 60); dispatch buffer is replicated
+    over 'model' and the down-projection contributes a psum, exactly like a
+    dense Megatron MLP.
+  * 'ep' — experts are placed over the 'model' axis (requires E_padded %
+    model_axis == 0, e.g. deepseek's 64); the dispatch buffer is sharded on
+    E, which GSPMD realizes as an all-to-all from the token layout.
+
+The aux load-balance loss follows Switch: E * sum_e f_e * p_e.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Params
+
+
+def padded_num_experts(num_experts: int, multiple: int = 16) -> int:
+    return ((num_experts + multiple - 1) // multiple) * multiple
+
+
+def moe_init(key, cfg, dtype=jnp.float32) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    e = padded_num_experts(m.num_experts) if m.partition_mode == "ep" else m.num_experts
+    ks = common.split_keys(key, 6)
+    p = {
+        "router": common.dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": _experts_init(ks[1], e, d, m.expert_d_ff, dtype),
+        "w_up": _experts_init(ks[2], e, d, m.expert_d_ff, dtype),
+        "w_down": _experts_init(ks[3], e, m.expert_d_ff, d, dtype),
+    }
+    if m.num_shared_experts > 0:
+        from repro.models import mlp
+        p["shared"] = mlp.mlp_init(ks[4], d, m.shared_d_ff, "swiglu", dtype)
+    return p
+
+
+def _experts_init(key, e: int, d_in: int, d_out: int, dtype):
+    std = 1.0 / (d_in ** 0.5)
+    return {"w": common.trunc_normal(key, (e, d_in, d_out), std, dtype)}
+
+
+def route(router_params: Params, x: jnp.ndarray, num_real_experts: int,
+          top_k: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [T, d] -> (weights [T,k], ids [T,k], probs [T,E], aux_loss)."""
+    logits = common.dense(router_params, x.astype(jnp.float32))    # [T, E_padded]
+    e_total = logits.shape[-1]
+    if num_real_experts < e_total:                                 # mask padding experts
+        pad = jnp.arange(e_total) >= num_real_experts
+        logits = jnp.where(pad, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, top_k)                     # [T,k]
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+    # Switch aux loss: fraction routed vs mean prob, per expert
+    t = x.shape[0]
+    route_onehot = jax.nn.one_hot(top_i[:, 0], e_total, dtype=jnp.float32)
+    f = jnp.mean(route_onehot, axis=0)
+    pbar = jnp.mean(probs, axis=0)
+    aux = e_total * jnp.sum(f * pbar)
+    return top_w, top_i, probs, aux
+
+
+def dispatch_indices(top_i: jnp.ndarray, num_experts: int,
+                     capacity: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Position of each (token, slot) assignment inside its expert buffer.
+
+    Returns (pos [T,k] int32, keep [T,k] bool). Assignments beyond the
+    capacity are dropped (keep=False), GShard-style.
+    """
+    t, k = top_i.shape
+    flat = top_i.reshape(-1)                                       # [T*k]
+    onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)    # [T*k, E]
+    pos_flat = (jnp.cumsum(onehot, axis=0) - 1)                    # running count
+    pos = jnp.take_along_axis(pos_flat, flat[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    return pos.reshape(t, k).astype(jnp.int32), keep.reshape(t, k)
+
+
+def _dispatch_compute_combine(experts: Params, cfg, x: jnp.ndarray,
+                              top_w: jnp.ndarray, top_i: jnp.ndarray,
+                              capacity_factor: float) -> jnp.ndarray:
+    """Scatter -> batched expert FFN -> weighted gather over LOCAL tokens.
+
+    x: [T_local, d]; top_w/top_i: [T_local, k]. Capacity is computed from
+    the local token count (per-group capacity, GShard semantics). Runs
+    either plainly (single device / tests / decode) or as the shard_map
+    body over the data axes (see moe_apply).
+    """
+    t, d = x.shape
+    e = experts["w_gate"]["w"].shape[0]                            # padded E in 'ep'
+    k = top_i.shape[1]
+    cap = int(max(1, capacity_factor * t * k / e))
+    pos, keep = dispatch_indices(top_i, e, cap)
+
+    # scatter tokens -> [E, C, d]
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)                      # +1 drop slot
+    tok_idx = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(-1)
+    e_flat = top_i.reshape(-1)
+    p_flat = jnp.where(keep.reshape(-1), pos.reshape(-1), cap)
+    buf = buf.at[e_flat, p_flat].add(x[tok_idx])
+    buf = buf[:, :cap]
+    if cfg.moe.partition_mode == "ep":
+        buf = _maybe_ep_constraint(buf)
+
+    # batched expert FFN (SwiGLU)
+    g = jnp.einsum("ecd,edf->ecf", buf, experts["w_gate"]["w"])
+    u = jnp.einsum("ecd,edf->ecf", buf, experts["w_up"]["w"])
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, experts["w_down"]["w"])      # [E,C,d]
+
+    # gather back with routing weights
+    y = jnp.pad(y, ((0, 0), (0, 1), (0, 0)))                       # drop slot -> zeros
+    gathered = y[e_flat, p_flat]                                   # [T*k, d]
+    w_flat = (top_w.reshape(-1) * keep.reshape(-1)).astype(x.dtype)
+    return jnp.zeros((t, d), x.dtype).at[tok_idx].add(
+        gathered * w_flat[:, None])
+
+
+def _ambient_axis_sizes():
+    from repro.distributed.context import _ambient_axes
+    mesh = _ambient_axes()
+    if mesh is None:
+        return {}
+    sizes = (mesh.axis_sizes if hasattr(mesh, "axis_sizes")
+             else mesh.devices.shape)
+    return dict(zip(mesh.axis_names, sizes))
+
+
+def _maybe_ep_constraint(buf: jnp.ndarray) -> jnp.ndarray:
+    """Expert-parallel: keep the dispatch buffer expert-sharded over the
+    'model' axis (GSPMD realizes the reshard as an all-to-all)."""
+    from jax.sharding import PartitionSpec as P
+    names = _ambient_axis_sizes()
+    if "model" not in names or buf.shape[0] % names["model"]:
+        return buf
+    return jax.lax.with_sharding_constraint(buf, P("model", None, None))
+
+
+def moe_apply(params: Params, cfg, x: jnp.ndarray,
+              capacity_factor: float = 1.25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [T, d] -> (out [T, d], aux_loss scalar).
+
+    Routing (tiny) and the shared experts (a dense MLP) run under plain
+    GSPMD. Dispatch/compute/combine runs inside a shard_map over the data
+    axes when distributed.context.moe_data_sharding is active — the
+    scatter/gather pair is otherwise replicated by GSPMD at GLOBAL size
+    (observed 10.7 GB dispatch buffers on qwen2-moe train_4k).
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import context
+    m = cfg.moe
+    t, _ = x.shape
+    top_w, top_i, _, aux = route(params["router"], x, m.num_experts, m.top_k)
+
+    experts = {n: params[n] for n in ("w_gate", "w_up", "w_down")}
+    axes = context.moe_shard_axes()
+    sizes = _ambient_axis_sizes()
+    dp_size = 1
+    for a in (axes or ()):
+        dp_size *= sizes.get(a, 1)
+    if axes and t % dp_size == 0 and t >= dp_size:
+        dp = axes if len(axes) > 1 else axes[0]
+        # XLA CPU WORKAROUND: grad through a partial-auto shard_map with
+        # bf16 boundary tensors hits an XLA CPU CHECK failure ("Invalid
+        # binary instruction opcode copy", hlo_instruction.cc). Keep the
+        # boundary f32 on CPU (dry-run host); interior + TPU stay bf16.
+        f32_boundary = (jax.default_backend() == "cpu"
+                        and x.dtype == jnp.bfloat16)
+        work_dtype = x.dtype
+
+        def body(ex, xx, tw, ti):
+            if f32_boundary:
+                ex = jax.tree_util.tree_map(
+                    lambda a: a.astype(work_dtype), ex)
+                xx = xx.astype(work_dtype)
+            y = _dispatch_compute_combine(ex, cfg, xx, tw, ti,
+                                          capacity_factor)
+            return y.astype(jnp.float32) if f32_boundary else y
+
+        args = (experts, x, top_w, top_i)
+        if f32_boundary:
+            args = (jax.tree_util.tree_map(lambda a: a.astype(jnp.float32),
+                                           experts),
+                    x.astype(jnp.float32), top_w, top_i)
+        out = jax.shard_map(
+            body,
+            in_specs=(P(), P(dp, None), P(dp, None), P(dp, None)),
+            out_specs=P(dp, None),
+            axis_names=set(axes), check_vma=False,
+        )(*args).astype(x.dtype)
+    else:
+        out = _dispatch_compute_combine(experts, cfg, x, top_w, top_i,
+                                        capacity_factor)
+
+    if "shared" in params:
+        from repro.models import mlp
+        out = out + mlp.mlp_apply(params["shared"], x, "swiglu")
+    return out, aux * m.router_aux_weight
+
+
+def moe_param_count(cfg, active_only: bool = False) -> int:
+    from repro.models import mlp
+    m = cfg.moe
+    d = cfg.d_model
+    e = m.top_k if active_only else m.num_experts
+    n = e * 3 * d * m.expert_d_ff                                  # swiglu experts
+    n += d * m.num_experts                                         # router
+    if m.num_shared_experts > 0:
+        n += mlp.mlp_param_count(d, m.shared_d_ff, "swiglu")
+    return n

@@ -1,0 +1,58 @@
+"""Model registry: family -> module, plus allocation-free parameter counts."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+
+
+def get_model(cfg) -> Any:
+    family = cfg.family
+    if family in ("dense", "moe", "vlm"):
+        from repro.models import transformer
+        return transformer.make(cfg)
+    if family == "hybrid":
+        from repro.models import hymba
+        return hymba.make(cfg)
+    if family == "ssm":
+        from repro.models import rwkv_lm
+        return rwkv_lm.make(cfg)
+    if family == "audio":
+        from repro.models import whisper
+        return whisper.make(cfg)
+    raise ValueError(f"unknown model family: {family}")
+
+
+@functools.lru_cache(maxsize=64)
+def _shape_tree(cfg):
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(model.init, key)
+
+
+def param_count(cfg, active_only: bool = False) -> int:
+    """Exact parameter count via eval_shape (no allocation, works at 104B)."""
+    shapes = _shape_tree(cfg)
+    total = sum(math.prod(x.shape) for x in jax.tree_util.tree_leaves(shapes))
+    if active_only and cfg.moe.enabled:
+        # subtract the routed experts a token does NOT visit
+        m = cfg.moe
+        moe_shapes = shapes.get("seg_moe", {}).get("moe", {})
+        for name in ("w_gate", "w_up", "w_down"):
+            if name in moe_shapes:
+                w = moe_shapes[name]["w"]          # [L_moe, E, d_in, d_out]
+                per_expert = math.prod(w.shape) // w.shape[1]
+                total -= per_expert * (w.shape[1] - m.top_k)
+    return total
+
+
+def embedding_param_count(cfg) -> int:
+    shapes = _shape_tree(cfg)
+    n = 0
+    for key_name in ("embed", "lm_head", "head"):
+        sub = shapes.get(key_name)
+        if sub:
+            n += sum(math.prod(x.shape) for x in jax.tree_util.tree_leaves(sub))
+    return n

@@ -1,0 +1,94 @@
+"""RWKV-6 language model: embed -> scanned rwkv blocks -> head.
+
+Attention-free; decode state is O(1) per layer (head-state matrices +
+token-shift vectors), which makes the ``long_500k`` cell trivial memory-wise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, rwkv6
+from repro.models.common import Params
+
+
+class RWKVLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.dtype = common.dtype_of(cfg.dtype)
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        kE, kB, kH = common.split_keys(key, 3)
+        keys = jax.random.split(kB, cfg.num_layers)
+        return {
+            "embed": common.embed_init(kE, cfg.padded_vocab, cfg.d_model, self.dtype),
+            "ln_in": common.layernorm_init(cfg.d_model, self.dtype),
+            "blocks": jax.vmap(lambda k: rwkv6.rwkv_block_init(k, cfg, self.dtype))(keys),
+            "ln_out": common.layernorm_init(cfg.d_model, self.dtype),
+            "head": common.dense_init(kH, cfg.d_model, cfg.padded_vocab, self.dtype),
+        }
+
+    def _fresh_states(self, batch):
+        # zero block state, broadcast over layers inside the scan
+        return rwkv6.rwkv_init_block_state(self.cfg, batch, self.dtype)
+
+    def forward(self, params, tokens, prefix_embeds=None):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = common.embed(params["embed"], tokens).astype(self.dtype)
+        x = common.layernorm(params["ln_in"], x, 1e-5)
+        zero_state = self._fresh_states(b)
+
+        def body(carry, p_l):
+            from repro.distributed.context import constrain_layer_params
+            h = carry
+            p_l = constrain_layer_params(p_l)
+            h, _ = rwkv6.rwkv_block_apply(p_l, cfg, h, zero_state, chunked=True)
+            return h, None
+
+        from repro.models.transformer import _remat_wrap
+        body = _remat_wrap(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        x = common.layernorm(params["ln_out"], x, 1e-5)
+        return common.dense(params["head"], x)
+
+    def per_token_loss(self, params, batch):
+        labels = batch["labels"]
+        logits = self.forward(params, batch["tokens"])
+        safe = jnp.maximum(labels, 0)
+        loss = common.softmax_cross_entropy(logits, safe, self.cfg.vocab_size)
+        return jnp.where(labels >= 0, loss, 0.0), jnp.zeros((), jnp.float32)
+
+    # -- decode: O(1) recurrent state -----------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        # max_len is irrelevant for a recurrent cache — O(1) in S.
+        del max_len
+        return {
+            "lens": jnp.zeros((), jnp.int32),
+            "state": [rwkv6.rwkv_init_block_state(self.cfg, batch, dtype or self.dtype)
+                      for _ in range(self.cfg.num_layers)],
+        }
+
+    def decode_step(self, params, token, cache):
+        cfg = self.cfg
+        cache = dict(cache)
+        states = list(cache["state"])
+        x = common.embed(params["embed"], token).astype(self.dtype)
+        x = common.layernorm(params["ln_in"], x, 1e-5)
+        for i in range(cfg.num_layers):
+            p = jax.tree_util.tree_map(lambda t: t[i], params["blocks"])
+            x, states[i] = rwkv6.rwkv_block_apply(p, cfg, x, states[i],
+                                                  chunked=False)
+        x = common.layernorm(params["ln_out"], x, 1e-5)
+        logits = common.dense(params["head"], x)[:, 0]
+        cache.update(state=states, lens=cache["lens"] + 1)
+        return logits, cache
+
+    def prefill(self, params, tokens, prefix_embeds=None):
+        return self.forward(params, tokens)[:, -1]
+
+
+def make(cfg) -> RWKVLM:
+    return RWKVLM(cfg)

@@ -1,0 +1,327 @@
+"""Unified decoder-only transformer LM (dense / MoE / VLM families).
+
+Structure: token embed (+ optional multimodal prefix embeds) -> homogeneous
+*segments* of pre-norm blocks (each segment is a ``lax.scan`` over stacked
+parameters, keeping HLO size O(1) in depth) -> final norm -> (tied) LM head.
+
+Heterogeneity handled:
+  * MoE models with leading dense layers (deepseek-v2): one dense segment +
+    one MoE segment, scanned separately.
+  * Local:global sliding-window interleave (gemma3): a per-layer window
+    array is fed through the scan as ``xs`` and applied as a traced mask.
+  * Training/prefill scan over layers; decode unrolls layers (small graphs)
+    so per-layer caches may differ.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, mlp, moe
+from repro.models.common import Params
+
+CHUNKED_ATTN_THRESHOLD = 8192   # switch to flash-style chunked path above this
+
+
+# ---------------------------------------------------------------------------
+# Segments
+# ---------------------------------------------------------------------------
+
+
+def segments(cfg) -> List[Tuple[str, int, int]]:
+    """[(kind, count, first_layer_index)] — homogeneous scan groups."""
+    if cfg.moe.enabled:
+        fd = cfg.moe.first_dense
+        out = []
+        if fd > 0:
+            out.append(("dense", fd, 0))
+        out.append(("moe", cfg.num_layers - fd, fd))
+        return out
+    return [("dense", cfg.num_layers, 0)]
+
+
+def layer_windows_np(cfg):
+    """Per-layer sliding window (0 = global), host-side (static config math
+    — safe under eval_shape/jit tracing)."""
+    import numpy as np
+    idx = np.arange(cfg.num_layers)
+    if cfg.sliding_window <= 0:
+        return np.zeros((cfg.num_layers,), np.int32)
+    if cfg.global_every > 0:
+        is_global = (idx + 1) % cfg.global_every == 0
+        return np.where(is_global, 0, cfg.sliding_window).astype(np.int32)
+    return np.full((cfg.num_layers,), cfg.sliding_window, np.int32)
+
+
+def layer_windows(cfg) -> jnp.ndarray:
+    return jnp.asarray(layer_windows_np(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg, kind: str, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    if cfg.attention_kind == "mla":
+        attn = attention.mla_init(k1, cfg, dtype)
+    else:
+        attn = attention.gqa_init(k1, cfg, dtype)
+    p = {
+        "ln1": common.rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn,
+        "ln2": common.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if kind == "moe":
+        p["moe"] = moe.moe_init(k2, cfg, dtype)
+    else:
+        d_ff = cfg.moe.dense_d_ff if (cfg.moe.enabled and cfg.moe.dense_d_ff) else cfg.d_ff
+        p["mlp"] = mlp.mlp_init(k2, cfg.d_model, d_ff, cfg.hidden_act, dtype,
+                                bias=cfg.use_bias)
+    return p
+
+
+def block_apply(p: Params, cfg, kind: str, x: jnp.ndarray, positions: jnp.ndarray,
+                window) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = common.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attention_kind == "mla":
+        attn_out = attention.mla_attend(p["attn"], cfg, h, positions)
+    elif x.shape[1] > CHUNKED_ATTN_THRESHOLD:
+        attn_out = attention.gqa_attend_chunked(p["attn"], cfg, h, positions,
+                                                window=window)
+    else:
+        attn_out = attention.gqa_attend(p["attn"], cfg, h, positions, window=window)
+    x = x + attn_out
+    h = common.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        b, s, d = h.shape
+        out, aux = moe.moe_apply(p["moe"], cfg, h.reshape(b * s, d),
+                                 cfg.moe.capacity_factor)
+        out = out.reshape(b, s, d)
+    else:
+        out, aux = mlp.mlp_apply(p["mlp"], h, cfg.hidden_act), jnp.zeros((), jnp.float32)
+    return x + out, aux
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class TransformerLM:
+    """Families: dense | moe | vlm. Pure-function methods over a param pytree."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.dtype = common.dtype_of(cfg.dtype)
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        kE, kH, *seg_keys = jax.random.split(key, 2 + len(segments(cfg)))
+        params: Params = {
+            "embed": common.embed_init(kE, cfg.padded_vocab, cfg.d_model, self.dtype),
+            "final_norm": common.rmsnorm_init(cfg.d_model, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = common.dense_init(kH, cfg.d_model, cfg.padded_vocab,
+                                                  self.dtype)
+        for (kind, count, _), sk in zip(segments(cfg), seg_keys):
+            keys = jax.random.split(sk, count)
+            params[f"seg_{kind}"] = jax.vmap(
+                lambda k: block_init(k, cfg, kind, self.dtype))(keys)
+        return params
+
+    # -- forward (train / prefill) -------------------------------------------
+
+    def _embed_inputs(self, params, tokens, prefix_embeds=None):
+        cfg = self.cfg
+        x = common.embed(params["embed"], tokens).astype(self.dtype)
+        if cfg.embed_scale != 1.0:
+            x = x * jnp.asarray(cfg.embed_scale, self.dtype)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(self.dtype), x], axis=1)
+        return x
+
+    def _run_segments(self, params, x, positions):
+        cfg = self.cfg
+        windows = layer_windows(cfg)
+        aux_total = jnp.zeros((), jnp.float32)
+        for kind, count, first in segments(cfg):
+            stacked = params[f"seg_{kind}"]
+            seg_windows = jax.lax.dynamic_slice_in_dim(windows, first, count)
+
+            def body(carry, xs, _kind=kind):
+                from repro.distributed.context import (constrain_activations,
+                                                       constrain_layer_params)
+                h, aux = carry
+                p_l, win = xs
+                p_l = constrain_layer_params(p_l)
+                h, a = block_apply(p_l, cfg, _kind, h, positions, win)
+                # sequence-parallel residual stream (no-op unless enabled):
+                # the scan carry is the saved activation under remat, so
+                # this constraint divides activation memory by |model|
+                h = constrain_activations(h)
+                return (h, aux + a), None
+
+            body = _remat_wrap(body, cfg.remat)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                             (stacked, seg_windows))
+        return x, aux_total
+
+    def forward(self, params, tokens, prefix_embeds=None) -> jnp.ndarray:
+        """tokens: [B, S_text] -> logits [B, S_total, V_padded]."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, tokens, prefix_embeds)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, aux = self._run_segments(params, x, positions)
+        x = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        out_w = self._output_weights(params)
+        return x @ out_w
+
+    def _output_weights(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"]["embedding"].T
+        return params["lm_head"]["w"]
+
+    # -- loss ----------------------------------------------------------------
+
+    def per_token_loss(self, params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Returns (per_token_loss [B, S_total], aux_loss scalar).
+
+        batch: tokens [B,S], labels [B,S] (-1 = masked), optional
+        prefix_embeds [B,P,d]. Prefix positions carry zero loss.
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        prefix = batch.get("prefix_embeds")
+        x = self._embed_inputs(params, tokens, prefix)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, aux = self._run_segments(params, x, positions)
+        x = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if prefix is not None:
+            p = prefix.shape[1]
+            pad_labels = jnp.full((labels.shape[0], p), -1, labels.dtype)
+            labels = jnp.concatenate([pad_labels, labels], axis=1)
+        b, s, d = x.shape
+        out_w = self._output_weights(params)
+        safe_labels = jnp.maximum(labels, 0)
+        if cfg.padded_vocab * s > 32_000_000:   # big logits: chunk over tokens
+            loss = common.chunked_cross_entropy(
+                x.reshape(b * s, d), out_w, safe_labels.reshape(b * s),
+                cfg.vocab_size).reshape(b, s)
+        else:
+            logits = x @ out_w
+            loss = common.softmax_cross_entropy(logits, safe_labels, cfg.vocab_size)
+        loss = jnp.where(labels >= 0, loss, 0.0)
+        return loss, aux
+
+    # -- decode (unrolled layers, per-layer caches) ---------------------------
+
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> Dict[str, Any]:
+        """dtype=jnp.int8 selects quantized GQA caches (per-token scales);
+        MLA caches stay bf16 — the latent is already 4-8x compressed."""
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        mla_dtype = jnp.bfloat16 if dtype == jnp.int8 else dtype
+        cache: Dict[str, Any] = {"lens": jnp.zeros((), jnp.int32)}
+        windows = [int(w) for w in layer_windows_np(cfg)]
+        for kind, count, first in segments(cfg):
+            layer_caches = []
+            for i in range(count):
+                w = windows[first + i]
+                s = min(max_len, w) if w > 0 else max_len
+                if cfg.attention_kind == "mla":
+                    layer_caches.append(attention.mla_init_cache(cfg, batch, s,
+                                                                 mla_dtype))
+                else:
+                    layer_caches.append(attention.gqa_init_cache(cfg, batch, s, dtype))
+            cache[f"seg_{kind}"] = layer_caches
+        return cache
+
+    def decode_step(self, params, token: jnp.ndarray, cache: Dict[str, Any]
+                    ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """token: [B, 1] -> (logits [B, V_padded], new cache).
+
+        Layers are unrolled; each layer's cache may have its own length
+        (window-limited for local layers). Window-limited caches use
+        position ``cache_len % window`` as a ring buffer.
+        """
+        cfg = self.cfg
+        cache = dict(cache)
+        cache_len = cache["lens"]
+        x = self._embed_inputs(params, token)
+        windows = [int(w) for w in layer_windows_np(cfg)]
+        for kind, count, first in segments(cfg):
+            stacked = params[f"seg_{kind}"]
+            seg_cache = list(cache[f"seg_{kind}"])
+            for i in range(count):
+                p_l = jax.tree_util.tree_map(lambda t: t[i], stacked)
+                w = windows[first + i]
+                x, seg_cache[i] = self._decode_block(p_l, cfg, kind, x,
+                                                     seg_cache[i], cache_len, w)
+            cache[f"seg_{kind}"] = seg_cache
+        x = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = (x @ self._output_weights(params))[:, 0]
+        cache["lens"] = cache_len + 1
+        return logits, cache
+
+    def _decode_block(self, p, cfg, kind, x, layer_cache, cache_len, window):
+        h = common.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        cache_size = (layer_cache["c_kv"] if cfg.attention_kind == "mla"
+                      else layer_cache["k"]).shape[1]
+        is_ring = window > 0 and cache_size <= window
+        if cfg.attention_kind == "mla":
+            attn_out, layer_cache = attention.mla_decode(
+                p["attn"], cfg, h, layer_cache, cache_len)
+        else:
+            # Ring-buffer local caches hold exactly the last `window` tokens:
+            # write at cache_len % size; every slot is valid once wrapped
+            # (validity in gqa_decode is kpos <= cache_len, trivially true),
+            # and RoPE still uses the true position cache_len.
+            attn_out, layer_cache = attention.gqa_decode(
+                p["attn"], cfg, h, layer_cache, cache_len,
+                window=0 if is_ring else window,
+                write_pos=cache_len % cache_size if is_ring else None)
+        x = x + attn_out
+        h = common.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if kind == "moe":
+            b = h.shape[0]
+            out, _ = moe.moe_apply(p["moe"], cfg, h.reshape(b, -1),
+                                   cfg.moe.capacity_factor)
+            out = out.reshape(b, 1, -1)
+        else:
+            out = mlp.mlp_apply(p["mlp"], h, cfg.hidden_act)
+        return x + out, layer_cache
+
+    def prefill(self, params, tokens, prefix_embeds=None):
+        """Prefill: run the stack, return ONLY the last position's logits
+        [B, V] (what a server samples from). The compute-dominant stack is
+        identical to forward(); projecting a single position avoids a
+        [B, S, V] logits buffer. ``tests/test_serve.py`` validates decode
+        correctness by stepping decode_step against forward()."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, tokens, prefix_embeds)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, _ = self._run_segments(params, x, positions)
+        x = common.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        return (x @ self._output_weights(params))[:, 0]
+
+
+def make(cfg) -> TransformerLM:
+    return TransformerLM(cfg)

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (Optimizer, adagrad, adam, clip_by_global_norm,
+                                    global_norm, make_optimizer, momentum,
+                                    rmsprop_momentum, sgd)
+from repro.optim import schedules

@@ -1,0 +1,166 @@
+"""Stochastic optimizers (pure JAX, optax-free by design).
+
+The paper's Inception runs use RMSProp-with-momentum (decay 0.9, momentum
+0.9); PixelCNN uses RMSProp (decay 0.95). SGD/momentum/Adam/AdaGrad round
+out the family the paper cites (Duchi 2011, Kingma & Ba 2014, Tieleman &
+Hinton 2012).
+
+Interface:
+    opt = make_optimizer(cfg, schedule)
+    state = opt.init(params)
+    new_params, new_state, stats = opt.apply(params, grads, state, step)
+
+All state is a pytree mirroring params — checkpointable and shardable with
+the same rules as the gradients (ZeRO-1 shards it over the data axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+State = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], State]
+    apply: Callable[[Params, Params, State, jnp.ndarray], Tuple[Params, State, Dict]]
+
+
+def _treemap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Paper §A.3: Async-Opt requires global-norm clipping; Sync does not."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return _treemap(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def _f32_like(params):
+    return _treemap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(schedule) -> Optimizer:
+    def init(params):
+        return {}
+
+    def apply(params, grads, state, step):
+        lr = schedule(step)
+        new = _treemap(lambda p, g: (p.astype(jnp.float32)
+                                     - lr * g.astype(jnp.float32)).astype(p.dtype),
+                       params, grads)
+        return new, state, {"lr": lr}
+
+    return Optimizer(init, apply)
+
+
+def momentum(schedule, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"m": _f32_like(params)}
+
+    def apply(params, grads, state, step):
+        lr = schedule(step)
+        m = _treemap(lambda m_, g: beta * m_ + g.astype(jnp.float32),
+                     state["m"], grads)
+        upd = (_treemap(lambda m_, g: beta * m_ + g.astype(jnp.float32), m, grads)
+               if nesterov else m)
+        new = _treemap(lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype),
+                       params, upd)
+        return new, {"m": m}, {"lr": lr}
+
+    return Optimizer(init, apply)
+
+
+def rmsprop_momentum(schedule, decay: float = 0.9, mom: float = 0.9,
+                     eps: float = 1e-8) -> Optimizer:
+    """The paper's optimizer (RMSProp w/ momentum, TF-style)."""
+
+    def init(params):
+        return {"ms": _f32_like(params), "mom": _f32_like(params)}
+
+    def apply(params, grads, state, step):
+        lr = schedule(step)
+        ms = _treemap(lambda s, g: decay * s + (1 - decay) * jnp.square(g.astype(jnp.float32)),
+                      state["ms"], grads)
+        mo = _treemap(lambda m_, s, g: mom * m_ + lr * g.astype(jnp.float32)
+                      / jnp.sqrt(s + eps),
+                      state["mom"], ms, grads)
+        new = _treemap(lambda p, m_: (p.astype(jnp.float32) - m_).astype(p.dtype),
+                       params, mo)
+        return new, {"ms": ms, "mom": mo}, {"lr": lr}
+
+    return Optimizer(init, apply)
+
+
+def adam(schedule, beta1: float = 0.9, beta2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": _f32_like(params), "v": _f32_like(params)}
+
+    def apply(params, grads, state, step):
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        m = _treemap(lambda m_, g: beta1 * m_ + (1 - beta1) * g.astype(jnp.float32),
+                     state["m"], grads)
+        v = _treemap(lambda v_, g: beta2 * v_ + (1 - beta2) * jnp.square(g.astype(jnp.float32)),
+                     state["v"], grads)
+        bc1 = 1 - beta1 ** t
+        bc2 = 1 - beta2 ** t
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new = _treemap(upd, params, m, v)
+        return new, {"m": m, "v": v}, {"lr": lr}
+
+    return Optimizer(init, apply)
+
+
+def adagrad(schedule, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return {"acc": _f32_like(params)}
+
+    def apply(params, grads, state, step):
+        lr = schedule(step)
+        acc = _treemap(lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+                       state["acc"], grads)
+        new = _treemap(lambda p, a, g: (p.astype(jnp.float32)
+                                        - lr * g.astype(jnp.float32)
+                                        / (jnp.sqrt(a) + eps)).astype(p.dtype),
+                       params, acc, grads)
+        return new, {"acc": acc}, {"lr": lr}
+
+    return Optimizer(init, apply)
+
+
+def make_optimizer(opt_cfg, schedule) -> Optimizer:
+    name = opt_cfg.name
+    if name == "sgd":
+        return sgd(schedule)
+    if name == "momentum":
+        return momentum(schedule, opt_cfg.momentum)
+    if name == "rmsprop_momentum":
+        return rmsprop_momentum(schedule, opt_cfg.decay, opt_cfg.momentum, opt_cfg.eps)
+    if name == "rmsprop":
+        return rmsprop_momentum(schedule, opt_cfg.decay, 0.0, opt_cfg.eps)
+    if name == "adam":
+        return adam(schedule, opt_cfg.beta1, opt_cfg.beta2, opt_cfg.eps,
+                    opt_cfg.weight_decay)
+    if name == "adagrad":
+        return adagrad(schedule)
+    raise ValueError(f"unknown optimizer {name!r}")

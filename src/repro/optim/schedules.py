@@ -1,0 +1,61 @@
+"""Learning-rate schedules from the paper's appendices.
+
+A.2/A.3 (Inception): lr(t) = γ0 · β^(t·N/(2T)), β=0.94, γ0 = 0.045·N for
+Sync-Opt — the decay exponent is scaled by N so that the lr after a fixed
+number of *datapoints* matches between Sync and Async.
+A.1 (MNIST): constant then linear anneal to 0 over the last epochs.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_decay(gamma0: float, beta: float, steps_per_epoch: int,
+                      num_workers: int = 1) -> Schedule:
+    """Paper: gamma0 * beta^(t*N/(2T)); T = |X|/B steps per epoch."""
+    def fn(step):
+        t = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        exponent = t * num_workers / (2.0 * max(steps_per_epoch, 1))
+        return jnp.asarray(gamma0, jnp.float32) * jnp.power(beta, exponent)
+    return fn
+
+
+def linear_anneal(lr: float, total_steps: int, anneal_from: int) -> Schedule:
+    """Constant lr, then linearly annealed to 0 (paper A.1 MNIST recipe)."""
+    def fn(step):
+        t = jnp.asarray(step, jnp.float32)
+        frac = jnp.clip((total_steps - t) / max(total_steps - anneal_from, 1),
+                        0.0, 1.0)
+        return jnp.asarray(lr, jnp.float32) * jnp.where(t < anneal_from, 1.0, frac)
+    return fn
+
+
+def warmup(base: Schedule, warmup_steps: int) -> Schedule:
+    if warmup_steps <= 0:
+        return base
+    def fn(step):
+        t = jnp.asarray(step, jnp.float32)
+        scale = jnp.clip(t / warmup_steps, 0.0, 1.0)
+        return base(step) * scale
+    return fn
+
+
+def from_config(opt_cfg, num_workers: int = 1) -> Schedule:
+    """Build the paper-faithful schedule from an OptimizerConfig."""
+    gamma0 = opt_cfg.learning_rate
+    if opt_cfg.scale_lr_with_workers:
+        gamma0 = gamma0 * num_workers          # paper's 0.045*N rule
+    if opt_cfg.steps_per_epoch > 0:
+        sched = exponential_decay(gamma0, opt_cfg.lr_decay_rate,
+                                  opt_cfg.steps_per_epoch, num_workers)
+    else:
+        sched = constant(gamma0)
+    return warmup(sched, opt_cfg.warmup_steps)

@@ -1,0 +1,188 @@
+"""The Trainer: SPMD steps driven by the straggler simulator, with
+checkpoint/restart, failure injection, and elastic rescaling.
+
+Per step:
+  1. the StragglerSimulator samples worker arrival times and the strategy
+     selects the mask + iteration time (simulated seconds);
+  2. the data pipeline emits the global batch (worker-sharded rows);
+  3. the jitted SPMD step applies the masked aggregation + optimizer + EMA;
+  4. on checkpoint cadence, state is committed atomically.
+
+Failure handling: a dead worker's gradient simply never arrives (mask
+stays False). While alive >= N the protocol absorbs it with zero downtime
+(the paper's point). When alive < N, the Trainer executes an elastic
+restart from the last checkpoint with the reduced worker count and the
+paper's lr rule re-applied.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig, replace
+from repro.core import aggregation as agg_lib
+from repro.core import ema as ema_lib
+from repro.core.events import StragglerSimulator
+from repro.core.straggler import LatencyModel, PaperCalibrated
+from repro.data.synthetic_lm import SyntheticLMConfig, SyntheticLMPipeline, PipelineState
+from repro.models import get_model
+from repro.optim import make_optimizer, schedules
+from repro.train import checkpoint as ckpt_lib
+from repro.train import elastic
+from repro.train.train_step import build_train_step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    ema: Any
+    metrics: List[Dict]
+    sim_time: float
+    steps: int
+    restarts: int
+
+
+class Trainer:
+    def __init__(self, cfg: TrainConfig, latency: Optional[LatencyModel] = None,
+                 data_cfg: Optional[SyntheticLMConfig] = None):
+        self.cfg = cfg
+        self.latency = latency or PaperCalibrated()
+        self.restarts = 0
+        self.sim_time = 0.0
+        self.metrics: List[Dict] = []
+        w = cfg.aggregation.total_workers
+        self.data_cfg = data_cfg or SyntheticLMConfig(
+            vocab_size=cfg.model.vocab_size, seq_len=cfg.shape.seq_len,
+            global_batch=cfg.shape.global_batch, num_workers=w, seed=cfg.seed)
+        self._build()
+
+    # -- construction ---------------------------------------------------------
+
+    def _build(self) -> None:
+        cfg = self.cfg
+        self.model = get_model(cfg.model)
+        self.strategy = agg_lib.from_config(cfg.aggregation)
+        self.sim = StragglerSimulator(self.strategy, self.latency, cfg.seed)
+        sched = schedules.from_config(cfg.optimizer, cfg.aggregation.num_workers)
+        self.optimizer = make_optimizer(cfg.optimizer, sched)
+        self.pipeline = SyntheticLMPipeline(
+            dataclasses.replace(self.data_cfg,
+                                num_workers=cfg.aggregation.total_workers))
+        step_fn = build_train_step(
+            self.model, self.optimizer,
+            num_workers=cfg.aggregation.total_workers,
+            n_aggregate=cfg.aggregation.num_workers,
+            ema_decay=cfg.optimizer.ema_decay,
+            clip_norm=cfg.optimizer.clip_global_norm)
+        self.train_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+        self.step = 0
+
+    def init_state(self, seed: Optional[int] = None) -> None:
+        key = jax.random.PRNGKey(self.cfg.seed if seed is None else seed)
+        self.params = self.model.init(key)
+        self.opt_state = self.optimizer.init(self.params)
+        self.ema = (ema_lib.init(self.params)
+                    if self.cfg.optimizer.ema_decay > 0 else None)
+
+    # -- checkpointing --------------------------------------------------------
+
+    def _state_tree(self):
+        tree = {"params": self.params, "opt": self.opt_state}
+        if self.ema is not None:
+            tree["ema"] = self.ema
+        return tree
+
+    def save_checkpoint(self) -> str:
+        meta = {
+            "data_state": self.pipeline.state.save(),
+            "num_workers": self.cfg.aggregation.num_workers,
+            "backup_workers": self.cfg.aggregation.backup_workers,
+            "sim_time": self.sim_time,
+            "restarts": self.restarts,
+        }
+        return ckpt_lib.save(self.cfg.checkpoint.directory, self.step,
+                             self._state_tree(), meta, self.cfg.checkpoint.keep)
+
+    def restore_checkpoint(self, step: Optional[int] = None) -> None:
+        tree, manifest = ckpt_lib.restore(self.cfg.checkpoint.directory,
+                                          self._template(), step)
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.ema = tree.get("ema")
+        self.step = int(manifest["step"])
+        self.sim_time = float(manifest.get("sim_time", 0.0))
+        self.restarts = int(manifest.get("restarts", 0))
+        self.pipeline.state = PipelineState.restore(manifest["data_state"])
+        # replay-exact resume: the straggler simulator is deterministic in
+        # (seed, step), so aligning its step restores the arrival sequence
+        self.sim._step = self.step
+
+    def _template(self):
+        key = jax.random.PRNGKey(0)
+        params_t = jax.eval_shape(self.model.init, key)
+        opt_t = jax.eval_shape(self.optimizer.init, params_t)
+        tree = {"params": params_t, "opt": opt_t}
+        if self.cfg.optimizer.ema_decay > 0:
+            tree["ema"] = jax.eval_shape(ema_lib.init, params_t)
+        return tree
+
+    # -- elastic rescale ------------------------------------------------------
+
+    def rescale(self, new_total: int) -> None:
+        """Checkpoint, rebuild for `new_total` workers, restore, continue.
+
+        new_total is rounded down to a divisor of the global batch so the
+        per-worker shard stays integral.
+        """
+        w = max(1, new_total)
+        while self.cfg.shape.global_batch % w:
+            w -= 1
+        self.save_checkpoint()
+        prev_restarts = self.restarts
+        plan = elastic.plan_rescale(self.cfg, w)
+        self.cfg = elastic.apply_rescale(self.cfg, plan)
+        self._build()
+        self.restore_checkpoint()
+        self.restarts = prev_restarts + 1
+
+    # -- the loop -------------------------------------------------------------
+
+    def run(self, num_steps: int, kill_worker_at: Optional[Dict[int, int]] = None,
+            min_alive_behavior: str = "rescale") -> TrainResult:
+        """kill_worker_at: {step: worker_id} failure injections."""
+        kill_worker_at = kill_worker_at or {}
+        target = self.step + num_steps
+        while self.step < target:
+            if self.step in kill_worker_at:
+                self.sim.kill_worker(kill_worker_at[self.step])
+            if self.sim.alive < self.cfg.aggregation.num_workers:
+                if min_alive_behavior == "rescale":
+                    self.rescale(self.sim.alive)
+                    continue
+                raise RuntimeError("insufficient live workers")
+            ev = self.sim.next_event()
+            batch_np = self.pipeline.next()
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            mask = jnp.asarray(ev.mask)
+            self.params, self.opt_state, self.ema, m = self.train_step(
+                self.params, self.opt_state, self.ema,
+                jnp.asarray(self.step, jnp.int32), batch, mask)
+            self.sim_time += ev.iteration_time
+            self.step += 1
+            if self.step % self.cfg.log_every == 0 or self.step == target:
+                rec = {"step": self.step, "sim_time": self.sim_time,
+                       "selected": int(ev.mask.sum()),
+                       **{k: float(v) for k, v in m.items()}}
+                self.metrics.append(rec)
+            if (self.cfg.checkpoint.every_steps > 0
+                    and self.step % self.cfg.checkpoint.every_steps == 0):
+                self.save_checkpoint()
+        return TrainResult(self.params, self.ema, self.metrics, self.sim_time,
+                           self.step, self.restarts)

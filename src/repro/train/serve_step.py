@@ -1,0 +1,85 @@
+"""Serving steps: prefill and single-token decode with KV caches.
+
+``decode_32k`` / ``long_500k`` cells lower ``serve_step`` — one new token
+against a cache of seq_len. long_500k (batch=1) uses sequence-parallel
+caches: the KV sequence axis is sharded over the data axis and the softmax
+reductions lower to partial-softmax psums (see distributed.sharding).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def build_decode_step(model) -> Callable:
+    def decode_step(params, token, cache):
+        return model.decode_step(params, token, cache)
+    return decode_step
+
+
+def build_prefill(model) -> Callable:
+    def prefill(params, batch):
+        kwargs = {}
+        if "prefix_embeds" in batch:
+            kwargs["prefix_embeds"] = batch["prefix_embeds"]
+        if "encoder_frames" in batch:
+            kwargs["encoder_frames"] = batch["encoder_frames"]
+        return model.prefill(params, batch["tokens"], **kwargs)
+    return prefill
+
+
+def decode_input_specs(model, cfg, shape, cache_dtype=None) -> Dict[str, Any]:
+    """ShapeDtypeStructs for (token, cache) at a decode shape cell.
+
+    cache_dtype=jnp.int8 lowers the quantized-KV decode variant."""
+    b, s = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(b, s, cache_dtype))
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": cache_shapes,
+    }
+
+
+def prefill_input_specs(cfg, shape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        p = cfg.num_prefix_embeds
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s - p), jnp.int32)
+        batch["prefix_embeds"] = jax.ShapeDtypeStruct((b, p, cfg.d_model),
+                                                      jnp.bfloat16)
+    elif cfg.family == "audio":
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        batch["encoder_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return {"batch": batch}
+
+
+def greedy_generate(model, params, prompt: jnp.ndarray, num_tokens: int,
+                    max_len: int, **prefill_kwargs):
+    """Reference generation loop (tests + examples; not the perf path).
+
+    Prefills by running decode_step over the prompt tokens one by one, then
+    greedily decodes ``num_tokens`` more.
+    """
+    b, plen = prompt.shape
+    cache = model.init_cache(b, max_len)
+    if prefill_kwargs.get("encoder_frames") is not None:
+        cache = model.prime_cross_cache(params, cache,
+                                        prefill_kwargs["encoder_frames"])
+    logits = None
+    for i in range(plen):
+        logits, cache = model.decode_step(params, prompt[:, i:i + 1], cache)
+    out = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(prompt.dtype)
+    for _ in range(num_tokens):
+        out.append(tok)
+        logits, cache = model.decode_step(params, tok, cache)
+        tok = jnp.argmax(logits, -1)[:, None].astype(prompt.dtype)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,167 @@
+"""SPMD train-step builder: model + optimizer + the paper's aggregation.
+
+The step signature is
+
+    (params, opt_state, ema, step, batch, mask) ->
+        (params, opt_state, ema, metrics)
+
+where ``mask`` is the [W] backup-worker selection for THIS step (host-
+computed by the StragglerSimulator; all-ones for plain Sync-Opt). The
+masked aggregation is realized by weighting per-example losses (see
+repro.core.sync_backup) so the normal data-parallel gradient psum performs
+Alg. 4's "mean of the fastest N" exactly.
+
+Sync-Opt needs no gradient clipping (paper §A.3) — clipping is only
+applied when the config asks for it (the async simulator does).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ema as ema_lib
+from repro.core import sync_backup
+from repro.optim import optimizers as opt_lib
+
+
+def make_loss_fn(model, num_workers: int, n_aggregate: int) -> Callable:
+    """Builds loss(params, batch, mask) -> (scalar, metrics)."""
+
+    def loss_fn(params, batch, mask):
+        per_tok, aux = model.per_token_loss(params, batch)
+        labels = batch["labels"]
+        if per_tok.shape[1] != labels.shape[1]:       # vlm prefix positions
+            pad = per_tok.shape[1] - labels.shape[1]
+            labels = jnp.concatenate(
+                [jnp.full((labels.shape[0], pad), -1, labels.dtype), labels], 1)
+        valid = (labels >= 0).astype(jnp.float32)
+        per_ex = (jnp.sum(per_tok * valid, axis=-1)
+                  / jnp.maximum(jnp.sum(valid, axis=-1), 1.0))
+        main = sync_backup.weighted_loss(per_ex, mask, n_aggregate)
+        # monitoring loss: plain mean over the *selected* workers — divide
+        # by the realized selection fraction so Timeout's variable counts
+        # don't skew the reading
+        sel = jnp.sum(per_ex * sync_backup.per_example_weights(
+            mask, per_ex.shape[0], n_aggregate))
+        frac = jnp.sum(mask.astype(jnp.float32)) / n_aggregate
+        total = main + aux
+        metrics = {"loss": sel / jnp.maximum(frac, 1e-6), "aux_loss": aux}
+        return total, metrics
+
+    return loss_fn
+
+
+def _microbatch_split(batch: Dict[str, jnp.ndarray], num_workers: int,
+                      num_microbatches: int) -> Dict[str, jnp.ndarray]:
+    """[B, ...] -> [M, B/M, ...] such that every microbatch contains an
+    equal slice of EVERY worker's shard (workers own contiguous row blocks,
+    so the mask-weighted aggregation stays exact per microbatch)."""
+    def split(x):
+        b = x.shape[0]
+        per = b // num_workers
+        per_mb = per // num_microbatches
+        x = x.reshape((num_workers, num_microbatches, per_mb) + x.shape[1:])
+        x = jnp.swapaxes(x, 0, 1)
+        return x.reshape((num_microbatches, num_workers * per_mb) + x.shape[3:])
+
+    return jax.tree_util.tree_map(split, batch)
+
+
+def build_train_step(model, optimizer: opt_lib.Optimizer, *, num_workers: int,
+                     n_aggregate: int, ema_decay: float = 0.0,
+                     clip_norm: float = 0.0, num_microbatches: int = 1,
+                     grad_shardings: Any = None) -> Callable:
+    """num_microbatches > 1 enables gradient accumulation: the batch is
+    scanned in M slices and per-microbatch gradients are accumulated in an
+    f32 tree. When ``grad_shardings`` is given, the accumulator is
+    constrained to it (data-axes sharded => the DP all-reduce becomes a
+    reduce-scatter and the accumulator stays ZeRO-2-sharded)."""
+    loss_fn = make_loss_fn(model, num_workers, n_aggregate)
+
+    def compute_grads(params, batch, mask):
+        if num_microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, mask)
+            if grad_shardings is not None:
+                grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+            return grads, metrics
+
+        mb = _microbatch_split(batch, num_workers, num_microbatches)
+
+        def body(acc, mb_batch):
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb_batch, mask)
+            if grad_shardings is not None:
+                g = jax.lax.with_sharding_constraint(g, grad_shardings)
+            acc = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(jnp.float32), acc, g)
+            return acc, metrics
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if grad_shardings is not None:
+            zeros = jax.lax.with_sharding_constraint(zeros, grad_shardings)
+        acc, metrics_stack = jax.lax.scan(body, zeros, mb)
+        grads = jax.tree_util.tree_map(lambda a: a / num_microbatches, acc)
+        metrics = jax.tree_util.tree_map(jnp.mean, metrics_stack)
+        return grads, metrics
+
+    def train_step(params, opt_state, ema_state, step, batch, mask):
+        grads, metrics = compute_grads(params, batch, mask)
+        if clip_norm > 0:
+            grads, gnorm = opt_lib.clip_by_global_norm(grads, clip_norm)
+            metrics["grad_norm"] = gnorm
+        new_params, new_opt, stats = optimizer.apply(params, grads, opt_state, step)
+        metrics.update(stats)
+        if ema_decay > 0:
+            ema_state = ema_lib.update(ema_state, new_params, ema_decay)
+        return new_params, new_opt, ema_state, metrics
+
+    return train_step
+
+
+def build_eval_step(model) -> Callable:
+    def eval_step(params, batch):
+        per_tok, _ = model.per_token_loss(params, batch)
+        labels = batch["labels"]
+        if per_tok.shape[1] != labels.shape[1]:
+            pad = per_tok.shape[1] - labels.shape[1]
+            labels = jnp.concatenate(
+                [jnp.full((labels.shape[0], pad), -1, labels.dtype), labels], 1)
+        valid = (labels >= 0).astype(jnp.float32)
+        return jnp.sum(per_tok * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs for lowering — shannon/kernels pattern)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg, shape, *, num_workers: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every train-step input."""
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        p = cfg.num_prefix_embeds
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s - p), jnp.int32)
+        batch["labels"] = jax.ShapeDtypeStruct((b, s - p), jnp.int32)
+        batch["prefix_embeds"] = jax.ShapeDtypeStruct((b, p, cfg.d_model),
+                                                      jnp.bfloat16)
+    elif cfg.family == "audio":
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        batch["encoder_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return {
+        "batch": batch,
+        "mask": jax.ShapeDtypeStruct((num_workers,), jnp.bool_),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,72 @@
+"""Strategy semantics: FullSync / BackupWorkers / Timeout selection rules."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation
+from repro.configs.base import AggregationConfig
+
+
+arrivals_strategy = st.lists(
+    st.floats(min_value=0.01, max_value=500.0, allow_nan=False),
+    min_size=5, max_size=32).map(np.array)
+
+
+@given(arr=arrivals_strategy)
+@settings(max_examples=30, deadline=None)
+def test_backup_selects_fastest_n(arr):
+    n = max(1, len(arr) - 2)
+    s = aggregation.BackupWorkers(n, len(arr) - n)
+    mask, t = s.select(arr)
+    assert mask.sum() == n
+    assert t == pytest.approx(np.sort(arr)[n - 1])
+    # invariance: selected set == argsort prefix
+    assert set(np.where(mask)[0]) == set(np.argsort(arr, kind="stable")[:n])
+
+
+@given(arr=arrivals_strategy)
+@settings(max_examples=30, deadline=None)
+def test_fullsync_waits_for_max(arr):
+    s = aggregation.FullSync(len(arr))
+    mask, t = s.select(arr)
+    assert mask.all()
+    assert t == pytest.approx(arr.max())
+
+
+@given(arr=arrivals_strategy, d=st.floats(0.0, 10.0))
+@settings(max_examples=30, deadline=None)
+def test_timeout_always_selects_at_least_one(arr, d):
+    s = aggregation.Timeout(len(arr), d)
+    mask, t = s.select(arr)
+    assert mask.sum() >= 1
+    assert mask[np.argmin(arr)]
+    assert t <= arr.min() + d + 1e-9
+
+
+def test_backup_faster_than_fullsync():
+    """The point of the paper: dropping b stragglers cuts iteration time."""
+    rng = np.random.RandomState(0)
+    arr = rng.exponential(1.0, size=(1000, 100)) + 1.0
+    arr[:, 0] *= 50                      # a consistent straggler
+    full = aggregation.FullSync(100)
+    backup = aggregation.BackupWorkers(96, 4)
+    t_full = np.mean([full.select(a)[1] for a in arr])
+    t_backup = np.mean([backup.select(a)[1] for a in arr])
+    assert t_backup < t_full * 0.6
+
+
+def test_from_config():
+    s = aggregation.from_config(AggregationConfig(strategy="backup",
+                                                  num_workers=6,
+                                                  backup_workers=2))
+    assert isinstance(s, aggregation.BackupWorkers)
+    assert s.total_workers == 8
+    s = aggregation.from_config(AggregationConfig(strategy="full_sync",
+                                                  num_workers=4))
+    assert isinstance(s, aggregation.FullSync)
+    s = aggregation.from_config(AggregationConfig(strategy="timeout",
+                                                  num_workers=4,
+                                                  deadline_s=1.0))
+    assert isinstance(s, aggregation.Timeout)
+    with pytest.raises(ValueError):
+        aggregation.from_config(AggregationConfig(strategy="async"))

@@ -1,0 +1,108 @@
+"""Async-Opt / staleness simulators (paper Alg. 1/2 and §2.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import async_sim
+from repro.core.straggler import Uniform
+
+
+def _quadratic_problem(dim=8, seed=0):
+    """Least squares: loss(w) = ||Xw - y||^2 / B — a convex sandbox."""
+    rng = np.random.RandomState(seed)
+    x_all = rng.randn(4096, dim).astype(np.float32)
+    w_true = rng.randn(dim).astype(np.float32)
+    y_all = x_all @ w_true + 0.01 * rng.randn(4096).astype(np.float32)
+
+    def batch_fn_factory():
+        def batch(worker, draw):
+            r = np.random.RandomState(worker * 100003 + draw)
+            idx = r.randint(0, 4096, size=32)
+            return {"x": jnp.asarray(x_all[idx]), "y": jnp.asarray(y_all[idx])}
+        return batch
+
+    @jax.jit
+    def grad_fn(params, batch):
+        def loss(p):
+            return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+        l, g = jax.value_and_grad(loss)(params)
+        return l, g
+
+    def update_fn(params, opt_state, grads, step):
+        lr = 0.05
+        new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        return new, opt_state
+
+    params0 = {"w": jnp.zeros(dim)}
+    return grad_fn, update_fn, params0, batch_fn_factory(), w_true
+
+
+def test_staleness_zero_is_serial_sgd():
+    """tau=0 must be BIT-EXACT serial SGD."""
+    grad_fn, update_fn, params0, batch, _ = _quadratic_problem()
+
+    res = async_sim.simulate_staleness(
+        grad_fn, update_fn, params0, lambda s: batch(0, s), num_updates=50,
+        staleness=0)
+
+    params = params0
+    for s in range(50):
+        _, g = grad_fn(params, batch(0, s))
+        params, _ = update_fn(params, None, g, s)
+    np.testing.assert_array_equal(np.asarray(res.params["w"]),
+                                  np.asarray(params["w"]))
+    assert (res.staleness == 0).all()
+
+
+def test_staleness_degrades_convergence():
+    """Paper Fig. 2: more staleness => worse optimum at fixed budget."""
+    grad_fn, update_fn, params0, batch, w_true = _quadratic_problem()
+
+    def final_err(tau):
+        res = async_sim.simulate_staleness(
+            grad_fn, update_fn, params0, lambda s: batch(0, s),
+            num_updates=150, staleness=tau, ramp_steps=30)
+        return float(np.linalg.norm(np.asarray(res.params["w"]) - w_true))
+
+    errs = [final_err(tau) for tau in (0, 8, 24)]
+    assert errs[0] < errs[1] < errs[2]
+
+
+def test_staleness_ramp_schedule():
+    assert async_sim.staleness_schedule(0, 20, 100) == 1
+    assert async_sim.staleness_schedule(49, 20, 100) == 10
+    assert async_sim.staleness_schedule(99, 20, 100) == 20
+    assert async_sim.staleness_schedule(500, 20, 100) == 20
+    assert async_sim.staleness_schedule(5, 0, 100) == 0
+
+
+def test_async_staleness_tracks_worker_count():
+    """Alg. 1/2: average staleness ~= number of workers (paper Table 1)."""
+    grad_fn, update_fn, params0, batch, _ = _quadratic_problem()
+    for w in (4, 8):
+        res = async_sim.simulate_async(
+            grad_fn, update_fn, params0, batch, num_workers=w,
+            num_updates=300, latency=Uniform(1.0, 1.2), seed=0)
+        mean_st = res.staleness[50:].mean()
+        assert w - 2 <= mean_st <= w + 2, (w, mean_st)
+
+
+def test_async_converges_on_convex():
+    grad_fn, update_fn, params0, batch, w_true = _quadratic_problem()
+    res = async_sim.simulate_async(grad_fn, update_fn, params0, batch,
+                                   num_workers=4, num_updates=400,
+                                   latency=Uniform(1.0, 2.0))
+    err = np.linalg.norm(np.asarray(res.params["w"]) - w_true)
+    assert err < 0.2
+    assert res.sim_time.shape == (400,)
+    assert (np.diff(res.sim_time) >= 0).all()
+
+
+def test_softsync_runs_and_converges():
+    grad_fn, update_fn, params0, batch, w_true = _quadratic_problem()
+    res = async_sim.simulate_softsync(grad_fn, update_fn, params0, batch,
+                                      num_workers=4, c=2, num_updates=200,
+                                      latency=Uniform(1.0, 2.0))
+    err = np.linalg.norm(np.asarray(res.params["w"]) - w_true)
+    assert err < 0.5

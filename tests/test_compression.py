@@ -1,0 +1,66 @@
+"""Gradient compression: error bounds + error-feedback telescoping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed import compression as comp
+
+
+def _tree(seed=0, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    return {"a": scale * jax.random.normal(k1, (64,)),
+            "b": {"c": scale * jax.random.normal(k2, (8, 8))}}
+
+
+def test_bf16_roundtrip_error():
+    t = _tree()
+    rt = comp.decompress_bf16(comp.compress_bf16(t))
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(rt)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-2)
+
+
+@given(scale=st.floats(1e-3, 1e3))
+@settings(max_examples=10, deadline=None)
+def test_int8_error_bound(scale):
+    """Quantization error <= scale_step/2 = max|g|/254 per element."""
+    t = _tree(scale=scale)
+    rt = comp.decompress_int8(comp.compress_int8(t))
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(rt)):
+        bound = float(jnp.abs(a).max()) / 127.0 * 0.51
+        assert float(jnp.abs(a - b).max()) <= bound + 1e-9
+
+
+def test_error_feedback_telescopes():
+    """sum_t deq(q_t) -> sum_t g_t : the residual is carried, so the total
+    applied update differs from the true sum only by the FINAL residual."""
+    grads = [_tree(seed=i) for i in range(20)]
+    e = comp.init_error_feedback(grads[0])
+    applied = jax.tree_util.tree_map(jnp.zeros_like, grads[0])
+    true_sum = jax.tree_util.tree_map(jnp.zeros_like, grads[0])
+    for g in grads:
+        c, e = comp.compress_with_error_feedback(g, e)
+        deq = comp.decompress_int8(c)
+        applied = jax.tree_util.tree_map(jnp.add, applied, deq)
+        true_sum = jax.tree_util.tree_map(jnp.add, true_sum, g)
+    for a, t, r in zip(jax.tree_util.tree_leaves(applied),
+                       jax.tree_util.tree_leaves(true_sum),
+                       jax.tree_util.tree_leaves(e)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(t - r),
+                                   rtol=1e-4, atol=1e-5)
+        # and the residual is bounded by one quantization step
+        assert float(jnp.abs(r).max()) < 0.2
+
+
+def test_compressed_bytes_accounting():
+    t = _tree()
+    n = 64 + 64
+    assert comp.compressed_bytes(t, "none") == 4 * n
+    assert comp.compressed_bytes(t, "bf16") == 2 * n
+    assert comp.compressed_bytes(t, "int8_ef") == n + 8
+    with pytest.raises(ValueError):
+        comp.compressed_bytes(t, "fp4")

@@ -1,0 +1,122 @@
+"""Optimizers vs hand-computed reference math; paper lr schedules; EMA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ema as ema_lib
+from repro.optim import optimizers as opt_lib
+from repro.optim import schedules
+
+
+def _p():
+    return {"a": jnp.asarray([1.0, -2.0]), "b": jnp.asarray([[0.5]])}
+
+
+def _g():
+    return {"a": jnp.asarray([0.1, 0.2]), "b": jnp.asarray([[-0.3]])}
+
+
+def test_sgd_math():
+    opt = opt_lib.sgd(schedules.constant(0.1))
+    s = opt.init(_p())
+    new, s, _ = opt.apply(_p(), _g(), s, jnp.asarray(0))
+    np.testing.assert_allclose(new["a"], [1.0 - 0.01, -2.0 - 0.02], rtol=1e-6)
+
+
+def test_momentum_math():
+    opt = opt_lib.momentum(schedules.constant(0.1), beta=0.9)
+    p, s = _p(), None
+    s = opt.init(p)
+    p, s, _ = opt.apply(p, _g(), s, jnp.asarray(0))
+    p, s, _ = opt.apply(p, _g(), s, jnp.asarray(1))
+    # m1 = g; m2 = 0.9 g + g = 1.9 g; p = p0 - lr(g + 1.9g)
+    np.testing.assert_allclose(p["a"][0], 1.0 - 0.1 * (0.1 + 0.19), rtol=1e-5)
+    np.testing.assert_allclose(p["a"][1], -2.0 - 0.1 * (0.2 + 0.38), rtol=1e-5)
+
+
+def test_rmsprop_momentum_math():
+    """The paper's optimizer (TF-style RMSProp with momentum)."""
+    opt = opt_lib.rmsprop_momentum(schedules.constant(0.5), decay=0.9,
+                                   mom=0.9, eps=1e-8)
+    p = {"w": jnp.asarray([2.0])}
+    g = {"w": jnp.asarray([1.0])}
+    s = opt.init(p)
+    p1, s, _ = opt.apply(p, g, s, jnp.asarray(0))
+    ms = 0.1
+    mom = 0.5 * 1.0 / np.sqrt(ms + 1e-8)
+    np.testing.assert_allclose(p1["w"], 2.0 - mom, rtol=1e-5)
+    p2, s, _ = opt.apply(p1, g, s, jnp.asarray(1))
+    ms2 = 0.9 * ms + 0.1
+    mom2 = 0.9 * mom + 0.5 / np.sqrt(ms2 + 1e-8)
+    np.testing.assert_allclose(p2["w"], p1["w"] - mom2, rtol=1e-5)
+
+
+def test_adam_math():
+    opt = opt_lib.adam(schedules.constant(0.1))
+    p = {"w": jnp.asarray([1.0])}
+    g = {"w": jnp.asarray([0.5])}
+    s = opt.init(p)
+    p1, _, _ = opt.apply(p, g, s, jnp.asarray(0))
+    # bias-corrected first step: update = lr * g/|g| = lr (for eps->0)
+    np.testing.assert_allclose(p1["w"], 1.0 - 0.1, rtol=1e-4)
+
+
+def test_adagrad_math():
+    opt = opt_lib.adagrad(schedules.constant(1.0))
+    p = {"w": jnp.asarray([0.0])}
+    g = {"w": jnp.asarray([2.0])}
+    s = opt.init(p)
+    p1, s, _ = opt.apply(p, g, s, jnp.asarray(0))
+    np.testing.assert_allclose(p1["w"], -1.0, rtol=1e-5)   # g/sqrt(g^2)
+    p2, _, _ = opt.apply(p1, g, s, jnp.asarray(1))
+    np.testing.assert_allclose(p2["w"], -1.0 - 2 / np.sqrt(8), rtol=1e-5)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}   # norm 5
+    clipped, norm = opt_lib.clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(norm, 5.0, rtol=1e-6)
+    np.testing.assert_allclose(clipped["a"], [0.6], rtol=1e-5)
+    unclipped, _ = opt_lib.clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(unclipped["a"], [3.0], rtol=1e-6)
+
+
+def test_paper_exponential_schedule():
+    """A.3: gamma0 * beta^(t N / 2T)."""
+    sched = schedules.exponential_decay(4.5, 0.94, steps_per_epoch=100,
+                                        num_workers=50)
+    assert float(sched(jnp.asarray(0))) == pytest.approx(4.5)
+    t = 40
+    expected = 4.5 * 0.94 ** (t * 50 / 200)
+    assert float(sched(jnp.asarray(t))) == pytest.approx(expected, rel=1e-5)
+
+
+def test_lr_scaling_rule():
+    """A.3: gamma0 = 0.045 * N for Sync-Opt."""
+    from repro.configs.base import OptimizerConfig
+    cfg = OptimizerConfig(learning_rate=0.045, scale_lr_with_workers=True)
+    sched = schedules.from_config(cfg, num_workers=100)
+    assert float(sched(jnp.asarray(0))) == pytest.approx(4.5)
+
+
+def test_linear_anneal():
+    sched = schedules.linear_anneal(0.1, total_steps=100, anneal_from=50)
+    assert float(sched(jnp.asarray(10))) == pytest.approx(0.1)
+    assert float(sched(jnp.asarray(75))) == pytest.approx(0.05)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(0.0)
+
+
+def test_warmup():
+    sched = schedules.warmup(schedules.constant(1.0), 10)
+    assert float(sched(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(sched(jnp.asarray(20))) == pytest.approx(1.0)
+
+
+def test_ema_math_and_no_aliasing():
+    p = {"w": jnp.asarray([1.0])}
+    e = ema_lib.init(p)
+    assert e["w"] is not p["w"]                 # donation-safety copy
+    p2 = {"w": jnp.asarray([2.0])}
+    e = ema_lib.update(e, p2, 0.9)
+    np.testing.assert_allclose(e["w"], [0.9 * 1.0 + 0.1 * 2.0], rtol=1e-6)

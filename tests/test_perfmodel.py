@@ -1,0 +1,119 @@
+"""Analytic FLOP/byte model: internal invariants + HLO cross-validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.analysis import perfmodel
+from repro.configs.base import ShapeConfig, SHAPES_BY_NAME, replace
+
+
+@given(seq=st.integers(2, 4096), window=st.integers(0, 4096))
+@settings(max_examples=50, deadline=None)
+def test_avg_kv_bounds(seq, window):
+    v = perfmodel._avg_kv(seq, window)
+    assert 1.0 <= v <= (seq + 1) / 2 + 1e-9
+    if 0 < window < seq:
+        assert v <= window
+    # exact check against brute force
+    w = window if window > 0 else seq
+    brute = np.mean([min(i + 1, w) for i in range(seq)])
+    assert v == pytest.approx(brute, rel=1e-9)
+
+
+def test_flops_scaling_relations():
+    shape = SHAPES_BY_NAME["train_4k"]
+    cfg = configs.get_config("qwen3-0.6b")
+    f1 = perfmodel.cell_flops(cfg, shape)
+    f2 = perfmodel.cell_flops(replace(cfg, num_layers=2 * cfg.num_layers), shape)
+    assert f2.fwd_layers == pytest.approx(2 * f1.fwd_layers, rel=1e-6)
+    # remat adds exactly one forward of the layer stack
+    f_none = perfmodel.cell_flops(cfg, shape, remat="none")
+    assert f1.train - f_none.train == pytest.approx(f1.fwd_layers, rel=1e-6)
+
+
+def test_moe_flops_use_active_params():
+    shape = SHAPES_BY_NAME["train_4k"]
+    cfg = configs.get_config("qwen2-moe-a2.7b")
+    f = perfmodel.cell_flops(cfg, shape)
+    # layer-stack fwd flops must be near 2 * N_active_nonembed * D, far
+    # below total-params flops (14.3B)
+    from repro.models import registry
+    t = shape.global_batch * shape.seq_len
+    upper = 2.5 * registry.param_count(cfg, active_only=True) * t
+    lower = 2 * 0.4 * registry.param_count(cfg, active_only=True) * t
+    assert lower < f.fwd_layers < upper
+
+
+def test_sliding_window_reduces_attention_flops():
+    shape = SHAPES_BY_NAME["prefill_32k"]
+    cfg = configs.get_config("gemma3-1b")
+    f_win = perfmodel.cell_flops(cfg, shape)
+    f_full = perfmodel.cell_flops(replace(cfg, sliding_window=0), shape)
+    assert f_win.fwd < f_full.fwd
+
+
+def test_decode_flops_scale_with_cache():
+    cfg = configs.get_config("qwen3-0.6b")
+    f32k = perfmodel.cell_flops(cfg, SHAPES_BY_NAME["decode_32k"])
+    small = perfmodel.cell_flops(cfg, ShapeConfig("d", 1024, 128, "decode"))
+    assert f32k.decode > small.decode
+
+
+def test_bytes_model_sanity():
+    shape = SHAPES_BY_NAME["train_4k"]
+    cfg = configs.get_config("qwen3-0.6b")
+    b = perfmodel.cell_bytes(cfg, shape, chips=256, model_shard=16)
+    b_nozero = perfmodel.cell_bytes(cfg, shape, chips=256, model_shard=16,
+                                    zero1=False)
+    assert b.train < b_nozero.train            # ZeRO-1 cuts opt traffic
+    assert b.fwd < b.train
+    d32 = perfmodel.cell_bytes(cfg, SHAPES_BY_NAME["decode_32k"], chips=256,
+                               model_shard=16)
+    assert d32.cache_bytes > 0
+    assert d32.decode > d32.cache_bytes        # params + cache
+
+
+def test_cache_bytes_family_structure():
+    d = SHAPES_BY_NAME["long_500k"]
+    rwkv = perfmodel.cell_bytes(configs.get_config("rwkv6-1.6b"), d,
+                                chips=256, model_shard=16)
+    gemma = perfmodel.cell_bytes(configs.get_config("gemma3-1b"), d,
+                                 chips=256, model_shard=16)
+    # recurrent state is O(1) in S; gemma's global layers hold real KV
+    assert rwkv.cache_bytes < gemma.cache_bytes / 10
+    # MLA latent cache beats equivalent GQA cache
+    ds = perfmodel.cell_bytes(configs.get_config("deepseek-v2-lite-16b"),
+                              SHAPES_BY_NAME["decode_32k"], chips=256,
+                              model_shard=16)
+    qw = perfmodel.cell_bytes(configs.get_config("qwen2-moe-a2.7b"),
+                              SHAPES_BY_NAME["decode_32k"], chips=256,
+                              model_shard=16)
+    assert ds.cache_bytes < qw.cache_bytes
+
+
+def test_analytic_flops_vs_hlo_small_model():
+    """Cross-validate against XLA's counter on a 2-layer smoke config,
+    accounting for the known scan-body-once undercount: expected_hlo =
+    3*(fwd_layers/L) + 3*fwd_other (remat none, fwd+bwd counted as 3x)."""
+    cfg = replace(configs.get_smoke_config("qwen3-0.6b"), remat="none",
+                  tie_embeddings=False, qk_norm=False)
+    shape = ShapeConfig("t", 128, 4, "train")
+    from repro.models import get_model
+    model = get_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 128), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((4, 128), jnp.int32)}
+
+    def loss(p, b):
+        lt, aux = model.per_token_loss(p, b)
+        return lt.mean() + aux
+
+    hlo = jax.jit(jax.grad(loss)).lower(params, batch).compile() \
+        .cost_analysis()["flops"]
+    f = perfmodel.cell_flops(cfg, shape, remat="none")
+    expected = 3 * (f.fwd_layers / cfg.num_layers) + 3 * f.fwd_other
+    # matmul-dominated: within 35% (HLO counts softmax/norm vector ops too)
+    assert expected == pytest.approx(hlo, rel=0.35)

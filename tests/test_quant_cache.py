@@ -1,0 +1,56 @@
+"""int8-quantized KV cache: decode must track the bf16-cache decode within
+quantization noise (the §Perf memory-term lever for decode shapes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import attention, get_model
+
+
+def test_quantize_roundtrip_error():
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(0), (2, 1, 4, 32))
+    q, s = attention._quantize_kv(x)
+    back = attention._dequantize_kv(q, s, jnp.float32)
+    err = jnp.abs(back - x) / (jnp.max(jnp.abs(x)) + 1e-9)
+    assert float(err.max()) < 1.0 / 120     # half a quant step, normalized
+
+
+def test_int8_cache_decode_close_to_exact():
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                cfg.vocab_size)
+    full = model.forward(params, tokens)
+
+    cache = model.init_cache(b, s, jnp.int8)
+    assert cache["seg_dense"][0]["k"].dtype == jnp.int8
+    step = jax.jit(model.decode_step)
+    outs = []
+    for i in range(s):
+        logits, cache = step(params, tokens[:, i:i + 1], cache)
+        outs.append(logits)
+    stepped = jnp.stack(outs, axis=1)
+    # logits agree to quantization noise; argmax agrees almost everywhere
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(full),
+                               rtol=0.1, atol=0.15)
+    agree = (jnp.argmax(stepped, -1) == jnp.argmax(full, -1)).mean()
+    assert float(agree) >= 0.9
+
+
+def test_int8_cache_memory_halves():
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    model = get_model(cfg)
+
+    def nbytes(dtype):
+        shapes = jax.eval_shape(lambda: model.init_cache(4, 256, dtype))
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(shapes))
+
+    import jax.numpy as jnp2
+    full = nbytes(jnp2.bfloat16)
+    quant = nbytes(jnp2.int8)
+    assert quant < 0.6 * full

@@ -1,0 +1,124 @@
+"""Decode-vs-forward equivalence: stepping decode_step token by token must
+reproduce the training forward's logits — the strongest KV-cache/ring-
+buffer/MLA-cache/recurrent-state correctness check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import get_model
+
+# gemma3 smoke exercises sliding-window ring buffers + global interleave;
+# deepseek exercises the MLA latent cache + MoE decode; hymba the parallel
+# SSM state; rwkv6 the O(1) recurrence; whisper the self+cross caches.
+DECODE_ARCHS = ["qwen3-0.6b", "gemma3-1b", "deepseek-v2-lite-16b",
+                "hymba-1.5b", "rwkv6-1.6b", "whisper-tiny",
+                "qwen2-moe-a2.7b", "minitron-4b", "command-r-plus-104b",
+                "internvl2-2b"]
+
+
+def _decode_all(model, cfg, params, tokens, max_len, frames=None):
+    cache = model.init_cache(tokens.shape[0], max_len)
+    if frames is not None:
+        cache = model.prime_cross_cache(params, cache, frames)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for i in range(tokens.shape[1]):
+        logits, cache = step(params, tokens[:, i:i + 1], cache)
+        outs.append(logits)
+    return jnp.stack(outs, axis=1)          # [B, S, V]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = configs.get_smoke_config(arch)
+    if arch == "internvl2-2b":
+        pytest.skip("vlm decode starts from a primed prefix cache; the "
+                    "backbone equals qwen-style GQA covered elsewhere")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                cfg.vocab_size)
+    frames = None
+    kwargs = {}
+    if cfg.family == "audio":
+        frames = 0.1 * jax.random.normal(jax.random.PRNGKey(2),
+                                         (b, cfg.encoder_seq_len, cfg.d_model))
+        kwargs["encoder_frames"] = frames
+    full = model.forward(params, tokens, **kwargs)            # [B, S, V]
+    stepped = _decode_all(model, cfg, params, tokens, max_len=s,
+                          frames=frames)
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gemma_ring_buffer_beyond_window():
+    """Decode past the sliding window: ring-buffer cache must agree with the
+    full forward (local layers only see the last `window` tokens)."""
+    cfg = configs.get_smoke_config("gemma3-1b")      # window 8, global every 3
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 1, 20                                      # 2.5x the window
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                cfg.vocab_size)
+    full = model.forward(params, tokens)
+    stepped = _decode_all(model, cfg, params, tokens, max_len=s)
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_matches_forward_last_position():
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                                cfg.vocab_size)
+    full = model.forward(params, tokens)
+    pre = model.prefill(params, tokens)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_greedy_generate():
+    from repro.train.serve_step import greedy_generate
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                cfg.vocab_size)
+    out = greedy_generate(model, params, prompt, num_tokens=5, max_len=16)
+    assert out.shape == (2, 5)
+    assert (np.asarray(out) >= 0).all()
+    assert (np.asarray(out) < cfg.padded_vocab).all()
+
+
+def test_mla_chunked_long_path_matches_dense():
+    """The folded (nope‖rope) chunked MLA path == the dense MLA formula."""
+    from repro.models import attention
+    from repro.configs.base import MLAConfig
+    import jax, jax.numpy as jnp
+    cfg = configs.get_smoke_config("deepseek-v2-lite-16b")
+    params = attention.mla_init(jax.random.PRNGKey(0), cfg)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(24), (2, 24))
+    dense = attention.mla_attend(params, cfg, x, pos)
+    # force the chunked path by lowering the threshold via direct call
+    b, s, _ = x.shape
+    m = cfg.mla
+    h = cfg.num_heads
+    q_nope, q_rope, c_kv, k_rope = attention._mla_qkv(params, cfg, x, pos)
+    k_nope, v = attention._mla_expand_kv(params, cfg, c_kv)
+    qk = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kk = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_dim))], -1)
+    d_qk = m.qk_nope_dim + m.qk_rope_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, d_qk - m.v_head_dim)))
+    out = attention.chunked_attention_core(qk, kk, v_pad, causal=True,
+                                           q_chunk=8, kv_chunk=8)
+    from repro.models import common as mcommon
+    chunked = mcommon.dense(params["wo"],
+                            out[..., :m.v_head_dim].reshape(b, s, -1))
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               rtol=2e-3, atol=2e-3)

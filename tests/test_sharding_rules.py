@@ -1,0 +1,84 @@
+"""Sharding rule unit tests (pure spec logic — no devices needed)."""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.distributed.sharding import param_spec, zero1_spec
+
+
+def _spec(arch, path, shape, model=16):
+    return param_spec(path, shape, configs.get_config(arch), model)
+
+
+def test_vocab_sharding():
+    # qwen3 padded vocab 151936 % 16 == 0 -> sharded
+    assert _spec("qwen3-0.6b", "embed/embedding", (152064, 1024)) == \
+        P("model", None)
+    assert _spec("rwkv6-1.6b", "head/w", (2048, 65536)) == P(None, "model")
+
+
+def test_attention_head_divisibility_guard():
+    # gemma3: 4 q heads * 256 = 1024 % 16 == 0 -> sharded on proj dim
+    assert _spec("gemma3-1b", "seg_dense/attn/wq/w", (26, 1152, 1024)) == \
+        P(None, None, "model")
+    # but kv proj = 1*256 = 256 % 16 == 0 -> sharded; head_dim 250 would not be
+    assert _spec("gemma3-1b", "seg_dense/attn/wk/w", (26, 1152, 256)) == \
+        P(None, None, "model")
+    # hymba: 25 heads * 64 = 1600 % 16 == 0 -> ok; kv 5*64=320 % 16 == 0
+    assert _spec("hymba-1.5b", "blocks/attn/wo/w", (32, 1600, 1600)) == \
+        P(None, "model", None)
+    # a genuinely non-divisible dim stays replicated
+    assert _spec("gemma3-1b", "seg_dense/attn/wq/w", (26, 1152, 1000)) == \
+        P(None, None, None)
+
+
+def test_mlp_tp():
+    assert _spec("qwen3-0.6b", "seg_dense/mlp/w_up/w", (28, 1024, 3072)) == \
+        P(None, None, "model")
+    assert _spec("qwen3-0.6b", "seg_dense/mlp/w_down/w", (28, 3072, 1024)) == \
+        P(None, "model", None)
+
+
+def test_moe_partition_modes():
+    # qwen2-moe: tp mode -> expert d_ff sharded
+    assert _spec("qwen2-moe-a2.7b", "seg_moe/moe/w_gate/w",
+                 (24, 60, 2048, 1408)) == P(None, None, None, "model")
+    assert _spec("qwen2-moe-a2.7b", "seg_moe/moe/w_down/w",
+                 (24, 60, 1408, 2048)) == P(None, None, "model", None)
+    # deepseek: ep mode -> expert dim sharded (64 % 16 == 0)
+    assert _spec("deepseek-v2-lite-16b", "seg_moe/moe/w_gate/w",
+                 (26, 64, 2048, 1408)) == P(None, "model", None, None)
+    assert _spec("deepseek-v2-lite-16b", "seg_moe/moe/router/w",
+                 (26, 2048, 64)) == P(None, None, None)
+
+
+def test_norms_replicated():
+    assert _spec("qwen3-0.6b", "seg_dense/ln1/scale", (28, 1024)) == \
+        P(None, None)
+    assert _spec("qwen3-0.6b", "final_norm/scale", (1024,)) == P(None)
+
+
+def test_zero1_spec_picks_divisible_dim():
+    # dim0 = 28 not divisible by 16 -> falls through to dim1
+    s = zero1_spec(P(None, None, "model"), (28, 1024, 3072), ("data",), 16)
+    assert s == P(None, "data", "model")
+    # divisible layer dim is taken first by default...
+    s = zero1_spec(P(None, None, "model"), (32, 1024, 3072), ("data",), 16)
+    assert s == P("data", None, "model")
+    # ...but prefer_inner (FSDP) skips it so gathers stream per layer
+    s = zero1_spec(P(None, None, "model"), (32, 1024, 3072), ("data",), 16,
+                   prefer_inner=True)
+    assert s == P(None, "data", "model")
+    # nothing divisible -> unchanged
+    s = zero1_spec(P(None,), (7,), ("data",), 16)
+    assert s == P(None,)
+    # multi-axis data
+    s = zero1_spec(P(None, "model"), (64, 3072), ("pod", "data"), 32)
+    assert s == P(("pod", "data"), "model")
+
+
+def test_mla_projections():
+    assert _spec("deepseek-v2-lite-16b", "seg_moe/attn/wkv_b/w",
+                 (26, 512, 4096)) == P(None, None, "model")
+    assert _spec("deepseek-v2-lite-16b", "seg_moe/attn/wo/w",
+                 (26, 2048, 2048)) == P(None, "model", None)

@@ -1,0 +1,76 @@
+"""Latency models + order statistics (paper Figs. 3/4 machinery)."""
+import numpy as np
+import pytest
+
+from repro.core import straggler
+from repro.core.aggregation import BackupWorkers, FullSync
+from repro.core.events import StragglerSimulator, mean_iteration_time
+
+
+def test_models_positive_and_shaped():
+    rng = np.random.RandomState(0)
+    for model in [straggler.PaperCalibrated(), straggler.LogNormal(),
+                  straggler.Uniform(),
+                  straggler.DeterministicStragglers(slow_workers=(1,))]:
+        t = model.sample(rng, (50, 10))
+        assert t.shape == (50, 10)
+        assert (t > 0).all()
+
+
+def test_order_stats_monotone():
+    rng = np.random.RandomState(1)
+    lat = straggler.PaperCalibrated().sample(rng, (500, 100))
+    mean_k, med_k = straggler.mean_median_time_to_k(lat)
+    assert (np.diff(mean_k) >= -1e-9).all()
+    assert (np.diff(med_k) >= -1e-9).all()
+
+
+def test_paper_calibration_shape():
+    """Fig. 4's signature: flat middle (~1.4-1.8s), exploding tail."""
+    rng = np.random.RandomState(2)
+    lat = straggler.PaperCalibrated().sample(rng, (3000, 100))
+    mean_k, _ = straggler.mean_median_time_to_k(lat)
+    assert 1.2 < mean_k[49] < 1.9          # k=50 in the flat region
+    assert mean_k[99] > 4 * mean_k[49]     # final gradient blows up
+    assert lat.max() <= 310.0              # paper's observed cap
+
+
+def test_cdf_of_time_to_k():
+    rng = np.random.RandomState(3)
+    lat = straggler.PaperCalibrated().sample(rng, (1000, 100))
+    grid = np.linspace(0, 6, 20)
+    cdf98 = straggler.cdf_of_time_to_k(lat, 98, grid)
+    cdf100 = straggler.cdf_of_time_to_k(lat, 100, grid)
+    assert (np.diff(cdf98) >= 0).all()
+    # the 98th gradient arrives sooner than the 100th in distribution
+    assert (cdf98 >= cdf100 - 1e-9).all()
+
+
+def test_deterministic_straggler_hits_selection():
+    rng = np.random.RandomState(4)
+    model = straggler.DeterministicStragglers(slow_workers=(3,), slowdown=50)
+    lat = model.sample(rng, (200, 8))
+    st = BackupWorkers(6, 2)
+    dropped = [not st.select(a)[0][3] for a in lat]
+    assert np.mean(dropped) > 0.95         # the bad node is ~always dropped
+
+
+def test_simulator_dead_worker_and_determinism():
+    sim1 = StragglerSimulator(BackupWorkers(4, 2), straggler.Uniform(), seed=7)
+    sim2 = StragglerSimulator(BackupWorkers(4, 2), straggler.Uniform(), seed=7)
+    e1, e2 = sim1.next_event(), sim2.next_event()
+    np.testing.assert_array_equal(e1.mask, e2.mask)
+    assert e1.iteration_time == e2.iteration_time
+    sim1.kill_worker(0)
+    for _ in range(10):
+        ev = sim1.next_event()
+        assert not ev.mask[0]
+        assert ev.mask.sum() == 4
+    assert sim1.alive == 5
+
+
+def test_mean_iteration_time_backup_below_fullsync():
+    lat = straggler.PaperCalibrated()
+    t_full = mean_iteration_time(FullSync(100), lat, iters=300)
+    t_back = mean_iteration_time(BackupWorkers(96, 4), lat, iters=300)
+    assert t_back < t_full

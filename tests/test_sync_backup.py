@@ -1,0 +1,90 @@
+"""The paper's core identity: masked-weighted loss == Alg. 4 aggregation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sync_backup
+
+
+def _toy(num_workers=8, per=4, dim=16, seed=0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    params = {"w": jax.random.normal(k1, (dim,))}
+    x = jax.random.normal(k2, (num_workers * per, dim))
+    y = jax.random.normal(k3, (num_workers * per,))
+    return params, x, y
+
+
+def _per_example_loss(p, x, y):
+    return (x @ p["w"] - y) ** 2
+
+
+@given(mask_bits=st.lists(st.booleans(), min_size=4, max_size=4))
+@settings(max_examples=16, deadline=None)
+def test_weighted_loss_equals_explicit_aggregation(mask_bits):
+    """For ANY mask, grad of weighted loss == (1/N) sum masked worker grads."""
+    w = 4
+    n_agg = max(1, sum(mask_bits))
+    params, x, y = _toy(num_workers=w)
+    mask = jnp.asarray(mask_bits)
+
+    g_weighted = jax.grad(lambda p: sync_backup.weighted_loss(
+        _per_example_loss(p, x, y), mask, n_agg))(params)
+
+    def worker_mean(p, batch):
+        return jnp.mean(_per_example_loss(p, batch["x"], batch["y"]))
+
+    stacked = sync_backup.per_worker_grads(worker_mean, params,
+                                           {"x": x, "y": y}, w)
+    g_explicit = sync_backup.aggregate_masked(stacked, mask, n_agg)
+    np.testing.assert_allclose(g_weighted["w"], g_explicit["w"],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_full_mask_equals_plain_mean():
+    """b=0 (all selected) recovers ordinary synchronous data parallelism."""
+    params, x, y = _toy()
+    mask = jnp.ones(8, bool)
+    gm = jax.grad(lambda p: sync_backup.weighted_loss(
+        _per_example_loss(p, x, y), mask, 8))(params)
+    gp = jax.grad(lambda p: jnp.mean(_per_example_loss(p, x, y)))(params)
+    np.testing.assert_allclose(gm["w"], gp["w"], rtol=1e-5, atol=1e-6)
+
+
+def test_dropped_worker_has_zero_influence():
+    """Changing a DROPPED worker's data must not change the update."""
+    params, x, y = _toy()
+    mask = jnp.asarray([True] * 6 + [False] * 2)
+    g1 = jax.grad(lambda p: sync_backup.weighted_loss(
+        _per_example_loss(p, x, y), mask, 6))(params)
+    x2 = x.at[-8:].set(100.0)         # corrupt workers 6,7 (dropped)
+    g2 = jax.grad(lambda p: sync_backup.weighted_loss(
+        _per_example_loss(p, x2, y), mask, 6))(params)
+    np.testing.assert_allclose(g1["w"], g2["w"], rtol=1e-6)
+
+
+def test_per_example_weights_sum():
+    """Weights sum to (#selected / N): == 1 exactly when N workers survive."""
+    mask = jnp.asarray([1, 1, 0, 1], bool)
+    w = sync_backup.per_example_weights(mask, 16, 3)
+    assert w.shape == (16,)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+
+
+@given(n=st.integers(1, 8))
+@settings(max_examples=8, deadline=None)
+def test_make_mask_selects_fastest_n(n):
+    rank = jnp.asarray(np.random.RandomState(0).permutation(8))
+    mask = sync_backup.make_mask(rank, n)
+    assert int(mask.sum()) == n
+    # every selected worker is faster than every dropped worker
+    sel = np.asarray(rank)[np.asarray(mask)]
+    drop = np.asarray(rank)[~np.asarray(mask)]
+    assert len(sel) == 0 or len(drop) == 0 or sel.max() < drop.min()
+
+
+def test_worker_of_example_contiguous():
+    w = sync_backup.worker_of_example(12, 3)
+    np.testing.assert_array_equal(w, [0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2])
