@@ -1,0 +1,134 @@
+"""Host/dispatch overhead of the training loop: legacy vs fused chunks.
+
+Measures wall-clock steps/s of the qwen3-0.6b smoke config (CPU-sized) for
+chunk_size in {1, 8, 32}. chunk_size=1 is the legacy per-step path — one
+jit dispatch, one batch+mask transfer, and one metrics float() sync per
+step; larger chunks fuse K iterations into a single lax.scan dispatch with
+one stacked transfer and one sync per chunk. On smoke-scale models the
+per-step Python/dispatch overhead dominates, so this ratio tracks exactly
+the overhead the chunked loop retires (docs/perf.md).
+
+Writes experiments/bench/BENCH_loop.json. With --device also measures the
+fully device-resident 'device' straggler backend at chunk_size=32.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import numpy as np
+
+from common import save_json
+
+CHUNK_SIZES = (1, 8, 32)
+
+
+def build_trainer(chunk_size: int, backend: str = "host"):
+    from repro import configs
+    from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                    OptimizerConfig, ShapeConfig, TrainConfig)
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    # smoke model, small shape: per-step device compute is a few ms, so the
+    # measurement isolates the loop's host/dispatch overhead (the thing this
+    # benchmark exists to track) rather than model FLOPs
+    cfg = TrainConfig(
+        model=configs.get_smoke_config("qwen3-0.6b"),
+        shape=ShapeConfig("bench", 4, 6, "train"),
+        aggregation=AggregationConfig(strategy="backup", num_workers=4,
+                                      backup_workers=2),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.02,
+                                  scale_lr_with_workers=False,
+                                  ema_decay=0.999),
+        checkpoint=CheckpointConfig(every_steps=0),
+        # per-step logging, as in real training: the legacy path pays a
+        # metrics float() sync every step (part of the overhead the fused
+        # loop retires — it reads the whole chunk's metrics back in one go)
+        log_every=1,
+        chunk_size=chunk_size, straggler_backend=backend)
+    tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    tr.init_state()
+    return tr
+
+
+def measure_all(configs, steps: int, reps: int = 3):
+    """Build+compile every config first, then interleave the timed reps
+    (cfg0, cfg1, ..., cfg0, cfg1, ...) so CPU thermal drift doesn't
+    systematically penalize whichever config is measured last."""
+    trainers = []
+    for chunk_size, backend in configs:
+        tr = build_trainer(chunk_size, backend)
+        tr.run(max(chunk_size, 8))                 # compile + warm caches
+        trainers.append(tr)
+    best = [None] * len(configs)
+    for _ in range(reps):
+        for i, tr in enumerate(trainers):
+            t0 = time.perf_counter()
+            tr.run(steps)
+            dt = time.perf_counter() - t0
+            best[i] = dt if best[i] is None or dt < best[i] else best[i]
+    return [{"chunk_size": c, "backend": b, "steps": steps,
+             "wall_s": w, "steps_per_s": steps / w}
+            for (c, b), w in zip(configs, best)]
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timed steps (CI)")
+    ap.add_argument("--host-only", action="store_true",
+                    help="skip the device-resident backend measurements")
+    args = ap.parse_args(argv)
+
+    steps = 64 if args.quick else 192
+    # chunk_size=1 is the legacy per-step loop; chunked rows are measured in
+    # both modes: 'host' (bit-exact numpy straggler streams) and 'device'
+    # (the fully device-resident tentpole — batch gen + arrival sampling +
+    # mask selection inside the scan). The headline speedup compares the
+    # full fused loop against the legacy path.
+    configs = [(c, "host") for c in CHUNK_SIZES]
+    if not args.host_only:
+        configs += [(c, "device") for c in CHUNK_SIZES if c > 1]
+    results = measure_all(configs, steps)
+
+    legacy = next(r for r in results
+                  if r["chunk_size"] == 1 and r["backend"] == "host")
+
+    def rate(chunk, backend=None):
+        rates = [r["steps_per_s"] for r in results if r["chunk_size"] == chunk
+                 and (backend is None or r["backend"] == backend)]
+        return max(rates) if rates else None
+
+    def speedup(chunk, backend=None):
+        r = rate(chunk, backend)
+        return r / legacy["steps_per_s"] if r else None
+
+    payload = {
+        "bench": "loop_overhead",
+        "model": "qwen3-0.6b smoke",
+        "steps": steps,
+        "results": results,
+        # headline: best fused configuration vs the legacy loop
+        "speedup_8_vs_1": speedup(8),
+        "speedup_32_vs_1": speedup(32),
+        # per-backend canaries so a regression in one mode can't hide
+        # behind the other being faster
+        "speedup_32_host_vs_1": speedup(32, "host"),
+        "speedup_32_device_vs_1": speedup(32, "device"),
+    }
+    path = save_json("BENCH_loop", payload)
+    for r in results:
+        print(f"chunk_size={r['chunk_size']:>3} backend={r['backend']:<6} "
+              f"{r['steps_per_s']:8.1f} steps/s")
+    print(f"speedup 32 vs 1: {payload['speedup_32_vs_1']:.2f}x  -> {path}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -288,6 +288,14 @@ class TrainConfig:
     total_steps: int = 1000
     log_every: int = 10
     microbatch: int = 0               # 0 => derive from shape & mesh
+    # fused chunked loop: iterations per device dispatch. 1 = legacy
+    # per-step path; >1 runs K steps in one lax.scan with chunk boundaries
+    # forced at checkpoint / kill-injection / rescale steps.
+    chunk_size: int = 1
+    # 'host'   — numpy straggler streams, bit-exact with the legacy path
+    # 'device' — jax.random sampling + select_jax inside the scan body
+    #            (distribution-equivalent, zero host work per step)
+    straggler_backend: str = "host"
 
 
 def replace(cfg, **kw):

@@ -12,12 +12,17 @@ Each strategy turns one iteration's worker arrival times into
 The mask is *data* to the SPMD train step: dropped workers still compute
 (their cycles are the price of the insurance — identical to the paper,
 whose backup workers' gradients are discarded on arrival).
+
+``select`` is the host (numpy) rule; ``select_jax`` is its traceable
+counterpart used inside the fused chunked trainer's ``lax.scan`` body
+(same semantics, jnp ops, no host sync).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -27,6 +32,21 @@ class Strategy:
     def select(self, arrivals: np.ndarray) -> Tuple[np.ndarray, float]:
         """arrivals: [W] seconds -> (mask bool [W], iteration_time)."""
         raise NotImplementedError
+
+    def select_jax(self, arrivals: jnp.ndarray):
+        """Traceable select: [W] jnp seconds -> (bool [W], f32 scalar)."""
+        raise NotImplementedError
+
+    def select_batch(self, arrivals: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized select: [K, W] -> (masks [K, W], times [K]).
+
+        Row i is bitwise-identical to select(arrivals[i]) — the fused
+        chunked trainer relies on this for replay-exact equivalence.
+        Subclasses override with a vectorized rule; this fallback loops.
+        """
+        pairs = [self.select(a) for a in arrivals]
+        return (np.stack([m for m, _ in pairs]),
+                np.array([t for _, t in pairs], np.float64))
 
     def effective_n(self) -> int:
         raise NotImplementedError
@@ -43,6 +63,13 @@ class FullSync(Strategy):
     def select(self, arrivals):
         mask = np.ones_like(arrivals, dtype=bool)
         return mask, float(arrivals.max())
+
+    def select_jax(self, arrivals):
+        return jnp.ones(arrivals.shape, dtype=bool), jnp.max(arrivals)
+
+    def select_batch(self, arrivals):
+        return (np.ones_like(arrivals, dtype=bool),
+                arrivals.max(axis=-1).astype(np.float64))
 
     def effective_n(self) -> int:
         return self.num_workers
@@ -66,6 +93,20 @@ class BackupWorkers(Strategy):
         mask[order[:n]] = True
         return mask, float(arrivals[order[n - 1]])
 
+    def select_jax(self, arrivals):
+        n = self.num_workers
+        order = jnp.argsort(arrivals)        # stable, matching np "stable"
+        mask = jnp.zeros(arrivals.shape, dtype=bool).at[order[:n]].set(True)
+        return mask, arrivals[order[n - 1]]
+
+    def select_batch(self, arrivals):
+        n = self.num_workers
+        order = np.argsort(arrivals, axis=-1, kind="stable")
+        masks = np.zeros_like(arrivals, dtype=bool)
+        np.put_along_axis(masks, order[:, :n], True, axis=-1)
+        times = np.take_along_axis(arrivals, order[:, n - 1:n], axis=-1)[:, 0]
+        return masks, times.astype(np.float64)
+
     def effective_n(self) -> int:
         return self.num_workers
 
@@ -86,6 +127,16 @@ class Timeout(Strategy):
         cutoff = t0 + self.deadline_s
         mask = arrivals <= cutoff
         return mask, float(min(arrivals.max(), cutoff))
+
+    def select_jax(self, arrivals):
+        cutoff = jnp.min(arrivals) + self.deadline_s
+        return arrivals <= cutoff, jnp.minimum(jnp.max(arrivals), cutoff)
+
+    def select_batch(self, arrivals):
+        cutoff = arrivals.min(axis=-1) + self.deadline_s
+        masks = arrivals <= cutoff[:, None]
+        times = np.minimum(arrivals.max(axis=-1), cutoff)
+        return masks, times.astype(np.float64)
 
     def effective_n(self) -> int:
         return self.num_workers     # varies per step; N is the upper bound

@@ -24,6 +24,19 @@ class StepEvent:
     arrivals: np.ndarray      # [W] raw latencies
 
 
+@dataclasses.dataclass
+class ChunkEvents:
+    """K consecutive StepEvents stacked for one fused-loop dispatch."""
+
+    start_step: int
+    masks: np.ndarray         # [K, W] bool
+    times: np.ndarray         # [K] f64 per-step iteration times
+    arrivals: np.ndarray      # [K, W] raw latencies
+
+    def __len__(self) -> int:
+        return self.masks.shape[0]
+
+
 class StragglerSimulator:
     """Yields one StepEvent per training step; deterministic in seed.
 
@@ -47,22 +60,55 @@ class StragglerSimulator:
         self.dead[w] = False
 
     @property
+    def step(self) -> int:
+        return self._step
+
+    def reset_to_step(self, step: int) -> None:
+        """Align the simulator with a restored/advanced trainer step.
+
+        Sampling is deterministic in (seed, step), so this is the whole
+        replay-exact resume contract: no other simulator state to restore.
+        """
+        self._step = int(step)
+
+    @property
     def alive(self) -> int:
         return int((~self.dead).sum())
+
+    def _raw_arrivals(self, step: int) -> np.ndarray:
+        """Per-step latencies, deterministic in (seed, step) — the single
+        definition of the replay contract (next_event and next_events must
+        stay bit-identical)."""
+        rng = np.random.RandomState((self.seed * 1_000_003 + step)
+                                    % (2 ** 31 - 1))
+        return self.latency.sample(rng, (self.strategy.total_workers,))
 
     def next_event(self) -> StepEvent:
         # deterministic in (seed, step): checkpoint/resume replays the
         # exact arrival sequence with no simulator state to persist
-        w = self.strategy.total_workers
-        rng = np.random.RandomState((self.seed * 1_000_003 + self._step)
-                                    % (2 ** 31 - 1))
-        arrivals = self.latency.sample(rng, (w,))
+        arrivals = self._raw_arrivals(self._step)
         arrivals = np.where(self.dead, np.inf, arrivals)
         mask, t = self.strategy.select(arrivals)
         mask = mask & ~self.dead
         ev = StepEvent(self._step, mask, t, arrivals)
         self._step += 1
         return ev
+
+    def next_events(self, k: int) -> ChunkEvents:
+        """The next k events stacked — bit-identical to k next_event() calls.
+
+        Sampling keeps the per-step RandomState streams (replay contract);
+        dead-masking and selection run vectorized over the [K, W] block via
+        Strategy.select_batch (row-wise identical to select)."""
+        start = self._step
+        arrivals = np.empty((k, self.strategy.total_workers))
+        for i in range(k):
+            arrivals[i] = self._raw_arrivals(self._step)
+            self._step += 1
+        arrivals = np.where(self.dead[None, :], np.inf, arrivals)
+        masks, times = self.strategy.select_batch(arrivals)
+        masks = masks & ~self.dead[None, :]
+        return ChunkEvents(start, masks, times, arrivals)
 
     def __iter__(self) -> Iterator[StepEvent]:
         while True:

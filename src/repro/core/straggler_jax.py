@@ -1,0 +1,85 @@
+"""JAX-native worker-latency sampling — the device half of the straggler
+simulator.
+
+Each numpy ``LatencyModel`` in ``repro.core.straggler`` has a `jax.random`
+counterpart here so the fused chunked trainer (``straggler_backend =
+'device'``) can sample arrivals *inside* the ``lax.scan`` body with zero
+host involvement. The samplers are distribution-equivalent to the numpy
+models (tests/test_straggler_jax.py checks moments and quantiles), not
+stream-equivalent: `jax.random` and `np.random.RandomState` draw different
+sequences, so bit-exact replay against the host simulator uses the 'host'
+backend instead.
+
+Determinism contract: arrivals for step ``s`` are a pure function of
+``(base_key, s)`` via ``jax.random.fold_in`` — checkpoint/resume replays
+the device arrival sequence exactly, mirroring the host simulator's
+``(seed, step)`` seeding.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.straggler import (DeterministicStragglers, LatencyModel,
+                                  LogNormal, PaperCalibrated, Uniform)
+
+SampleFn = Callable[[jax.Array, Tuple[int, ...]], jax.Array]
+
+
+def sample_paper_calibrated(model: PaperCalibrated, key, shape):
+    k_jit, k_tail, k_exp = jax.random.split(key, 3)
+    t = model.base + model.jitter * jax.random.exponential(k_jit, shape)
+    straggle = jax.random.uniform(k_tail, shape) < model.p_tail
+    t = t + straggle * model.tail * jax.random.exponential(k_exp, shape)
+    return jnp.minimum(t, model.cap)
+
+
+def sample_lognormal(model: LogNormal, key, shape):
+    return model.median * jnp.exp(model.sigma * jax.random.normal(key, shape))
+
+
+def sample_uniform(model: Uniform, key, shape):
+    return jax.random.uniform(key, shape, minval=model.lo, maxval=model.hi)
+
+
+def sample_deterministic_stragglers(model: DeterministicStragglers, key, shape):
+    t = model.base + model.jitter * jax.random.exponential(key, shape)
+    mult = np.ones(shape[-1])
+    for w in model.slow_workers:
+        mult[w] = model.slowdown
+    return t * jnp.asarray(mult)
+
+
+_SAMPLERS = {
+    PaperCalibrated: sample_paper_calibrated,
+    LogNormal: sample_lognormal,
+    Uniform: sample_uniform,
+    DeterministicStragglers: sample_deterministic_stragglers,
+}
+
+
+def register_sampler(model_cls, fn) -> None:
+    """Extension point: fn(model, key, shape) -> arrivals."""
+    _SAMPLERS[model_cls] = fn
+
+
+def sampler_for(model: LatencyModel) -> SampleFn:
+    """Returns sample(key, shape) -> arrivals for the given numpy model."""
+    for cls, fn in _SAMPLERS.items():
+        if type(model) is cls:
+            return lambda key, shape: fn(model, key, shape)
+    raise NotImplementedError(
+        f"no JAX sampler registered for {type(model).__name__}; "
+        "use straggler_backend='host' or register_sampler()")
+
+
+def step_arrivals(model: LatencyModel, base_key, step, workers: int,
+                  dead=None) -> jax.Array:
+    """Arrivals for one step: fold_in(base_key, step), dead workers -> inf."""
+    arr = sampler_for(model)(jax.random.fold_in(base_key, step), (workers,))
+    if dead is not None:
+        arr = jnp.where(dead, jnp.inf, arr)
+    return arr

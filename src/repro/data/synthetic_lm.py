@@ -12,6 +12,8 @@ uniform noise — seeded per (worker, step) so that:
 from __future__ import annotations
 
 import dataclasses
+import functools
+import threading
 from typing import Dict, Iterator, Optional
 
 import jax
@@ -38,17 +40,35 @@ def _transition(vocab: int, seed: int) -> np.ndarray:
     return a, b
 
 
+@functools.lru_cache(maxsize=64)
+def _chain_tables(vocab: int, seed: int, seq_len: int):
+    """Closed form of the affine chain: tok_t = (a^t*s0 + b*g_t) mod V with
+    g_t = sum_{i<t} a^i. Precomputed per config so batch generation is one
+    vectorized expression instead of a seq_len python loop (the loop was
+    the host-pipeline bottleneck of the fused chunked trainer)."""
+    a, b = _transition(vocab, seed)
+    pow_a = np.empty(seq_len + 1, np.int64)
+    geo = np.empty(seq_len + 1, np.int64)
+    p, g = 1, 0
+    for t in range(seq_len + 1):
+        pow_a[t] = p
+        geo[t] = g
+        g = (g + p) % vocab
+        p = (p * a) % vocab
+    return pow_a, (b * geo) % vocab
+
+
 def worker_batch(cfg: SyntheticLMConfig, worker: int, step: int) -> Dict[str, np.ndarray]:
     """The [B/W, S] shard of the global batch for `worker` at `step`."""
     per_worker = cfg.global_batch // cfg.num_workers
-    a, b = _transition(cfg.vocab_size, cfg.seed)
-    rng = np.random.RandomState((cfg.seed * 1_000_003 + step) * 4097 + worker)
+    pow_a, offset = _chain_tables(cfg.vocab_size, cfg.seed, cfg.seq_len)
+    # % 2**32 keeps RandomState in range for large (seed, step); identity
+    # for every in-range value, so existing streams are unchanged
+    rng = np.random.RandomState(
+        ((cfg.seed * 1_000_003 + step) * 4097 + worker) % (2 ** 32))
     start = rng.randint(0, cfg.vocab_size, size=(per_worker, 1))
-    toks = [start]
-    for _ in range(cfg.seq_len):
-        nxt = (a * toks[-1] + b) % cfg.vocab_size
-        toks.append(nxt)
-    seq = np.concatenate(toks, axis=1)          # [b, S+1]
+    # bit-exact closed form of the step-by-step a*tok+b chain
+    seq = (pow_a[None, :] * start + offset[None, :]) % cfg.vocab_size
     noise_mask = rng.rand(per_worker, cfg.seq_len + 1) < cfg.noise
     noise_toks = rng.randint(0, cfg.vocab_size, size=seq.shape)
     seq = np.where(noise_mask, noise_toks, seq).astype(np.int32)
@@ -63,6 +83,49 @@ def global_batch(cfg: SyntheticLMConfig, step: int) -> Dict[str, np.ndarray]:
     """
     shards = [worker_batch(cfg, w, step) for w in range(cfg.num_workers)]
     return {k: np.concatenate([s[k] for s in shards], axis=0) for k in shards[0]}
+
+
+def device_batch_fn(cfg: SyntheticLMConfig):
+    """jnp twin of ``global_batch`` for the fully device-resident trainer.
+
+    Returns batch_fn(step) -> {tokens, labels} built with `jax.random`
+    inside the scan body — zero host work per step. Same Markov+noise
+    distribution and the same per-(seed, step) determinism contract as the
+    numpy pipeline, but NOT stream-identical to it (jax.random draws a
+    different sequence); bit-exact replay against the host pipeline uses
+    straggler_backend='host'.
+    """
+    if cfg.vocab_size > 46340:   # pow_a * start must fit int32 (no x64)
+        raise NotImplementedError(
+            "device_batch_fn needs vocab_size <= 46340; use the host pipeline")
+    pow_a_np, offset_np = _chain_tables(cfg.vocab_size, cfg.seed, cfg.seq_len)
+    pow_a = jnp.asarray(pow_a_np, jnp.int32)
+    offset = jnp.asarray(offset_np, jnp.int32)
+    # domain-separated from the straggler key stream (loop.py folds a
+    # different tag), so data noise and arrival draws stay independent
+    base = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), 0xDA7A)
+
+    def batch_fn(step):
+        key = jax.random.fold_in(base, step)
+        k_start, k_mask, k_noise = jax.random.split(key, 3)
+        start = jax.random.randint(k_start, (cfg.global_batch, 1), 0,
+                                   cfg.vocab_size, jnp.int32)
+        seq = (pow_a[None, :] * start + offset[None, :]) % cfg.vocab_size
+        noise = jax.random.uniform(k_mask, seq.shape) < cfg.noise
+        noise_toks = jax.random.randint(k_noise, seq.shape, 0,
+                                        cfg.vocab_size, jnp.int32)
+        seq = jnp.where(noise, noise_toks, seq).astype(jnp.int32)
+        return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+    return batch_fn
+
+
+def chunk_batches(cfg: SyntheticLMConfig, start_step: int, k: int
+                  ) -> Dict[str, np.ndarray]:
+    """K stacked global batches [K, B, ...] — one host->device transfer for
+    the fused chunked trainer, bit-identical to k global_batch() calls."""
+    batches = [global_batch(cfg, s) for s in range(start_step, start_step + k)]
+    return {key: np.stack([b[key] for b in batches]) for key in batches[0]}
 
 
 @dataclasses.dataclass
@@ -92,3 +155,55 @@ class SyntheticLMPipeline:
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         while True:
             yield self.next()
+
+
+class ChunkPrefetcher:
+    """Double-buffered chunk generation for the fused trainer.
+
+    After serving chunk [step, step+k) it speculatively builds the next
+    chunk [step+k, step+2k) on a background thread, overlapping host batch
+    generation with device compute. Generation is pure in (cfg, step), so a
+    mispredicted boundary (checkpoint / kill-injection / final ragged
+    chunk) just falls back to synchronous generation — determinism and
+    checkpoint state are owned by the caller's PipelineState, never by the
+    prefetch thread.
+    """
+
+    def __init__(self, cfg: SyntheticLMConfig):
+        self.cfg = cfg
+        self._thread: Optional[threading.Thread] = None
+        self._spec: Optional[tuple] = None
+        self._holder: Dict = {}
+
+    def _launch(self, step: int, k: int) -> None:
+        holder: Dict = {}
+
+        def work():
+            holder["chunk"] = chunk_batches(self.cfg, step, k)
+
+        th = threading.Thread(target=work, daemon=True,
+                              name="repro-chunk-prefetch")
+        th.start()
+        self._thread, self._spec, self._holder = th, (step, k), holder
+
+    def get(self, step: int, k: int, next_k: Optional[int] = None
+            ) -> Dict[str, np.ndarray]:
+        """The stacked chunk for [step, step+k).
+
+        ``next_k`` is the caller's prediction of the FOLLOWING chunk's
+        length (the Trainer knows it from its boundary rules): when given,
+        [step+k, step+k+next_k) is built on the background thread while
+        the device runs this chunk. None means no speculation — e.g. the
+        last chunk of a run, where a prefetched chunk would be wasted."""
+        if self._thread is not None:
+            self._thread.join()
+            hit = self._spec == (step, k)
+            chunk = self._holder.get("chunk") if hit else None
+            self._thread, self._spec, self._holder = None, None, {}
+        else:
+            chunk = None
+        if chunk is None:
+            chunk = chunk_batches(self.cfg, step, k)
+        if next_k:
+            self._launch(step + k, next_k)
+        return chunk

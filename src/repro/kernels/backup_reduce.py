@@ -28,19 +28,28 @@ def _reduce_kernel(g_ref, m_ref, o_ref, *, inv_n: float):
 
 def backup_reduce(grads: jnp.ndarray, mask: jnp.ndarray, n_aggregate: int, *,
                   block: int = 4096, interpret: bool = False) -> jnp.ndarray:
-    """grads: [W, N] stacked worker grads; mask: [W] -> [N] masked mean."""
+    """grads: [W, N] stacked worker grads; mask: [W] -> [N] masked mean.
+
+    N may be any size: the flattened gradient is zero-padded up to the
+    block multiple for the grid and the padding is sliced off the output
+    (zeros reduce to zeros, so the padded lanes are inert).
+    """
     w, n = grads.shape
     block = min(block, n)
-    assert n % block == 0, (n, block)
+    pad = (-n) % block
+    if pad:
+        grads = jnp.pad(grads, ((0, 0), (0, pad)))
+    padded = n + pad
     kernel = functools.partial(_reduce_kernel, inv_n=1.0 / n_aggregate)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(n // block,),
+        grid=(padded // block,),
         in_specs=[
             pl.BlockSpec((w, block), lambda i: (0, i)),
             pl.BlockSpec((w,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
         interpret=interpret,
     )(grads, mask.astype(jnp.float32))
+    return out[:n] if pad else out

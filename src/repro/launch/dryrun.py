@@ -39,7 +39,7 @@ from repro import configs
 from repro.configs.base import SHAPES_BY_NAME, replace
 from repro.core import ema as ema_lib
 from repro.distributed import sharding
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.models import get_model, registry
 from repro.optim import make_optimizer, schedules
 from repro.optim.optimizers import rmsprop_momentum
@@ -167,9 +167,18 @@ def parse_collectives(hlo_text: str) -> Dict[str, Any]:
             "num_ops": sum(d["count"] for d in per_kind.values())}
 
 
+def cost_analysis(compiled) -> Dict[str, Any]:
+    """compiled.cost_analysis() across jax versions: older jax returns a
+    one-dict-per-device list, newer returns the dict directly."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def analyze(compiled, lower_s: float, compile_s: float) -> Dict[str, Any]:
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     coll = parse_collectives(compiled.as_text())
     return {
         "memory": {
@@ -287,7 +296,7 @@ def lower_train(cfg, shape, mesh, num_workers: int, *, zero1: bool = True,
     constrainer = (sharding.layer_param_constrainer(
         cfg, mesh, fsdp=policy.get("fsdp", False))
         if policy.get("layer_constraints", True) else None)
-    with jax.set_mesh(mesh), sequence_parallel(policy.get("sp", False)), \
+    with use_mesh(mesh), sequence_parallel(policy.get("sp", False)), \
             layer_param_constraints(constrainer), moe_data_sharding(True):
         return jitted.lower(params_t, opt_t, ema_t, specs["step"],
                             specs["batch"], specs["mask"])
@@ -314,7 +323,7 @@ def lower_prefill(cfg, shape, mesh):
     # activations in training; forward-only prefill frees each layer's
     # activations, and an S-sharded residual conflicts with the chunked
     # attention layout (GSPMD falls back to replication).
-    with jax.set_mesh(mesh), moe_data_sharding(True):
+    with use_mesh(mesh), moe_data_sharding(True):
         return jitted.lower(params_t, specs["batch"])
 
 
@@ -330,7 +339,7 @@ def lower_decode(cfg, shape, mesh, cache_dtype=None):
     fn = serve_lib.build_decode_step(model)
     jitted = jax.jit(fn, in_shardings=(p_sh, t_sh, c_sh),
                      out_shardings=(None, c_sh), donate_argnums=(2,))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         return jitted.lower(params_t, specs["token"], specs["cache"])
 
 

@@ -40,6 +40,11 @@ def main(argv=None) -> None:
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk-size", type=int, default=1,
+                    help="steps fused per device dispatch (1 = legacy loop)")
+    ap.add_argument("--straggler-backend", choices=["host", "device"],
+                    default="host",
+                    help="'device' samples arrivals/batches inside the scan")
     args = ap.parse_args(argv)
 
     model_cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -59,7 +64,8 @@ def main(argv=None) -> None:
                                   ema_decay=0.999),
         checkpoint=CheckpointConfig(directory=args.ckpt,
                                     every_steps=args.ckpt_every),
-        seed=args.seed, log_every=10)
+        seed=args.seed, log_every=10, chunk_size=args.chunk_size,
+        straggler_backend=args.straggler_backend)
 
     tr = Trainer(cfg, latency=PaperCalibrated())
     import os

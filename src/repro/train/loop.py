@@ -13,6 +13,14 @@ stays False). While alive >= N the protocol absorbs it with zero downtime
 (the paper's point). When alive < N, the Trainer executes an elastic
 restart from the last checkpoint with the reduced worker count and the
 paper's lr rule re-applied.
+
+With ``cfg.chunk_size > 1`` the hot loop is fused: K iterations run in a
+single ``lax.scan`` dispatch, the K batches (and masks) ship in one
+stacked transfer, and metrics sync to host once per chunk. Chunk
+boundaries are forced at checkpoint / kill-injection / rescale steps, so
+failure handling and replay-exact resume are unchanged, and the default
+'host' straggler backend is bit-identical to the per-step path. See
+docs/perf.md.
 """
 from __future__ import annotations
 
@@ -29,14 +37,17 @@ import numpy as np
 from repro.configs.base import TrainConfig, replace
 from repro.core import aggregation as agg_lib
 from repro.core import ema as ema_lib
+from repro.core import straggler_jax
 from repro.core.events import StragglerSimulator
 from repro.core.straggler import LatencyModel, PaperCalibrated
-from repro.data.synthetic_lm import SyntheticLMConfig, SyntheticLMPipeline, PipelineState
+from repro.data.synthetic_lm import (ChunkPrefetcher, PipelineState,
+                                     SyntheticLMConfig, SyntheticLMPipeline,
+                                     device_batch_fn)
 from repro.models import get_model
 from repro.optim import make_optimizer, schedules
 from repro.train import checkpoint as ckpt_lib
 from repro.train import elastic
-from repro.train.train_step import build_train_step
+from repro.train.train_step import build_chunk_step, build_train_step
 
 
 @dataclasses.dataclass
@@ -75,13 +86,39 @@ class Trainer:
         self.pipeline = SyntheticLMPipeline(
             dataclasses.replace(self.data_cfg,
                                 num_workers=cfg.aggregation.total_workers))
-        step_fn = build_train_step(
-            self.model, self.optimizer,
+        step_kwargs = dict(
             num_workers=cfg.aggregation.total_workers,
             n_aggregate=cfg.aggregation.num_workers,
             ema_decay=cfg.optimizer.ema_decay,
             clip_norm=cfg.optimizer.clip_global_norm)
+        step_fn = build_train_step(self.model, self.optimizer, **step_kwargs)
         self.train_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+        # fused chunked path: K steps per dispatch via lax.scan (see
+        # docs/perf.md). 'host' backend replays the numpy straggler streams
+        # bit-exactly; 'device' samples arrivals inside the scan body.
+        if cfg.straggler_backend not in ("host", "device"):
+            raise ValueError(f"unknown straggler_backend "
+                             f"{cfg.straggler_backend!r} (host|device)")
+        if cfg.chunk_size > 1:
+            self.chunk_step = jax.jit(
+                build_chunk_step(self.model, self.optimizer, **step_kwargs),
+                donate_argnums=(0, 1, 2))
+            if cfg.straggler_backend == "device":
+                self.chunk_step_device = jax.jit(
+                    build_chunk_step(
+                        self.model, self.optimizer, **step_kwargs,
+                        sample_fn=straggler_jax.sampler_for(self.latency),
+                        select_fn=self.strategy.select_jax,
+                        data_fn=device_batch_fn(self.pipeline.cfg)),
+                    static_argnums=(4,), donate_argnums=(0, 1, 2))
+            self.prefetcher = ChunkPrefetcher(self.pipeline.cfg)
+            # domain-separated from device_batch_fn's data key stream
+            self._chunk_key = jax.random.fold_in(
+                jax.random.PRNGKey(cfg.seed), 0x57A6)
+        elif cfg.straggler_backend == "device":
+            raise ValueError(
+                "straggler_backend='device' requires chunk_size > 1 — the "
+                "device backend lives inside the fused chunk dispatch")
         self.step = 0
 
     def init_state(self, seed: Optional[int] = None) -> None:
@@ -122,7 +159,7 @@ class Trainer:
         self.pipeline.state = PipelineState.restore(manifest["data_state"])
         # replay-exact resume: the straggler simulator is deterministic in
         # (seed, step), so aligning its step restores the arrival sequence
-        self.sim._step = self.step
+        self.sim.reset_to_step(self.step)
 
     def _template(self):
         key = jax.random.PRNGKey(0)
@@ -167,22 +204,94 @@ class Trainer:
                     self.rescale(self.sim.alive)
                     continue
                 raise RuntimeError("insufficient live workers")
-            ev = self.sim.next_event()
-            batch_np = self.pipeline.next()
-            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            mask = jnp.asarray(ev.mask)
-            self.params, self.opt_state, self.ema, m = self.train_step(
-                self.params, self.opt_state, self.ema,
-                jnp.asarray(self.step, jnp.int32), batch, mask)
-            self.sim_time += ev.iteration_time
-            self.step += 1
-            if self.step % self.cfg.log_every == 0 or self.step == target:
-                rec = {"step": self.step, "sim_time": self.sim_time,
-                       "selected": int(ev.mask.sum()),
-                       **{k: float(v) for k, v in m.items()}}
-                self.metrics.append(rec)
+            k = self._chunk_len_at(self.step, target, kill_worker_at)
+            if self.cfg.chunk_size > 1:
+                # k == 1 still goes through the chunk path so the device
+                # backend's streams stay invariant to chunk partitioning
+                self._run_chunk(k, target, kill_worker_at)
+            else:
+                self._run_one_step(target)
             if (self.cfg.checkpoint.every_steps > 0
                     and self.step % self.cfg.checkpoint.every_steps == 0):
                 self.save_checkpoint()
         return TrainResult(self.params, self.ema, self.metrics, self.sim_time,
                            self.step, self.restarts)
+
+    def _chunk_len_at(self, step: int, target: int,
+                      kill_worker_at: Dict[int, int]) -> int:
+        """Steps from ``step`` until the next forced boundary: run target,
+        checkpoint cadence, or kill injection — so failure handling and
+        replay-exact resume semantics are untouched by chunking. Also used
+        to predict the NEXT chunk's length for the prefetcher."""
+        k = min(self.cfg.chunk_size, target - step)
+        every = self.cfg.checkpoint.every_steps
+        if every > 0:
+            k = min(k, every - step % every)
+        for s in kill_worker_at:
+            if step < s < step + k:
+                k = s - step
+        return max(k, 1)
+
+    def _run_one_step(self, target: int) -> None:
+        """Legacy per-step path: one dispatch + one metrics sync per step."""
+        ev = self.sim.next_event()
+        batch_np = self.pipeline.next()
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        mask = jnp.asarray(ev.mask)
+        self.params, self.opt_state, self.ema, m = self.train_step(
+            self.params, self.opt_state, self.ema,
+            jnp.asarray(self.step, jnp.int32), batch, mask)
+        self.sim_time += ev.iteration_time
+        self.step += 1
+        if self.step % self.cfg.log_every == 0 or self.step == target:
+            rec = {"step": self.step, "sim_time": self.sim_time,
+                   "selected": int(ev.mask.sum()),
+                   **{k: float(v) for k, v in m.items()}}
+            self.metrics.append(rec)
+
+    def _run_chunk(self, k: int, target: int,
+                   kill_worker_at: Dict[int, int]) -> None:
+        """Fused path: K steps in one lax.scan dispatch, one host sync."""
+        step0 = jnp.asarray(self.step, jnp.int32)
+        if self.cfg.straggler_backend == "device":
+            # fully device-resident: batches, arrivals and masks are all
+            # produced inside the scan body — no per-chunk host transfer
+            self.pipeline.state.step += k
+            dead = jnp.asarray(self.sim.dead)
+            (self.params, self.opt_state, self.ema, ms, masks_dev,
+             times_dev) = self.chunk_step_device(
+                self.params, self.opt_state, self.ema, step0, k,
+                dead, self._chunk_key)
+            masks = masks_dev                 # converted lazily iff logging
+            times = np.asarray(times_dev, np.float64)
+            self.sim.reset_to_step(self.sim.step + k)
+        else:
+            next_k = (self._chunk_len_at(self.step + k, target, kill_worker_at)
+                      if self.step + k < target else None)
+            chunk_np = self.prefetcher.get(self.pipeline.state.step, k,
+                                           next_k=next_k)
+            self.pipeline.state.step += k
+            batches = {key: jnp.asarray(v) for key, v in chunk_np.items()}
+            events = self.sim.next_events(k)
+            masks = events.masks
+            times = events.times
+            self.params, self.opt_state, self.ema, ms = self.chunk_step(
+                self.params, self.opt_state, self.ema, step0, batches,
+                jnp.asarray(masks))
+        # metrics sync only when a log record falls inside this chunk
+        logged = [i for i in range(k)
+                  if (self.step + i + 1) % self.cfg.log_every == 0
+                  or (self.step + i + 1) == target]
+        if logged:
+            if not isinstance(masks, np.ndarray):
+                masks = np.asarray(masks)
+            ms_np = {key: np.asarray(v) for key, v in ms.items()}
+        for i in range(k):
+            self.sim_time += float(times[i])
+            self.step += 1
+            if logged and i == logged[0]:
+                logged.pop(0)
+                rec = {"step": self.step, "sim_time": self.sim_time,
+                       "selected": int(masks[i].sum()),
+                       **{key: float(v[i]) for key, v in ms_np.items()}}
+                self.metrics.append(rec)

@@ -123,6 +123,77 @@ def build_train_step(model, optimizer: opt_lib.Optimizer, *, num_workers: int,
     return train_step
 
 
+def build_chunk_step(model, optimizer: opt_lib.Optimizer, *, num_workers: int,
+                     n_aggregate: int, ema_decay: float = 0.0,
+                     clip_norm: float = 0.0, num_microbatches: int = 1,
+                     grad_shardings: Any = None, sample_fn: Callable = None,
+                     select_fn: Callable = None,
+                     data_fn: Callable = None) -> Callable:
+    """Fused K-step trainer: one ``lax.scan`` dispatch per chunk.
+
+    Host-mask mode (``sample_fn is None``) — masks precomputed by the host
+    StragglerSimulator, stacked and shipped with the batch:
+
+        chunk(params, opt, ema, step0, batches [K,B,...], masks [K,W])
+            -> (params, opt, ema, metrics {k: [K]})
+
+    Device mode (``sample_fn``/``select_fn``/``data_fn`` given) — batch
+    generation, arrival sampling AND mask selection all run inside the
+    scan body; sim_time accumulates in the carry and everything syncs to
+    host once per chunk (``k`` is static — one compile per chunk length):
+
+        chunk(params, opt, ema, step0, k, dead [W], key)
+            -> (params, opt, ema, metrics {k: [K]}, masks [K,W], times [K])
+
+    Both modes advance ``step`` in the carry so lr schedules see the same
+    per-step values as the legacy path; the scan body is the unmodified
+    ``build_train_step`` function, which XLA compiles to the same
+    per-iteration arithmetic — the chunked host path is bit-identical to K
+    sequential dispatches (tests/test_chunked_loop.py).
+    """
+    step_fn = build_train_step(
+        model, optimizer, num_workers=num_workers, n_aggregate=n_aggregate,
+        ema_decay=ema_decay, clip_norm=clip_norm,
+        num_microbatches=num_microbatches, grad_shardings=grad_shardings)
+
+    def scan_steps(params, opt_state, ema_state, step0, batches, masks):
+        """The one scan both modes share: K steps over stacked (batch, mask)."""
+        def body(carry, xs):
+            p, o, e, step = carry
+            batch, mask = xs
+            p, o, e, m = step_fn(p, o, e, step, batch, mask)
+            return (p, o, e, step + 1), m
+
+        (p, o, e, _), ms = jax.lax.scan(
+            body, (params, opt_state, ema_state, step0), (batches, masks))
+        return p, o, e, ms
+
+    if sample_fn is None:
+        return scan_steps
+
+    if select_fn is None or data_fn is None:
+        raise ValueError("device mode needs sample_fn, select_fn and data_fn")
+
+    def chunk(params, opt_state, ema_state, step0, k, dead, key):
+        # All chunk randomness is generated vectorized up front (vmap over
+        # per-step keys — same streams as per-step generation, so results
+        # are invariant to how the run is partitioned into chunks) instead
+        # of inside the scan body: threefry expands to hundreds of HLO ops,
+        # and hoisting it keeps the scan body at the bare train-step cost.
+        steps = step0 + jnp.arange(k, dtype=step0.dtype)
+        batches = jax.vmap(data_fn)(steps)
+        arrivals = jax.vmap(
+            lambda s: sample_fn(jax.random.fold_in(key, s), dead.shape))(steps)
+        arrivals = jnp.where(dead[None, :], jnp.inf, arrivals)
+        masks, times = jax.vmap(select_fn)(arrivals)
+        masks = masks & ~dead[None, :]
+        p, o, e, ms = scan_steps(params, opt_state, ema_state, step0,
+                                 batches, masks)
+        return p, o, e, ms, masks, times
+
+    return chunk
+
+
 def build_eval_step(model) -> Callable:
     def eval_step(params, batch):
         per_tok, _ = model.per_token_loss(params, batch)

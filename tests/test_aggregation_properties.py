@@ -1,0 +1,49 @@
+"""Hypothesis property tests for the aggregation strategies.
+
+Skipped module-wide when ``hypothesis`` is not installed (it ships in
+requirements-dev.txt); the deterministic fallbacks in test_aggregation.py
+always run.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation
+
+
+arrivals_strategy = st.lists(
+    st.floats(min_value=0.01, max_value=500.0, allow_nan=False),
+    min_size=5, max_size=32).map(np.array)
+
+
+@given(arr=arrivals_strategy)
+@settings(max_examples=30, deadline=None)
+def test_backup_selects_fastest_n(arr):
+    n = max(1, len(arr) - 2)
+    s = aggregation.BackupWorkers(n, len(arr) - n)
+    mask, t = s.select(arr)
+    assert mask.sum() == n
+    assert t == pytest.approx(np.sort(arr)[n - 1])
+    # invariance: selected set == argsort prefix
+    assert set(np.where(mask)[0]) == set(np.argsort(arr, kind="stable")[:n])
+
+
+@given(arr=arrivals_strategy)
+@settings(max_examples=30, deadline=None)
+def test_fullsync_waits_for_max(arr):
+    s = aggregation.FullSync(len(arr))
+    mask, t = s.select(arr)
+    assert mask.all()
+    assert t == pytest.approx(arr.max())
+
+
+@given(arr=arrivals_strategy, d=st.floats(0.0, 10.0))
+@settings(max_examples=30, deadline=None)
+def test_timeout_always_selects_at_least_one(arr, d):
+    s = aggregation.Timeout(len(arr), d)
+    mask, t = s.select(arr)
+    assert mask.sum() >= 1
+    assert mask[np.argmin(arr)]
+    assert t <= arr.min() + d + 1e-9

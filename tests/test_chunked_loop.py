@@ -1,0 +1,208 @@
+"""Fused chunked trainer == legacy per-step trainer, bit for bit.
+
+The chunked path (cfg.chunk_size > 1, 'host' straggler backend) must
+produce bit-identical params / opt_state / ema / sim_time / metrics to the
+legacy loop — including across checkpoint/restore boundaries and kill
+injections — because the scan body is the same jitted step function and
+the host straggler streams are untouched.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                OptimizerConfig, ShapeConfig, TrainConfig)
+from repro.core.straggler import PaperCalibrated, Uniform
+from repro.train.loop import Trainer
+
+
+def _cfg(tmp_path, chunk_size=1, strategy="backup", workers=4, backups=2,
+         ckpt_every=0, backend="host", ema=0.999):
+    return TrainConfig(
+        model=configs.get_smoke_config("qwen3-0.6b"),
+        shape=ShapeConfig("t", 16, 24, "train"),
+        aggregation=AggregationConfig(strategy=strategy, num_workers=workers,
+                                      backup_workers=backups, deadline_s=0.4),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.05,
+                                  scale_lr_with_workers=False,
+                                  ema_decay=ema),
+        checkpoint=CheckpointConfig(directory=str(tmp_path),
+                                    every_steps=ckpt_every),
+        log_every=3, chunk_size=chunk_size, straggler_backend=backend)
+
+
+def _trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def _run_pair(tmp_path, steps, chunk, kills=None, **kw):
+    tr_legacy = Trainer(_cfg(tmp_path / "legacy", chunk_size=1, **kw),
+                        latency=Uniform(1.0, 2.0))
+    tr_legacy.init_state()
+    r1 = tr_legacy.run(steps, kill_worker_at=kills)
+    tr_chunk = Trainer(_cfg(tmp_path / "chunk", chunk_size=chunk, **kw),
+                       latency=Uniform(1.0, 2.0))
+    tr_chunk.init_state()
+    r2 = tr_chunk.run(steps, kill_worker_at=kills)
+    return tr_legacy, tr_chunk, r1, r2
+
+
+def test_chunked_bit_identical_to_legacy(tmp_path):
+    """17 steps with chunk_size=8 exercises full chunks + a ragged tail."""
+    tr1, tr2, r1, r2 = _run_pair(tmp_path, steps=17, chunk=8)
+    assert _trees_equal(tr1.params, tr2.params)
+    assert _trees_equal(tr1.opt_state, tr2.opt_state)
+    assert _trees_equal(tr1.ema, tr2.ema)
+    assert r1.sim_time == r2.sim_time          # bit-exact, not approx
+    assert r1.metrics == r2.metrics
+
+
+@pytest.mark.parametrize("strategy,backups", [("full_sync", 0),
+                                              ("timeout", 0)])
+def test_chunked_bit_identical_other_strategies(tmp_path, strategy, backups):
+    tr1, tr2, r1, r2 = _run_pair(tmp_path, steps=9, chunk=4,
+                                 strategy=strategy, backups=backups)
+    assert _trees_equal(tr1.params, tr2.params)
+    assert r1.sim_time == r2.sim_time
+    assert r1.metrics == r2.metrics
+
+
+def test_chunked_across_checkpoint_restore_boundary(tmp_path):
+    """Chunk boundaries are forced at the checkpoint cadence, and a trainer
+    restored from a mid-run checkpoint continues bit-identically on the
+    chunked path."""
+    kw = dict(ckpt_every=5)
+    tr1, tr2, r1, r2 = _run_pair(tmp_path, steps=13, chunk=8, **kw)
+    assert _trees_equal(tr1.params, tr2.params)
+    assert r1.sim_time == r2.sim_time
+
+    # restore at step 10 (cadence checkpoint) into a fresh chunked trainer
+    tr3 = Trainer(_cfg(tmp_path / "chunk", chunk_size=8, **kw),
+                  latency=Uniform(1.0, 2.0))
+    tr3.restore_checkpoint(step=10)
+    assert tr3.step == 10
+    tr3.run(3)
+    assert _trees_equal(tr1.params, tr3.params)
+    assert tr3.sim_time == r1.sim_time
+
+
+def test_chunked_kill_injection_boundary(tmp_path):
+    """A kill at step 7 forces a chunk boundary; the dead worker is never
+    selected afterwards and the result still matches legacy bit-exactly."""
+    kills = {7: 0}
+    tr1, tr2, r1, r2 = _run_pair(tmp_path, steps=14, chunk=8, kills=kills)
+    assert _trees_equal(tr1.params, tr2.params)
+    assert r1.sim_time == r2.sim_time
+    assert r1.metrics == r2.metrics
+    # every post-kill event excludes worker 0
+    tr2.sim.reset_to_step(7)
+    ev = tr2.sim.next_event()
+    assert not ev.mask[0]
+
+
+def test_chunked_no_ema(tmp_path):
+    tr1, tr2, r1, r2 = _run_pair(tmp_path, steps=6, chunk=3, ema=0.0)
+    assert tr1.ema is None and tr2.ema is None
+    assert _trees_equal(tr1.params, tr2.params)
+    assert r1.sim_time == r2.sim_time
+
+
+def test_device_backend_runs_and_converges(tmp_path):
+    """'device' backend: arrivals sampled + mask selected inside the scan.
+    Not stream-identical to numpy, but the loop must train and the backup
+    rule must select exactly N workers per step."""
+    tr = Trainer(_cfg(tmp_path, chunk_size=4, backend="device"),
+                 latency=PaperCalibrated())
+    tr.init_state()
+    res = tr.run(12)
+    losses = [m["loss"] for m in res.metrics]
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+    assert res.sim_time > 0
+    assert all(m["selected"] == 4 for m in res.metrics)
+
+
+def test_device_backend_requires_chunking(tmp_path):
+    """chunk_size=1 + device backend would silently fall back to host
+    streams — must be rejected at construction instead."""
+    with pytest.raises(ValueError, match="chunk_size"):
+        Trainer(_cfg(tmp_path, chunk_size=1, backend="device"),
+                latency=Uniform(1.0, 2.0))
+    with pytest.raises(ValueError, match="straggler_backend"):
+        Trainer(_cfg(tmp_path, chunk_size=4, backend="tpu"),
+                latency=Uniform(1.0, 2.0))
+
+
+def test_device_backend_chunk_size_invariant(tmp_path):
+    """Device randomness is keyed per step (fold_in), so results must not
+    depend on how the run is partitioned into chunks — including ragged
+    tails ([4,4,1] vs [3,3,3] for 9 steps)."""
+    ra = Trainer(_cfg(tmp_path / "a", chunk_size=4, backend="device"),
+                 latency=Uniform(1.0, 2.0))
+    ra.init_state()
+    res_a = ra.run(9)
+    rb = Trainer(_cfg(tmp_path / "b", chunk_size=3, backend="device"),
+                 latency=Uniform(1.0, 2.0))
+    rb.init_state()
+    res_b = rb.run(9)
+    assert _trees_equal(ra.params, rb.params)
+    assert res_a.sim_time == res_b.sim_time
+
+
+def test_device_backend_replay_deterministic(tmp_path):
+    """Device sampling is pure in (seed, step): two trainers agree."""
+    ra = Trainer(_cfg(tmp_path / "a", chunk_size=4, backend="device"),
+                 latency=Uniform(1.0, 2.0))
+    ra.init_state()
+    res_a = ra.run(8)
+    rb = Trainer(_cfg(tmp_path / "b", chunk_size=4, backend="device"),
+                 latency=Uniform(1.0, 2.0))
+    rb.init_state()
+    res_b = rb.run(8)
+    assert _trees_equal(ra.params, rb.params)
+    assert res_a.sim_time == res_b.sim_time
+
+
+def test_prefetcher_speculation_and_fallback():
+    from repro.data.synthetic_lm import (ChunkPrefetcher, SyntheticLMConfig,
+                                         chunk_batches)
+    cfg = SyntheticLMConfig(vocab_size=64, seq_len=8, global_batch=8,
+                            num_workers=2)
+    pf = ChunkPrefetcher(cfg)
+    # sequential requests with next_k hints (speculation hits)
+    for step in (0, 4, 8):
+        got = pf.get(step, 4, next_k=4)
+        want = chunk_batches(cfg, step, 4)
+        np.testing.assert_array_equal(got["tokens"], want["tokens"])
+        np.testing.assert_array_equal(got["labels"], want["labels"])
+    # boundary misprediction: different step AND different k still correct
+    got = pf.get(17, 3, next_k=5)
+    want = chunk_batches(cfg, 17, 3)
+    np.testing.assert_array_equal(got["tokens"], want["tokens"])
+    # ragged next_k hint honored (speculation hit on a different length)
+    got = pf.get(20, 5)
+    want = chunk_batches(cfg, 20, 5)
+    np.testing.assert_array_equal(got["tokens"], want["tokens"])
+    # no hint -> no in-flight thread left behind
+    assert pf._thread is None
+
+
+def test_chunk_batches_matches_per_step():
+    from repro.data.synthetic_lm import (SyntheticLMConfig, chunk_batches,
+                                         global_batch)
+    cfg = SyntheticLMConfig(vocab_size=64, seq_len=8, global_batch=8,
+                            num_workers=2)
+    chunk = chunk_batches(cfg, 5, 3)
+    assert chunk["tokens"].shape == (3, 8, 8)
+    for i, s in enumerate(range(5, 8)):
+        per = global_batch(cfg, s)
+        np.testing.assert_array_equal(chunk["tokens"][i], per["tokens"])
+        np.testing.assert_array_equal(chunk["labels"][i], per["labels"])

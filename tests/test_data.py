@@ -1,7 +1,7 @@
 """Data pipelines: determinism, worker-shard disjointness, learnability."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_stub import given, settings, st
 
 from repro.data import mnist_like, synthetic_lm
 

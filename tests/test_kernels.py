@@ -111,7 +111,11 @@ def test_ssd_chunked_matches_scan():
 
 
 @pytest.mark.parametrize("w,n,block", [(8, 4096, 1024), (16, 8192, 4096),
-                                       (3, 512, 512)])
+                                       (3, 512, 512),
+                                       # non-multiple sizes: kernel pads the
+                                       # flattened grad to the block multiple
+                                       (8, 5000, 1024), (4, 700, 256),
+                                       (5, 3, 4096)])
 def test_backup_reduce_kernel(w, n, block):
     rng = np.random.RandomState(0)
     g = jnp.asarray(rng.randn(w, n), jnp.float32)

@@ -28,7 +28,7 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import configs
 from repro.configs.base import ShapeConfig
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, use_mesh
 from repro.models import get_model
 from repro.optim import optimizers as opt_lib, schedules
 from repro.train.train_step import build_train_step, input_specs
@@ -57,7 +57,7 @@ p_sh = sharding.param_shardings(cfg, mesh, jax.eval_shape(lambda: params))
 b_sh = sharding.batch_shardings(mesh, batch)
 o_sh = sharding.opt_state_shardings(cfg, mesh, jax.eval_shape(lambda: opt_state), zero1=True)
 rep = NamedSharding(mesh, P())
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     jitted = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None, rep, b_sh, rep))
     p_spmd, o_spmd, _, m_spmd = jitted(
         jax.device_put(params, p_sh), jax.device_put(opt_state, o_sh), None,
@@ -109,7 +109,7 @@ import jax, jax.numpy as jnp
 from repro import configs
 from repro.configs.base import ShapeConfig, replace
 from repro.launch import dryrun
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, use_mesh
 
 cfg = replace(configs.get_smoke_config("qwen3-0.6b"), dtype="bfloat16")
 mesh = make_host_mesh(4, 2)
@@ -138,8 +138,8 @@ def test_collective_parser_scan_vs_unrolled():
     run_py(r"""
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.launch.dryrun import parse_collectives
-from repro.launch.mesh import make_host_mesh
+from repro.launch.dryrun import cost_analysis, parse_collectives
+from repro.launch.mesh import make_host_mesh, use_mesh
 
 mesh = make_host_mesh(2, 4)
 D, L = 128, 12
@@ -155,7 +155,7 @@ def f_unroll(ws, x):
 ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
 x = jax.ShapeDtypeStruct((64, D), jnp.float32)
 sh = (NamedSharding(mesh, P(None, None, "model")), NamedSharding(mesh, P("data", None)))
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     cs = jax.jit(f_scan, in_shardings=sh).lower(ws, x).compile()
     cu = jax.jit(f_unroll, in_shardings=sh).lower(ws, x).compile()
 ps = parse_collectives(cs.as_text())
@@ -164,7 +164,7 @@ assert ps["total_bytes"] > 0
 ratio = ps["total_bytes"] / max(pu["total_bytes"], 1)
 assert 0.8 <= ratio <= 1.5, (ps, pu)
 # the raw flop counter, by contrast, undercounts the scan by ~L
-fs = cs.cost_analysis()["flops"]; fu = cu.cost_analysis()["flops"]
+fs = cost_analysis(cs)["flops"]; fu = cost_analysis(cu)["flops"]
 assert fs < fu / (L / 2)
 print("collective parser: OK", ratio)
 """)

@@ -1,0 +1,113 @@
+"""JAX latency samplers: distribution equivalence with the numpy models,
+and select_jax == select on identical arrivals."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, straggler, straggler_jax
+
+
+def _np_samples(model, n, workers=8, seed=0):
+    rng = np.random.RandomState(seed)
+    return model.sample(rng, (n, workers))
+
+
+def _jax_samples(model, n, workers=8, seed=0):
+    fn = straggler_jax.sampler_for(model)
+    return np.asarray(fn(jax.random.PRNGKey(seed), (n, workers)))
+
+
+MODELS = [
+    straggler.Uniform(1.0, 2.0),
+    straggler.LogNormal(median=1.4, sigma=0.15),
+    straggler.PaperCalibrated(),
+    straggler.DeterministicStragglers(slow_workers=(2,), slowdown=5.0),
+]
+
+
+@pytest.mark.parametrize("model", MODELS, ids=lambda m: type(m).__name__)
+def test_distribution_equivalence(model):
+    """Moments and quantiles agree between the numpy and jax samplers."""
+    a = _np_samples(model, 4000).ravel()
+    b = _jax_samples(model, 4000).ravel()
+    assert np.all(b > 0)
+    assert b.mean() == pytest.approx(a.mean(), rel=0.08)
+    for q in (0.1, 0.5, 0.9):
+        assert np.quantile(b, q) == pytest.approx(np.quantile(a, q), rel=0.05)
+
+
+def test_paper_calibrated_tail_and_cap():
+    m = straggler.PaperCalibrated()
+    s = _jax_samples(m, 30000, workers=4).ravel()
+    assert s.max() <= m.cap + 1e-5
+    tail_frac = np.mean(s > m.base + 5.0)
+    assert 0.5 * m.p_tail < tail_frac < 2.5 * m.p_tail
+
+
+def test_deterministic_stragglers_slow_worker():
+    m = straggler.DeterministicStragglers(slow_workers=(1,), slowdown=50.0)
+    s = _jax_samples(m, 500, workers=4)
+    assert s[:, 1].mean() > 10 * s[:, 0].mean()
+
+
+def test_sampler_for_unknown_model_raises():
+    class Weird(straggler.LatencyModel):
+        pass
+
+    with pytest.raises(NotImplementedError):
+        straggler_jax.sampler_for(Weird())
+
+
+def test_register_sampler_extension():
+    class Constant(straggler.LatencyModel):
+        pass
+
+    straggler_jax.register_sampler(
+        Constant, lambda model, key, shape: jnp.full(shape, 2.5))
+    out = straggler_jax.sampler_for(Constant())(jax.random.PRNGKey(0), (3,))
+    np.testing.assert_allclose(np.asarray(out), 2.5)
+
+
+def test_step_arrivals_dead_worker_inf():
+    arr = straggler_jax.step_arrivals(
+        straggler.Uniform(1.0, 2.0), jax.random.PRNGKey(0), 3, 4,
+        dead=jnp.asarray([False, True, False, False]))
+    arr = np.asarray(arr)
+    assert np.isinf(arr[1])
+    assert np.all(np.isfinite(np.delete(arr, 1)))
+
+
+@pytest.mark.parametrize("strategy", [
+    aggregation.FullSync(8),
+    aggregation.BackupWorkers(6, 2),
+    aggregation.Timeout(8, 0.5),
+], ids=lambda s: type(s).__name__)
+def test_select_jax_matches_select(strategy):
+    rng = np.random.RandomState(0)
+    for _ in range(25):
+        arrivals = rng.uniform(0.5, 5.0, size=8)
+        mask_np, t_np = strategy.select(arrivals)
+        mask_j, t_j = strategy.select_jax(jnp.asarray(arrivals))
+        np.testing.assert_array_equal(mask_np, np.asarray(mask_j))
+        assert float(t_j) == pytest.approx(t_np, rel=1e-6)
+
+
+def test_select_jax_backup_with_inf_arrivals():
+    """Dead (inf) workers land last in the sort and are never selected
+    while enough live workers exist."""
+    s = aggregation.BackupWorkers(3, 2)
+    arrivals = jnp.asarray([1.0, jnp.inf, 0.5, 2.0, 0.7])
+    mask, t = s.select_jax(arrivals)
+    mask = np.asarray(mask)
+    assert not mask[1]
+    assert mask.sum() == 3
+    assert float(t) == pytest.approx(1.0)
+
+
+def test_select_jax_is_traceable():
+    s = aggregation.BackupWorkers(3, 1)
+    f = jax.jit(s.select_jax)
+    mask, t = f(jnp.asarray([3.0, 1.0, 2.0, 4.0]))
+    assert np.asarray(mask).sum() == 3
+    assert float(t) == pytest.approx(3.0)
