@@ -1,6 +1,8 @@
 """The paper's headline comparison (Figs. 8/9) at laptop scale:
-Async-Opt vs plain Sync-Opt vs Sync-Opt with backup workers, identical
-machine budget, simulated cluster latencies.
+Async-Opt vs plain Sync-Opt vs Sync-Opt with backup workers (plus the
+SoftSync related-work baseline), identical machine budget, simulated
+cluster latencies. Every variant runs through the single
+``run_experiment(cfg)`` entry point — only the strategy string changes.
 
     PYTHONPATH=src python examples/sync_vs_async.py [--steps 250]
 """
@@ -18,8 +20,8 @@ def main() -> None:
     args = ap.parse_args()
     os.environ.setdefault("REPRO_BENCH_FULL", "0")
 
-    from benchmarks import bench_sync_vs_async, common
-    rows = bench_sync_vs_async.run(quick=args.steps <= 250)
+    from benchmarks import bench_sync_vs_async
+    rows = bench_sync_vs_async.run(quick=args.steps <= 250, steps=args.steps)
     print(f"{'variant':<45} | result")
     print("-" * 70)
     for name, us, derived in rows:

@@ -223,14 +223,16 @@ MULTI_POD_MESH = MeshConfig((2, 16, 16), ("pod", "data", "model"))
 class AggregationConfig:
     """The paper's Sync/Async/backup-worker policy knobs.
 
-    strategy:
+    Strategies are constructed by ``repro.core.registry.get_strategy``:
       'full_sync'  — paper's plain Sync-Opt (wait for all N+b == all workers)
       'backup'     — paper's Alg. 3/4: aggregate first N of N+b, drop b
       'timeout'    — paper §6 future-work variant: aggregate all arrivals
                      within deadline_s of the first (>=1 always aggregated)
+      'async'      — paper's Alg. 1/2 baseline (event-driven)
       'softsync'   — Zhang et al. (2015b) related-work baseline: async apply
                      every c arrivals (stale allowed) — for comparisons only
-      'async'      — paper's Alg. 1/2 baseline
+      'staleness'  — paper §2.1 controlled rig: serial SGD applying the
+                     gradient from staleness_tau steps ago
     """
 
     strategy: str = "backup"
@@ -238,6 +240,9 @@ class AggregationConfig:
     backup_workers: int = 0           # b  (total launched = N + b)
     deadline_s: float = 0.0           # timeout strategy
     softsync_c: int = 1
+    staleness_tau: int = 0            # staleness strategy: target tau
+    staleness_ramp_steps: int = 0     # ramp tau up over the first steps
+    staleness_jitter: int = 0         # +- uniform jitter on tau
     # gradient compression over the wire: 'none' | 'bf16' | 'int8_ef'
     compression: str = "none"
     # reduce-scatter + ZeRO-1 instead of all-reduce + replicated opt state
@@ -263,6 +268,10 @@ class OptimizerConfig:
     # exponential schedule gamma0 * beta^(t*N/(2T)) (paper A.2/A.3)
     lr_decay_rate: float = 0.94
     steps_per_epoch: int = 0          # T = |X|/B; 0 disables the schedule
+    # linear anneal to 0 over [linear_anneal_from, linear_anneal_steps]
+    # (paper A.1 MNIST recipe); >0 takes precedence over the exponential
+    linear_anneal_steps: int = 0
+    linear_anneal_from: int = 0
     warmup_steps: int = 0
     clip_global_norm: float = 0.0     # >0 enables (async needs it; sync not)
     ema_decay: float = 0.9999         # paper evaluates on EMA of params

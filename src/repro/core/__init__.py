@@ -1,7 +1,13 @@
-"""The paper's contribution: synchronous optimization with backup workers,
-the async/staleness baselines, straggler models, and EMA evaluation."""
-from repro.core import aggregation, async_sim, ema, events, straggler, sync_backup
-from repro.core.aggregation import BackupWorkers, FullSync, Timeout
+"""The paper's contribution: one coordination API over synchronous
+optimization with backup workers, the async/softsync/staleness baselines,
+straggler models, and EMA evaluation. Strategies are built from
+``AggregationConfig`` via ``repro.core.registry.get_strategy``."""
+from repro.core import (aggregation, async_sim, coordination, ema, events,
+                        registry, straggler, sync_backup)
+from repro.core.coordination import (Async, BackupWorkers,
+                                     CoordinationStrategy, FullSync,
+                                     SoftSync, Staleness, Timeout)
 from repro.core.events import StepEvent, StragglerSimulator
+from repro.core.registry import get_strategy
 from repro.core.straggler import (DeterministicStragglers, LogNormal,
                                   PaperCalibrated, Uniform)

@@ -1,153 +1,26 @@
-"""Gradient-aggregation strategies — the paper's protocol knobs.
+"""Deprecated shim — the mask strategies moved to repro.core.coordination.
 
-Each strategy turns one iteration's worker arrival times into
-  (mask over N+b workers, iteration wall time).
-
-* FullSync           — paper's plain Sync-Opt: wait for everyone.
-* BackupWorkers(N,b) — paper Alg. 3/4: first N arrivals count, b dropped.
-* Timeout(d)         — paper §6 future work: everything within d of the
-                       first arrival counts (>=1 always).
-* (Async / SoftSync are event-driven, see repro.core.async_sim.)
-
-The mask is *data* to the SPMD train step: dropped workers still compute
-(their cycles are the price of the insurance — identical to the paper,
-whose backup workers' gradients are discarded on arrival).
-
-``select`` is the host (numpy) rule; ``select_jax`` is its traceable
-counterpart used inside the fused chunked trainer's ``lax.scan`` body
-(same semantics, jnp ops, no host sync).
+``FullSync``/``BackupWorkers``/``Timeout`` (and the ``Strategy`` base)
+are re-exported unchanged, so every existing import keeps working.
+``from_config`` now delegates to :func:`repro.core.registry.get_strategy`
+and emits a ``DeprecationWarning`` once per process; like the original it
+only hands back synchronous mask strategies (event regimes raise).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Tuple
-
-import jax.numpy as jnp
-import numpy as np
-
-
-class Strategy:
-    total_workers: int
-
-    def select(self, arrivals: np.ndarray) -> Tuple[np.ndarray, float]:
-        """arrivals: [W] seconds -> (mask bool [W], iteration_time)."""
-        raise NotImplementedError
-
-    def select_jax(self, arrivals: jnp.ndarray):
-        """Traceable select: [W] jnp seconds -> (bool [W], f32 scalar)."""
-        raise NotImplementedError
-
-    def select_batch(self, arrivals: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """Vectorized select: [K, W] -> (masks [K, W], times [K]).
-
-        Row i is bitwise-identical to select(arrivals[i]) — the fused
-        chunked trainer relies on this for replay-exact equivalence.
-        Subclasses override with a vectorized rule; this fallback loops.
-        """
-        pairs = [self.select(a) for a in arrivals]
-        return (np.stack([m for m, _ in pairs]),
-                np.array([t for _, t in pairs], np.float64))
-
-    def effective_n(self) -> int:
-        raise NotImplementedError
-
-
-@dataclasses.dataclass(frozen=True)
-class FullSync(Strategy):
-    num_workers: int
-
-    @property
-    def total_workers(self) -> int:
-        return self.num_workers
-
-    def select(self, arrivals):
-        mask = np.ones_like(arrivals, dtype=bool)
-        return mask, float(arrivals.max())
-
-    def select_jax(self, arrivals):
-        return jnp.ones(arrivals.shape, dtype=bool), jnp.max(arrivals)
-
-    def select_batch(self, arrivals):
-        return (np.ones_like(arrivals, dtype=bool),
-                arrivals.max(axis=-1).astype(np.float64))
-
-    def effective_n(self) -> int:
-        return self.num_workers
-
-
-@dataclasses.dataclass(frozen=True)
-class BackupWorkers(Strategy):
-    """Aggregate the first N of N+b arrivals (paper Alg. 3/4)."""
-
-    num_workers: int          # N
-    backups: int              # b
-
-    @property
-    def total_workers(self) -> int:
-        return self.num_workers + self.backups
-
-    def select(self, arrivals):
-        n = self.num_workers
-        order = np.argsort(arrivals, kind="stable")
-        mask = np.zeros_like(arrivals, dtype=bool)
-        mask[order[:n]] = True
-        return mask, float(arrivals[order[n - 1]])
-
-    def select_jax(self, arrivals):
-        n = self.num_workers
-        order = jnp.argsort(arrivals)        # stable, matching np "stable"
-        mask = jnp.zeros(arrivals.shape, dtype=bool).at[order[:n]].set(True)
-        return mask, arrivals[order[n - 1]]
-
-    def select_batch(self, arrivals):
-        n = self.num_workers
-        order = np.argsort(arrivals, axis=-1, kind="stable")
-        masks = np.zeros_like(arrivals, dtype=bool)
-        np.put_along_axis(masks, order[:, :n], True, axis=-1)
-        times = np.take_along_axis(arrivals, order[:, n - 1:n], axis=-1)[:, 0]
-        return masks, times.astype(np.float64)
-
-    def effective_n(self) -> int:
-        return self.num_workers
-
-
-@dataclasses.dataclass(frozen=True)
-class Timeout(Strategy):
-    """Aggregate all gradients arriving within `deadline_s` of the first."""
-
-    num_workers: int
-    deadline_s: float
-
-    @property
-    def total_workers(self) -> int:
-        return self.num_workers
-
-    def select(self, arrivals):
-        t0 = arrivals.min()
-        cutoff = t0 + self.deadline_s
-        mask = arrivals <= cutoff
-        return mask, float(min(arrivals.max(), cutoff))
-
-    def select_jax(self, arrivals):
-        cutoff = jnp.min(arrivals) + self.deadline_s
-        return arrivals <= cutoff, jnp.minimum(jnp.max(arrivals), cutoff)
-
-    def select_batch(self, arrivals):
-        cutoff = arrivals.min(axis=-1) + self.deadline_s
-        masks = arrivals <= cutoff[:, None]
-        times = np.minimum(arrivals.max(axis=-1), cutoff)
-        return masks, times.astype(np.float64)
-
-    def effective_n(self) -> int:
-        return self.num_workers     # varies per step; N is the upper bound
+from repro.core import registry as _registry
+from repro.core.coordination import (BackupWorkers, FullSync,   # noqa: F401
+                                     MaskStrategy, Strategy, Timeout,
+                                     warn_once)
 
 
 def from_config(agg_cfg) -> Strategy:
-    s = agg_cfg.strategy
-    if s == "full_sync":
-        return FullSync(agg_cfg.total_workers)
-    if s == "backup":
-        return BackupWorkers(agg_cfg.num_workers, agg_cfg.backup_workers)
-    if s == "timeout":
-        return Timeout(agg_cfg.num_workers, agg_cfg.deadline_s)
-    raise ValueError(f"strategy {s!r} is not a synchronous mask strategy")
+    warn_once("aggregation.from_config",
+              "repro.core.aggregation.from_config is deprecated; use "
+              "repro.core.registry.get_strategy(cfg) instead")
+    strategy = _registry.get_strategy(agg_cfg)
+    if strategy.kind != "mask":
+        raise ValueError(
+            f"strategy {agg_cfg.strategy!r} is not a synchronous mask "
+            f"strategy")
+    return strategy

@@ -1,152 +1,37 @@
-"""Async-Opt (paper Alg. 1/2) discrete-event simulator + §2.1 staleness rig.
+"""Deprecated shims — the event engines moved to repro.core.coordination.
 
-``simulate_async`` reproduces the parameter-server semantics exactly:
-each worker holds the parameter copy it last read; when its gradient
-"arrives" (per the latency model), the PS applies it immediately — the
-gradient is stale by however many updates landed since the read. Staleness
-per update is recorded (Table 1 / Fig. 2 territory).
-
-``simulate_staleness`` is the paper's §2.1 controlled experiment: serial
-SGD but each update uses the gradient from `tau` steps ago (old-gradient
-buffer), with the paper's ramp-up trick (staleness grows over the first
-epochs) — with tau=0 it is bit-exact serial SGD (tested).
-
-``simulate_softsync`` is the related-work baseline (Zhang et al. 2015b):
-batch c gradients per (stale) update.
+``simulate_async`` (paper Alg. 1/2), ``simulate_softsync`` (Zhang et al.
+2015b) and ``simulate_staleness`` (paper §2.1's old-gradient rig) keep
+their exact legacy signatures and bit-exact numerics: they delegate to
+:func:`repro.core.coordination.run_events`, which is the faithful port of
+the original discrete-event loops (same RandomState draw order, same heap
+discipline). Each entry point emits a ``DeprecationWarning`` once per
+process. New code should construct strategies via
+``repro.core.registry.get_strategy`` and run them through
+``repro.train.loop.run_experiment`` (see docs/api.md).
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.straggler import LatencyModel, PaperCalibrated
-
-
-@dataclasses.dataclass
-class AsyncResult:
-    params: Any
-    ema: Any
-    losses: np.ndarray            # loss at each PS update
-    staleness: np.ndarray         # staleness of each applied gradient
-    sim_time: np.ndarray          # wall-clock (simulated s) of each update
-    updates: int
+from repro.core.coordination import (Async, AsyncResult,       # noqa: F401
+                                     SoftSync, Staleness, run_events,
+                                     staleness_schedule, warn_once)
+from repro.core.straggler import LatencyModel
 
 
 def simulate_async(grad_fn: Callable, update_fn: Callable, params0: Any,
                    batch_fn: Callable[[int, int], Dict], num_workers: int,
                    num_updates: int, latency: Optional[LatencyModel] = None,
                    seed: int = 0, ema_decay: float = 0.0) -> AsyncResult:
-    """Exact Alg. 1/2 event simulation.
-
-    grad_fn(params, batch) -> (loss, grads);
-    update_fn(params, opt_state, grads, step) -> (params, opt_state);
-      (the caller closes over the optimizer; step drives the lr schedule)
-    batch_fn(worker, draw_index) -> batch.
-    """
-    latency = latency or PaperCalibrated()
-    rng = np.random.RandomState(seed)
-    params = params0
-    opt_state = None  # lazily initialized by caller's update_fn via closure
-    from repro.core import ema as ema_lib
-    ema_state = ema_lib.init(params) if ema_decay > 0 else None
-
-    # worker state: the params version it read, and its read "update count"
-    read_params: List[Any] = [params for _ in range(num_workers)]
-    read_version = np.zeros(num_workers, dtype=np.int64)
-    draws = np.zeros(num_workers, dtype=np.int64)
-
-    # event queue: (finish_time, worker)
-    first = latency.sample(rng, (num_workers,))
-    q = [(float(first[w]), w) for w in range(num_workers)]
-    heapq.heapify(q)
-
-    losses, stals, times = [], [], []
-    version = 0
-    while version < num_updates:
-        t, w = heapq.heappop(q)
-        batch = batch_fn(w, int(draws[w]))
-        draws[w] += 1
-        loss, grads = grad_fn(read_params[w], batch)
-        params, opt_state = update_fn(params, opt_state, grads, version)
-        if ema_state is not None:
-            ema_state = ema_lib.update(ema_state, params, ema_decay)
-        stals.append(version - read_version[w])
-        losses.append(float(loss))
-        times.append(t)
-        version += 1
-        # worker reads the fresh params and starts its next mini-batch
-        read_params[w] = params
-        read_version[w] = version
-        heapq.heappush(q, (t + float(latency.sample(rng, (1,))[0]), w))
-
-    return AsyncResult(params=params,
-                       ema=ema_lib.value(ema_state) if ema_state else params,
-                       losses=np.array(losses), staleness=np.array(stals),
-                       sim_time=np.array(times), updates=version)
-
-
-# ---------------------------------------------------------------------------
-# §2.1: controlled staleness via an old-gradient buffer
-# ---------------------------------------------------------------------------
-
-
-def staleness_schedule(step: int, target: int, ramp_steps: int) -> int:
-    """Paper trick: slowly increase staleness over the first epochs."""
-    if target <= 0 or ramp_steps <= 0:
-        return target
-    return int(min(target, np.ceil(target * (step + 1) / ramp_steps)))
-
-
-def simulate_staleness(grad_fn: Callable, update_fn: Callable, params0: Any,
-                       batch_fn: Callable[[int], Dict], num_updates: int,
-                       staleness: int, ramp_steps: int = 0,
-                       ema_decay: float = 0.0, jitter: int = 0,
-                       seed: int = 0) -> AsyncResult:
-    """Serial SGD applying the gradient computed `tau` steps ago.
-
-    tau = staleness (+- jitter, >=0), ramped over `ramp_steps`. tau=0 is
-    exactly serial SGD. grad_fn(params, batch) -> (loss, grads).
-    """
-    rng = np.random.RandomState(seed)
-    from repro.core import ema as ema_lib
-    params = params0
-    opt_state = None
-    ema_state = ema_lib.init(params) if ema_decay > 0 else None
-    buffer: List[Tuple[int, Any]] = []   # (update_count at computation, grads)
-    losses, stals = [], []
-    applied = 0
-    step = 0
-    while applied < num_updates:
-        tau = staleness_schedule(step, staleness, ramp_steps)
-        if jitter > 0 and tau > 0:
-            tau = max(0, tau + int(rng.randint(-jitter, jitter + 1)))
-        batch = batch_fn(step)
-        loss, grads = grad_fn(params, batch)
-        buffer.append((applied, grads))
-        losses.append(float(loss))
-        # apply the OLDEST buffered gradient once it is `tau` steps old;
-        # with tau == 0 this is exactly serial SGD (apply what we just
-        # computed). Growing tau pauses updates while the buffer fills —
-        # mimicking the worker ramp-up the paper uses for stability.
-        if len(buffer) > tau:
-            computed_at, g = buffer.pop(0)
-            params, opt_state = update_fn(params, opt_state, g, applied)
-            if ema_state is not None:
-                ema_state = ema_lib.update(ema_state, params, ema_decay)
-            stals.append(applied - computed_at)
-            applied += 1
-        step += 1
-
-    return AsyncResult(params=params,
-                       ema=ema_lib.value(ema_state) if ema_state else params,
-                       losses=np.array(losses), staleness=np.array(stals),
-                       sim_time=np.arange(len(losses), dtype=np.float64),
-                       updates=applied)
+    """Exact Alg. 1/2 event simulation (legacy entry point)."""
+    warn_once("async_sim.simulate_async",
+              "repro.core.async_sim.simulate_async is deprecated; use "
+              "repro.train.loop.run_experiment with strategy='async' or "
+              "repro.core.coordination.run_events")
+    return run_events(Async(num_workers), grad_fn, update_fn, params0,
+                      batch_fn, num_updates=num_updates, latency=latency,
+                      seed=seed, ema_decay=ema_decay)
 
 
 def simulate_softsync(grad_fn: Callable, update_fn: Callable, params0: Any,
@@ -154,41 +39,28 @@ def simulate_softsync(grad_fn: Callable, update_fn: Callable, params0: Any,
                       c: int, num_updates: int,
                       latency: Optional[LatencyModel] = None,
                       seed: int = 0) -> AsyncResult:
-    """SoftSync (Zhang et al. 2015b): average every c arrivals, then apply
-    (stale gradients allowed — contrast with the paper's hard drop)."""
-    latency = latency or PaperCalibrated()
-    rng = np.random.RandomState(seed)
-    params = params0
-    opt_state = None
-    read_params = [params for _ in range(num_workers)]
-    read_version = np.zeros(num_workers, dtype=np.int64)
-    draws = np.zeros(num_workers, dtype=np.int64)
-    first = latency.sample(rng, (num_workers,))
-    q = [(float(first[w]), w) for w in range(num_workers)]
-    heapq.heapify(q)
+    """SoftSync baseline (legacy entry point)."""
+    warn_once("async_sim.simulate_softsync",
+              "repro.core.async_sim.simulate_softsync is deprecated; use "
+              "repro.train.loop.run_experiment with strategy='softsync' or "
+              "repro.core.coordination.run_events")
+    return run_events(SoftSync(num_workers, c), grad_fn, update_fn, params0,
+                      batch_fn, num_updates=num_updates, latency=latency,
+                      seed=seed)
 
-    pend: List[Any] = []
-    losses, stals, times = [], [], []
-    version = 0
-    while version < num_updates:
-        t, w = heapq.heappop(q)
-        batch = batch_fn(w, int(draws[w]))
-        draws[w] += 1
-        loss, grads = grad_fn(read_params[w], batch)
-        pend.append(grads)
-        stals.append(version - read_version[w])
-        if len(pend) >= c:
-            mean_g = jax.tree_util.tree_map(
-                lambda *gs: sum(gs[1:], gs[0]) / len(gs), *pend)
-            params, opt_state = update_fn(params, opt_state, mean_g, version)
-            pend = []
-            version += 1
-            losses.append(float(loss))
-            times.append(t)
-        read_params[w] = params
-        read_version[w] = version
-        heapq.heappush(q, (t + float(latency.sample(rng, (1,))[0]), w))
 
-    return AsyncResult(params=params, ema=params, losses=np.array(losses),
-                       staleness=np.array(stals), sim_time=np.array(times),
-                       updates=version)
+def simulate_staleness(grad_fn: Callable, update_fn: Callable, params0: Any,
+                       batch_fn: Callable[[int], Dict], num_updates: int,
+                       staleness: int, ramp_steps: int = 0,
+                       ema_decay: float = 0.0, jitter: int = 0,
+                       seed: int = 0) -> AsyncResult:
+    """Serial SGD with a tau-step-old gradient (legacy entry point)."""
+    warn_once("async_sim.simulate_staleness",
+              "repro.core.async_sim.simulate_staleness is deprecated; use "
+              "repro.train.loop.run_experiment with strategy='staleness' or "
+              "repro.core.coordination.run_events")
+    return run_events(Staleness(staleness, ramp_steps, jitter), grad_fn,
+                      update_fn, params0,
+                      lambda worker, draw: batch_fn(draw),
+                      num_updates=num_updates, seed=seed,
+                      ema_decay=ema_decay)

@@ -1,0 +1,597 @@
+"""One coordination API for every regime the paper compares.
+
+The paper's whole argument is a comparison — Async-Opt (Alg. 1/2) vs
+Sync-Opt vs Sync-Opt with backup workers (Alg. 3/4) — so every regime
+lives behind a single ``CoordinationStrategy`` protocol with two families:
+
+* **Mask strategies** (``kind == "mask"``): one SPMD step per iteration.
+  The strategy turns one iteration's worker arrival times into
+  ``(mask over W workers, iteration wall time)``; the mask is *data* to
+  the jitted train step (dropped workers still compute — their cycles are
+  the price of the insurance, exactly as in the paper, whose backup
+  workers' gradients are discarded on arrival).
+
+    - ``FullSync``            paper's plain Sync-Opt: wait for everyone.
+    - ``BackupWorkers(N, b)`` paper Alg. 3/4: first N arrivals count.
+    - ``Timeout(d)``          paper §6 future work: everything within d
+                              of the first arrival counts (>=1 always).
+
+  ``select`` is the host (numpy) rule; ``select_jax`` is its traceable
+  counterpart used inside the fused chunked trainer's ``lax.scan`` body;
+  ``select_batch`` is the vectorized [K, W] form (row-wise bit-identical
+  to ``select`` — the chunked trainer's replay contract).
+
+* **Event strategies** (``kind == "event"``): a discrete-event scheduler
+  pops gradient *arrivals* one at a time (per the shared ``LatencyModel``)
+  and the strategy decides, per arrival, whether a parameter-server
+  update applies (``on_arrival``):
+
+    - ``Async``        paper Alg. 1/2: every arrival applies immediately,
+                       stale by however many updates landed since the
+                       worker read its parameter copy.
+    - ``SoftSync(c)``  Zhang et al. (2015b): average every c arrivals,
+                       then apply (stale gradients allowed — contrast
+                       with the paper's hard drop).
+    - ``Staleness``    paper §2.1's controlled rig: serial SGD applying
+                       the gradient from tau steps ago (old-gradient
+                       buffer + the paper's ramp-up trick); tau=0 is
+                       bit-exact serial SGD.
+
+Strategies are constructed from ``AggregationConfig`` by the string-keyed
+registry in :mod:`repro.core.registry` (``get_strategy(cfg)``) — the only
+construction path the Trainer uses. ``repro.train.loop.Trainer`` executes
+both families, so async/softsync get checkpoint/resume, EMA, failure
+injection, and the unified per-update metrics schema
+``(step, loss, sim_time, selected, staleness)`` for free; see docs/api.md.
+
+The functional engine ``run_events`` is the faithful port of the legacy
+``async_sim.simulate_*`` discrete-event loops (same RandomState draw
+order, same heap discipline), so the deprecated shims delegate here and
+stay bit-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ema as ema_lib
+from repro.core.straggler import LatencyModel, PaperCalibrated
+
+
+# ---------------------------------------------------------------------------
+# The protocol
+# ---------------------------------------------------------------------------
+
+
+class CoordinationStrategy:
+    """Base of every coordination regime.
+
+    ``kind`` selects the Trainer execution mode: ``"mask"`` runs one SPMD
+    step per iteration with a worker mask; ``"event"`` runs the
+    discrete-event parameter-server loop. ``total_workers`` is the number
+    of machines launched (N + b for backup workers).
+    """
+
+    kind: str = ""
+    name: str = ""
+    total_workers: int
+
+
+class MaskStrategy(CoordinationStrategy):
+    """Synchronous regimes: arrival times -> (worker mask, step time)."""
+
+    kind = "mask"
+
+    def select(self, arrivals: np.ndarray) -> Tuple[np.ndarray, float]:
+        """arrivals: [W] seconds -> (mask bool [W], iteration_time)."""
+        raise NotImplementedError
+
+    def select_jax(self, arrivals: jnp.ndarray):
+        """Traceable select: [W] jnp seconds -> (bool [W], f32 scalar)."""
+        raise NotImplementedError
+
+    def select_batch(self, arrivals: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized select: [K, W] -> (masks [K, W], times [K]).
+
+        Row i is bitwise-identical to select(arrivals[i]) — the fused
+        chunked trainer relies on this for replay-exact equivalence.
+        Subclasses override with a vectorized rule; this fallback loops.
+        """
+        pairs = [self.select(a) for a in arrivals]
+        return (np.stack([m for m, _ in pairs]),
+                np.array([t for _, t in pairs], np.float64))
+
+    def effective_n(self) -> int:
+        raise NotImplementedError
+
+
+# Back-compat alias: the pre-registry name for the mask base class.
+Strategy = MaskStrategy
+
+
+@dataclasses.dataclass(frozen=True)
+class FullSync(MaskStrategy):
+    num_workers: int
+
+    name = "full_sync"
+
+    @property
+    def total_workers(self) -> int:
+        return self.num_workers
+
+    def select(self, arrivals):
+        mask = np.ones_like(arrivals, dtype=bool)
+        return mask, float(arrivals.max())
+
+    def select_jax(self, arrivals):
+        return jnp.ones(arrivals.shape, dtype=bool), jnp.max(arrivals)
+
+    def select_batch(self, arrivals):
+        return (np.ones_like(arrivals, dtype=bool),
+                arrivals.max(axis=-1).astype(np.float64))
+
+    def effective_n(self) -> int:
+        return self.num_workers
+
+
+@dataclasses.dataclass(frozen=True)
+class BackupWorkers(MaskStrategy):
+    """Aggregate the first N of N+b arrivals (paper Alg. 3/4)."""
+
+    num_workers: int          # N
+    backups: int              # b
+
+    name = "backup"
+
+    @property
+    def total_workers(self) -> int:
+        return self.num_workers + self.backups
+
+    def select(self, arrivals):
+        n = self.num_workers
+        order = np.argsort(arrivals, kind="stable")
+        mask = np.zeros_like(arrivals, dtype=bool)
+        mask[order[:n]] = True
+        return mask, float(arrivals[order[n - 1]])
+
+    def select_jax(self, arrivals):
+        n = self.num_workers
+        order = jnp.argsort(arrivals)        # stable, matching np "stable"
+        mask = jnp.zeros(arrivals.shape, dtype=bool).at[order[:n]].set(True)
+        return mask, arrivals[order[n - 1]]
+
+    def select_batch(self, arrivals):
+        n = self.num_workers
+        order = np.argsort(arrivals, axis=-1, kind="stable")
+        masks = np.zeros_like(arrivals, dtype=bool)
+        np.put_along_axis(masks, order[:, :n], True, axis=-1)
+        times = np.take_along_axis(arrivals, order[:, n - 1:n], axis=-1)[:, 0]
+        return masks, times.astype(np.float64)
+
+    def effective_n(self) -> int:
+        return self.num_workers
+
+
+@dataclasses.dataclass(frozen=True)
+class Timeout(MaskStrategy):
+    """Aggregate all gradients arriving within `deadline_s` of the first."""
+
+    num_workers: int
+    deadline_s: float
+
+    name = "timeout"
+
+    @property
+    def total_workers(self) -> int:
+        return self.num_workers
+
+    def select(self, arrivals):
+        t0 = arrivals.min()
+        cutoff = t0 + self.deadline_s
+        mask = arrivals <= cutoff
+        return mask, float(min(arrivals.max(), cutoff))
+
+    def select_jax(self, arrivals):
+        cutoff = jnp.min(arrivals) + self.deadline_s
+        return arrivals <= cutoff, jnp.minimum(jnp.max(arrivals), cutoff)
+
+    def select_batch(self, arrivals):
+        cutoff = arrivals.min(axis=-1) + self.deadline_s
+        masks = arrivals <= cutoff[:, None]
+        times = np.minimum(arrivals.max(axis=-1), cutoff)
+        return masks, times.astype(np.float64)
+
+    def effective_n(self) -> int:
+        return self.num_workers     # varies per step; N is the upper bound
+
+
+# ---------------------------------------------------------------------------
+# Event side: scheduler + strategies
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Arrival:
+    """One gradient arrival popped from the event scheduler."""
+
+    index: int          # arrival counter (0, 1, 2, ...)
+    worker: int
+    time: float         # simulated seconds (arrival index for serial rigs)
+    staleness: int      # updates applied since this worker read its params
+    version: int        # PS update count at arrival time
+
+
+@dataclasses.dataclass
+class ReadyUpdate:
+    """on_arrival's verdict when a PS update should apply now."""
+
+    grads: Any          # aggregated gradient tree to apply
+    staleness: float    # staleness of this update (mean over contributors)
+    selected: int       # gradients aggregated into this update
+
+
+def encode_rng(rng: Optional[np.random.RandomState]) -> Optional[Dict]:
+    """JSON-able snapshot of an MT19937 RandomState (checkpoint meta)."""
+    if rng is None:
+        return None
+    key, pos, has_gauss, cached = rng.get_state()[1:]
+    return {"key": [int(x) for x in key], "pos": int(pos),
+            "has_gauss": int(has_gauss), "cached": float(cached)}
+
+
+def decode_rng(rng: np.random.RandomState, d: Dict) -> None:
+    rng.set_state(("MT19937", np.array(d["key"], np.uint32), int(d["pos"]),
+                   int(d["has_gauss"]), float(d["cached"])))
+
+
+class EventScheduler:
+    """The legacy discrete-event queue, extracted and checkpointable.
+
+    Faithful port of the ``async_sim.simulate_*`` RNG discipline: one
+    ``latency.sample(rng, (W,))`` draw at construction, then one
+    ``latency.sample(rng, (1,))`` draw per re-scheduled worker — so every
+    caller (deprecated shims, ``run_events``, the Trainer's event mode)
+    replays the identical arrival sequence for the same (latency, seed).
+    """
+
+    def __init__(self, num_workers: int, latency: LatencyModel, seed: int):
+        self.latency = latency
+        self.rng = np.random.RandomState(seed)
+        first = self.latency.sample(self.rng, (num_workers,))
+        self.queue: List[Tuple[float, int]] = [
+            (float(first[w]), w) for w in range(num_workers)]
+        heapq.heapify(self.queue)
+
+    def pop(self) -> Tuple[float, int]:
+        return heapq.heappop(self.queue)
+
+    def push(self, t: float, worker: int) -> None:
+        """Reschedule `worker`'s next arrival after its current one at `t`."""
+        dt = float(self.latency.sample(self.rng, (1,))[0])
+        heapq.heappush(self.queue, (t + dt, worker))
+
+    def drop_worker(self, worker: int) -> None:
+        """Failure injection: the worker's gradient never arrives again."""
+        self.queue = [e for e in self.queue if e[1] != worker]
+        heapq.heapify(self.queue)
+
+    # -- checkpointable state -------------------------------------------------
+
+    def state_dict(self) -> Dict:
+        return {"queue": [[t, int(w)] for t, w in self.queue],
+                "rng": encode_rng(self.rng)}
+
+    def load_state_dict(self, d: Dict) -> None:
+        self.queue = [(float(t), int(w)) for t, w in d["queue"]]
+        heapq.heapify(self.queue)
+        decode_rng(self.rng, d["rng"])
+
+
+class SerialScheduler:
+    """Degenerate clock for serial rigs (the §2.1 staleness experiment):
+    one logical worker arriving at t = 0, 1, 2, ..."""
+
+    def __init__(self):
+        self.t = 0
+
+    def pop(self) -> Tuple[float, int]:
+        t = self.t
+        self.t += 1
+        return float(t), 0
+
+    def push(self, t: float, worker: int) -> None:
+        pass
+
+    def drop_worker(self, worker: int) -> None:
+        raise ValueError("serial rigs have a single logical worker; "
+                         "failure injection does not apply")
+
+    def state_dict(self) -> Dict:
+        return {"t": int(self.t)}
+
+    def load_state_dict(self, d: Dict) -> None:
+        self.t = int(d["t"])
+
+
+class EventStrategy(CoordinationStrategy):
+    """Asynchronous regimes: a per-arrival apply-or-buffer policy.
+
+    ``uses_clock``          — False for serial rigs (SerialScheduler).
+    ``stals_per_arrival``   — legacy AsyncResult.staleness records one
+                              entry per *arrival* (async/softsync) vs per
+                              *update* (staleness rig).
+    ``losses_per_arrival``  — likewise for AsyncResult.losses.
+    """
+
+    kind = "event"
+    uses_clock = True
+    stals_per_arrival = True
+    losses_per_arrival = False
+
+    def init_state(self, seed: int = 0) -> Any:
+        """Fresh mutable per-run state (buffers, strategy-local RNG)."""
+        return None
+
+    def on_arrival(self, state: Any, grads: Any,
+                   arrival: Arrival) -> Optional[ReadyUpdate]:
+        """Decide what the arrival of `grads` does to the parameter server."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Async(EventStrategy):
+    """Paper Alg. 1/2: every arrival applies immediately (staleness ~ N)."""
+
+    num_workers: int
+
+    name = "async"
+
+    @property
+    def total_workers(self) -> int:
+        return self.num_workers
+
+    def on_arrival(self, state, grads, arrival):
+        return ReadyUpdate(grads, float(arrival.staleness), 1)
+
+
+@dataclasses.dataclass
+class _SoftSyncState:
+    pending: List[Any] = dataclasses.field(default_factory=list)
+    pending_stals: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftSync(EventStrategy):
+    """Zhang et al. (2015b): average every c arrivals, then apply."""
+
+    num_workers: int
+    c: int = 1
+
+    name = "softsync"
+
+    @property
+    def total_workers(self) -> int:
+        return self.num_workers
+
+    def init_state(self, seed: int = 0) -> _SoftSyncState:
+        return _SoftSyncState()
+
+    def on_arrival(self, state, grads, arrival):
+        state.pending.append(grads)
+        state.pending_stals.append(arrival.staleness)
+        if len(state.pending) < self.c:
+            return None
+        mean_g = jax.tree_util.tree_map(
+            lambda *gs: sum(gs[1:], gs[0]) / len(gs), *state.pending)
+        stal = float(np.mean(state.pending_stals))
+        n = len(state.pending)
+        state.pending = []
+        state.pending_stals = []
+        return ReadyUpdate(mean_g, stal, n)
+
+
+def staleness_schedule(step: int, target: int, ramp_steps: int) -> int:
+    """Paper trick: slowly increase staleness over the first epochs."""
+    if target <= 0 or ramp_steps <= 0:
+        return target
+    return int(min(target, np.ceil(target * (step + 1) / ramp_steps)))
+
+
+@dataclasses.dataclass
+class _StalenessState:
+    rng: np.random.RandomState
+    buffer: List[Tuple[int, Any]] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class Staleness(EventStrategy):
+    """§2.1 controlled rig: serial SGD applying the gradient computed
+    `tau` steps ago (old-gradient buffer), tau ramped over `ramp_steps`
+    with optional +-jitter. tau=0 is bit-exact serial SGD (tested)."""
+
+    tau: int
+    ramp_steps: int = 0
+    jitter: int = 0
+
+    name = "staleness"
+    uses_clock = False
+    stals_per_arrival = False
+    losses_per_arrival = True
+
+    @property
+    def total_workers(self) -> int:
+        return 1
+
+    def init_state(self, seed: int = 0) -> _StalenessState:
+        return _StalenessState(rng=np.random.RandomState(seed))
+
+    def on_arrival(self, state, grads, arrival):
+        tau = staleness_schedule(arrival.index, self.tau, self.ramp_steps)
+        if self.jitter > 0 and tau > 0:
+            tau = max(0, tau + int(state.rng.randint(-self.jitter,
+                                                     self.jitter + 1)))
+        state.buffer.append((arrival.version, grads))
+        # apply the OLDEST buffered gradient once it is `tau` steps old;
+        # growing tau pauses updates while the buffer fills — mimicking the
+        # worker ramp-up the paper uses for stability
+        if len(state.buffer) <= tau:
+            return None
+        computed_at, g = state.buffer.pop(0)
+        return ReadyUpdate(g, float(arrival.version - computed_at), 1)
+
+
+# ---------------------------------------------------------------------------
+# The functional event engine (what the deprecated shims delegate to)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AsyncResult:
+    params: Any
+    ema: Any
+    losses: np.ndarray            # loss at each PS update (or arrival)
+    staleness: np.ndarray         # staleness of each applied gradient
+    sim_time: np.ndarray          # wall-clock (simulated s) of each update
+    updates: int
+
+
+def run_events(strategy: EventStrategy, grad_fn: Callable,
+               update_fn: Callable, params0: Any,
+               batch_fn: Callable[[int, int], Dict], num_updates: int,
+               latency: Optional[LatencyModel] = None, seed: int = 0,
+               ema_decay: float = 0.0) -> AsyncResult:
+    """Drive an event strategy to `num_updates` parameter-server updates.
+
+    grad_fn(params, batch) -> (loss, grads);
+    update_fn(params, opt_state, grads, step) -> (params, opt_state)
+      (the caller closes over the optimizer; step drives the lr schedule);
+    batch_fn(worker, draw_index) -> batch.
+
+    Bit-exact port of the legacy ``async_sim.simulate_*`` loops: same
+    RandomState draw order, same heap discipline, same read-after-update
+    parameter-copy semantics.
+    """
+    w = strategy.total_workers
+    if strategy.uses_clock:
+        sched = EventScheduler(w, latency or PaperCalibrated(), seed)
+    else:
+        sched = SerialScheduler()
+    state = strategy.init_state(seed)
+    params = params0
+    opt_state = None  # lazily initialized by caller's update_fn via closure
+    ema_state = ema_lib.init(params) if ema_decay > 0 else None
+
+    # worker state: the params version each worker last read
+    read_params: List[Any] = [params for _ in range(w)]
+    read_version = np.zeros(w, dtype=np.int64)
+    draws = np.zeros(w, dtype=np.int64)
+
+    losses, stals, times = [], [], []
+    version = 0
+    arrival_index = 0
+    while version < num_updates:
+        t, wk = sched.pop()
+        batch = batch_fn(wk, int(draws[wk]))
+        draws[wk] += 1
+        loss, grads = grad_fn(read_params[wk], batch)
+        arrival = Arrival(index=arrival_index, worker=wk, time=t,
+                          staleness=int(version - read_version[wk]),
+                          version=version)
+        arrival_index += 1
+        if strategy.stals_per_arrival:
+            stals.append(arrival.staleness)
+        if strategy.losses_per_arrival:
+            losses.append(float(loss))
+        ready = strategy.on_arrival(state, grads, arrival)
+        if ready is not None:
+            params, opt_state = update_fn(params, opt_state, ready.grads,
+                                          version)
+            if ema_state is not None:
+                ema_state = ema_lib.update(ema_state, params, ema_decay)
+            if not strategy.stals_per_arrival:
+                stals.append(int(ready.staleness))
+            if not strategy.losses_per_arrival:
+                losses.append(float(loss))
+            times.append(t)
+            version += 1
+        # worker reads the fresh params and starts its next mini-batch
+        read_params[wk] = params
+        read_version[wk] = version
+        sched.push(t, wk)
+
+    sim_time = (np.arange(len(losses), dtype=np.float64)
+                if strategy.losses_per_arrival else np.array(times))
+    return AsyncResult(params=params,
+                       ema=ema_lib.value(ema_state) if ema_state else params,
+                       losses=np.array(losses), staleness=np.array(stals),
+                       sim_time=sim_time, updates=version)
+
+
+# ---------------------------------------------------------------------------
+# Trainer-side builders (shared by the Trainer and the parity tests)
+# ---------------------------------------------------------------------------
+
+
+def make_grad_fn(model) -> Callable:
+    """Jitted (params, batch) -> (loss, grads) for one worker's batch.
+
+    LM models (``per_token_loss``) use the valid-token weighted mean plus
+    aux losses; classifier models (``per_example_loss``) use the plain
+    per-example mean. The same builder backs the Trainer's event mode and
+    the bit-exactness tests against the legacy simulators.
+    """
+    if hasattr(model, "per_token_loss"):
+        def loss_fn(params, batch):
+            per_tok, aux = model.per_token_loss(params, batch)
+            labels = batch["labels"]
+            if per_tok.shape[1] != labels.shape[1]:   # vlm prefix positions
+                pad = per_tok.shape[1] - labels.shape[1]
+                labels = jnp.concatenate(
+                    [jnp.full((labels.shape[0], pad), -1, labels.dtype),
+                     labels], 1)
+            valid = (labels >= 0).astype(jnp.float32)
+            return (jnp.sum(per_tok * valid)
+                    / jnp.maximum(jnp.sum(valid), 1.0)) + aux
+    else:
+        def loss_fn(params, batch):
+            return model.per_example_loss(params, batch).mean()
+
+    return jax.jit(jax.value_and_grad(loss_fn))
+
+
+def make_update_fn(optimizer, clip_norm: float = 0.0) -> Callable:
+    """Jitted (params, opt_state, grads, step) -> (params, opt_state, stats).
+
+    No donation: event mode keeps per-worker parameter copies that may
+    alias the live params buffer.
+    """
+    from repro.optim import optimizers as opt_lib
+
+    def update(params, opt_state, grads, step):
+        if clip_norm > 0:
+            grads, gnorm = opt_lib.clip_by_global_norm(grads, clip_norm)
+        return optimizer.apply(params, grads, opt_state, step)
+
+    return jax.jit(update)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation plumbing (shared by the aggregation/async_sim shims)
+# ---------------------------------------------------------------------------
+
+
+_WARNED: set = set()
+
+
+def warn_once(key: str, message: str) -> None:
+    """Emit a DeprecationWarning exactly once per entry point per process."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)

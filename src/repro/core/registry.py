@@ -1,0 +1,80 @@
+"""String-keyed strategy registry: ``AggregationConfig`` -> strategy.
+
+``get_strategy(cfg)`` is the single construction path from config to a
+:class:`repro.core.coordination.CoordinationStrategy` — it replaces the
+hand-rolled ``aggregation.from_config`` dispatch and covers every regime
+the paper compares (plus the §2.1 staleness rig). New regimes register
+with one decorator, so hybrid/hierarchical schemes (Jin et al. 2016;
+arXiv:2407.00101) land as one-file plugins:
+
+    @register("my_regime")
+    def _build(cfg: AggregationConfig) -> CoordinationStrategy:
+        return MyRegime(cfg.num_workers, ...)
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.core import coordination
+
+_BUILDERS: Dict[str, Callable] = {}
+
+
+def register(name: str) -> Callable:
+    """Decorator: register a builder(cfg) -> CoordinationStrategy."""
+
+    def deco(fn: Callable) -> Callable:
+        _BUILDERS[name] = fn
+        return fn
+
+    return deco
+
+
+def available() -> List[str]:
+    return sorted(_BUILDERS)
+
+
+def get_strategy(agg_cfg) -> coordination.CoordinationStrategy:
+    """Build the strategy named by ``agg_cfg.strategy``.
+
+    The only construction path used by the Trainer (tested); unknown
+    names fail with the full list of valid ones.
+    """
+    try:
+        builder = _BUILDERS[agg_cfg.strategy]
+    except KeyError:
+        raise ValueError(
+            f"unknown coordination strategy {agg_cfg.strategy!r}; "
+            f"valid strategies: {', '.join(available())}") from None
+    return builder(agg_cfg)
+
+
+@register("full_sync")
+def _full_sync(cfg) -> coordination.FullSync:
+    return coordination.FullSync(cfg.total_workers)
+
+
+@register("backup")
+def _backup(cfg) -> coordination.BackupWorkers:
+    return coordination.BackupWorkers(cfg.num_workers, cfg.backup_workers)
+
+
+@register("timeout")
+def _timeout(cfg) -> coordination.Timeout:
+    return coordination.Timeout(cfg.num_workers, cfg.deadline_s)
+
+
+@register("async")
+def _async(cfg) -> coordination.Async:
+    return coordination.Async(cfg.num_workers)
+
+
+@register("softsync")
+def _softsync(cfg) -> coordination.SoftSync:
+    return coordination.SoftSync(cfg.num_workers, cfg.softsync_c)
+
+
+@register("staleness")
+def _staleness(cfg) -> coordination.Staleness:
+    return coordination.Staleness(cfg.staleness_tau, cfg.staleness_ramp_steps,
+                                  cfg.staleness_jitter)

@@ -1,23 +1,81 @@
-"""Training launcher CLI.
+"""Training launcher CLI — one entry point for every coordination regime.
 
     python -m repro.launch.train --arch qwen3-0.6b --smoke --steps 50 \
         --strategy backup --workers 6 --backups 2 [--resume]
+    python -m repro.launch.train --arch qwen3-0.6b --smoke --steps 50 \
+        --strategy async --workers 6
+    python -m repro.launch.train --arch qwen3-0.6b --smoke --steps 50 \
+        --strategy softsync --workers 6 --softsync-c 2
 
 --smoke uses the reduced per-arch config (CPU-runnable); without it the
 full published config is built (TPU-scale — on this host use the dry-run
-instead). The loop drives the straggler simulator, masked sync-backup
-aggregation, RMSProp+momentum with the paper's lr rule, EMA, atomic
-checkpoints, and elastic rescale on worker failures.
+instead). Everything routes through ``repro.train.loop.run_experiment``:
+mask strategies (backup/full_sync/timeout) drive the straggler simulator
+and the masked SPMD step; event strategies (async/softsync) drive the
+discrete-event parameter server — both with the paper's lr rule, EMA,
+atomic checkpoints, and the unified metrics schema (docs/api.md).
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 from repro import configs
 from repro.configs.base import (AggregationConfig, CheckpointConfig,
                                 OptimizerConfig, ShapeConfig, TrainConfig)
 from repro.core.straggler import PaperCalibrated
-from repro.train.loop import Trainer
+from repro.train.loop import run_experiment
+
+MASK_STRATEGIES = ("backup", "full_sync", "timeout")
+EVENT_STRATEGIES = ("async", "softsync")
+
+
+def build_config(args) -> TrainConfig:
+    """args -> TrainConfig, with strategy-specific arg validation."""
+    model_cfg = (configs.get_smoke_config(args.arch) if args.smoke
+                 else configs.get_config(args.arch))
+    backups = args.backups if args.backups is not None else (
+        2 if args.strategy == "backup" else 0)
+    deadline = args.deadline if args.deadline is not None else 2.0
+    softsync_c = args.softsync_c if args.softsync_c is not None else 2
+    total = args.workers + (backups if args.strategy == "backup" else 0)
+    return TrainConfig(
+        model=model_cfg,
+        shape=ShapeConfig("cli", args.seq, args.batch_per_worker * total,
+                          "train"),
+        aggregation=AggregationConfig(strategy=args.strategy,
+                                      num_workers=args.workers,
+                                      backup_workers=backups,
+                                      deadline_s=deadline,
+                                      softsync_c=softsync_c),
+        optimizer=OptimizerConfig(name=args.optimizer,
+                                  learning_rate=args.lr,
+                                  scale_lr_with_workers=True,
+                                  ema_decay=0.999),
+        checkpoint=CheckpointConfig(directory=args.ckpt,
+                                    every_steps=args.ckpt_every),
+        seed=args.seed, total_steps=args.steps, log_every=10,
+        chunk_size=args.chunk_size,
+        straggler_backend=args.straggler_backend)
+
+
+def _validate(ap: argparse.ArgumentParser, args) -> None:
+    """Reject argument combinations that would silently do nothing."""
+    if args.backups is not None and args.strategy != "backup":
+        ap.error(f"--backups only applies to --strategy backup "
+                 f"(got --strategy {args.strategy})")
+    if args.deadline is not None and args.strategy != "timeout":
+        ap.error(f"--deadline only applies to --strategy timeout "
+                 f"(got --strategy {args.strategy})")
+    if args.softsync_c is not None and args.strategy != "softsync":
+        ap.error(f"--softsync-c only applies to --strategy softsync "
+                 f"(got --strategy {args.strategy})")
+    if args.strategy in EVENT_STRATEGIES and args.chunk_size > 1:
+        ap.error(f"--chunk-size > 1 only applies to mask strategies "
+                 f"{MASK_STRATEGIES} (got --strategy {args.strategy})")
+    if args.strategy in EVENT_STRATEGIES and args.straggler_backend != "host":
+        ap.error(f"--straggler-backend device only applies to mask "
+                 f"strategies (got --strategy {args.strategy})")
 
 
 def main(argv=None) -> None:
@@ -26,14 +84,21 @@ def main(argv=None) -> None:
                     default="qwen3-0.6b")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
-    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--steps", type=int, default=50,
+                    help="training steps (PS updates for async/softsync)")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch-per-worker", type=int, default=4)
-    ap.add_argument("--strategy", choices=["backup", "full_sync", "timeout"],
-                    default="backup")
+    ap.add_argument("--strategy", default="backup",
+                    choices=list(MASK_STRATEGIES) + list(EVENT_STRATEGIES))
     ap.add_argument("--workers", type=int, default=6)
-    ap.add_argument("--backups", type=int, default=2)
-    ap.add_argument("--deadline", type=float, default=2.0)
+    ap.add_argument("--backups", type=int, default=None,
+                    help="backup workers b (backup strategy only; default 2)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="aggregation deadline s (timeout strategy only; "
+                         "default 2.0)")
+    ap.add_argument("--softsync-c", type=int, default=None,
+                    help="gradients averaged per update (softsync only; "
+                         "default 2)")
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--optimizer", default="rmsprop_momentum")
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
@@ -46,40 +111,22 @@ def main(argv=None) -> None:
                     default="host",
                     help="'device' samples arrivals/batches inside the scan")
     args = ap.parse_args(argv)
+    _validate(ap, args)
 
-    model_cfg = (configs.get_smoke_config(args.arch) if args.smoke
-                 else configs.get_config(args.arch))
-    total = args.workers + (args.backups if args.strategy == "backup" else 0)
-    cfg = TrainConfig(
-        model=model_cfg,
-        shape=ShapeConfig("cli", args.seq, args.batch_per_worker * total,
-                          "train"),
-        aggregation=AggregationConfig(strategy=args.strategy,
-                                      num_workers=args.workers,
-                                      backup_workers=args.backups,
-                                      deadline_s=args.deadline),
-        optimizer=OptimizerConfig(name=args.optimizer,
-                                  learning_rate=args.lr,
-                                  scale_lr_with_workers=True,
-                                  ema_decay=0.999),
-        checkpoint=CheckpointConfig(directory=args.ckpt,
-                                    every_steps=args.ckpt_every),
-        seed=args.seed, log_every=10, chunk_size=args.chunk_size,
-        straggler_backend=args.straggler_backend)
-
-    tr = Trainer(cfg, latency=PaperCalibrated())
-    import os
-    if args.resume and os.path.exists(os.path.join(args.ckpt, "LATEST")):
-        tr.restore_checkpoint()
-        print(f"[train] resumed at step {tr.step}")
-    else:
-        tr.init_state()
-    res = tr.run(args.steps)
+    cfg = build_config(args)
+    resume = args.resume and os.path.exists(os.path.join(args.ckpt, "LATEST"))
+    if resume:
+        from repro.train import checkpoint as ckpt_lib
+        print(f"[train] resumed at step {ckpt_lib.latest_step(args.ckpt)}")
+    res = run_experiment(cfg, latency=PaperCalibrated(), resume=resume,
+                         save_final=True)
     for m in res.metrics:
         print(f"[train] step {m['step']:5d} loss {m['loss']:.4f} "
-              f"sim {m['sim_time']:8.1f}s selected {m['selected']}")
-    tr.save_checkpoint()
+              f"sim {m['sim_time']:8.1f}s selected {m['selected']} "
+              f"staleness {m['staleness']:.1f}")
     print(f"[train] done: {res.steps} steps, sim_time {res.sim_time:.0f}s, "
+          f"mean_selected {res.mean_selected:.2f}, "
+          f"mean_staleness {res.mean_staleness:.2f}, "
           f"restarts {res.restarts}, checkpoint {args.ckpt}")
 
 

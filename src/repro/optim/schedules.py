@@ -53,7 +53,10 @@ def from_config(opt_cfg, num_workers: int = 1) -> Schedule:
     gamma0 = opt_cfg.learning_rate
     if opt_cfg.scale_lr_with_workers:
         gamma0 = gamma0 * num_workers          # paper's 0.045*N rule
-    if opt_cfg.steps_per_epoch > 0:
+    if opt_cfg.linear_anneal_steps > 0:
+        sched = linear_anneal(gamma0, opt_cfg.linear_anneal_steps,
+                              opt_cfg.linear_anneal_from)
+    elif opt_cfg.steps_per_epoch > 0:
         sched = exponential_decay(gamma0, opt_cfg.lr_decay_rate,
                                   opt_cfg.steps_per_epoch, num_workers)
     else:

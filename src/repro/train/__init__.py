@@ -1,3 +1,3 @@
 from repro.train import checkpoint, elastic, serve_step, train_step
-from repro.train.loop import Trainer, TrainResult
+from repro.train.loop import Trainer, TrainResult, run_experiment
 from repro.train.train_step import build_eval_step, build_train_step, input_specs

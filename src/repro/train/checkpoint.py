@@ -86,16 +86,23 @@ def latest_step(directory: str) -> Optional[int]:
     return int(name.split("_")[1])
 
 
-def restore(directory: str, template: Any, step: Optional[int] = None
-            ) -> Tuple[Any, Dict]:
-    """Returns (tree, manifest). template supplies structure/shapes/dtypes."""
+def read_manifest(directory: str, step: Optional[int] = None) -> Dict:
+    """The checkpoint's manifest alone (no array load) — for callers that
+    must shape their restore template from saved metadata first."""
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+        return json.load(f)
+
+
+def restore(directory: str, template: Any, step: Optional[int] = None
+            ) -> Tuple[Any, Dict]:
+    """Returns (tree, manifest). template supplies structure/shapes/dtypes."""
+    manifest = read_manifest(directory, step)
+    path = os.path.join(directory, f"step_{manifest['step']:08d}")
     with np.load(os.path.join(path, "arrays.npz")) as z:
         flat = {k: z[k] for k in z.files}
     return _unflatten_like(template, flat), manifest

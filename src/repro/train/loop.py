@@ -1,48 +1,62 @@
-"""The Trainer: SPMD steps driven by the straggler simulator, with
-checkpoint/restart, failure injection, and elastic rescaling.
+"""The Trainer: every coordination regime behind one entry point.
 
-Per step:
+The strategy (built from ``cfg.aggregation`` by
+``repro.core.registry.get_strategy`` — the Trainer's only construction
+path) picks the execution mode:
+
+**Mask mode** (full_sync / backup / timeout) — SPMD steps driven by the
+straggler simulator. Per step:
   1. the StragglerSimulator samples worker arrival times and the strategy
      selects the mask + iteration time (simulated seconds);
   2. the data pipeline emits the global batch (worker-sharded rows);
   3. the jitted SPMD step applies the masked aggregation + optimizer + EMA;
   4. on checkpoint cadence, state is committed atomically.
 
-Failure handling: a dead worker's gradient simply never arrives (mask
-stays False). While alive >= N the protocol absorbs it with zero downtime
-(the paper's point). When alive < N, the Trainer executes an elastic
-restart from the last checkpoint with the reduced worker count and the
-paper's lr rule re-applied.
-
 With ``cfg.chunk_size > 1`` the hot loop is fused: K iterations run in a
-single ``lax.scan`` dispatch, the K batches (and masks) ship in one
-stacked transfer, and metrics sync to host once per chunk. Chunk
-boundaries are forced at checkpoint / kill-injection / rescale steps, so
-failure handling and replay-exact resume are unchanged, and the default
-'host' straggler backend is bit-identical to the per-step path. See
-docs/perf.md.
+single ``lax.scan`` dispatch (see docs/perf.md); chunk boundaries are
+forced at checkpoint / kill-injection / rescale steps so resume semantics
+are unchanged.
+
+**Event mode** (async / softsync / staleness) — the discrete-event
+parameter-server loop: the scheduler pops gradient arrivals per the
+latency model, the strategy decides apply-or-buffer per arrival
+(paper Alg. 1/2 semantics for async), and each applied update advances
+``step``. Event regimes get checkpoint/resume (exact replay: worker
+parameter copies, scheduler queue and RNG are all checkpointed), EMA,
+failure injection, and the same metrics schema as mask mode.
+
+Unified per-update metrics (both modes, see docs/api.md):
+    ``step, loss, sim_time, selected, staleness``
+plus ``TrainResult.mean_selected`` (the *actual* mean aggregated-worker
+count — for Timeout this is the realized per-step mean, not the
+``effective_n()`` upper bound) and ``TrainResult.mean_staleness``.
+
+Failure handling (mask mode): a dead worker's gradient never arrives.
+While alive >= N the protocol absorbs it with zero downtime (the paper's
+point); below that the Trainer executes an elastic restart from the last
+checkpoint. In event mode a killed worker simply stops producing
+arrivals. ``run_experiment(cfg)`` is the one-call entry point used by the
+CLI, the examples, and the benchmarks.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import TrainConfig, replace
-from repro.core import aggregation as agg_lib
+from repro.configs.base import TrainConfig
+from repro.core import coordination
 from repro.core import ema as ema_lib
+from repro.core import registry
 from repro.core import straggler_jax
 from repro.core.events import StragglerSimulator
 from repro.core.straggler import LatencyModel, PaperCalibrated
 from repro.data.synthetic_lm import (ChunkPrefetcher, PipelineState,
                                      SyntheticLMConfig, SyntheticLMPipeline,
-                                     device_batch_fn)
+                                     device_batch_fn, worker_batch)
 from repro.models import get_model
 from repro.optim import make_optimizer, schedules
 from repro.train import checkpoint as ckpt_lib
@@ -58,16 +72,35 @@ class TrainResult:
     sim_time: float
     steps: int
     restarts: int
+    # realized coordination statistics (unified across mask/event modes):
+    # mean gradients aggregated per update (Timeout reports its *actual*
+    # per-step mean, not the effective_n() upper bound), and the mean
+    # staleness of applied gradients (0 for synchronous strategies).
+    mean_selected: float = 0.0
+    mean_staleness: float = 0.0
 
 
 class Trainer:
     def __init__(self, cfg: TrainConfig, latency: Optional[LatencyModel] = None,
-                 data_cfg: Optional[SyntheticLMConfig] = None):
+                 data_cfg: Optional[SyntheticLMConfig] = None,
+                 model=None, batch_fn: Optional[Callable] = None):
+        """``model``/``batch_fn`` override the config-derived model and
+        per-worker batch source (event mode only) — how non-LM rigs like
+        the §2.1 MNIST staleness experiment route through run_experiment.
+        batch_fn(worker, draw_index) -> batch dict."""
         self.cfg = cfg
         self.latency = latency or PaperCalibrated()
         self.restarts = 0
         self.sim_time = 0.0
         self.metrics: List[Dict] = []
+        self._model_override = model
+        self._batch_fn_override = batch_fn
+        # realized selected/staleness accumulators behind TrainResult's
+        # mean_selected / mean_staleness (persisted across checkpoints)
+        self._sel_sum = 0.0
+        self._sel_count = 0
+        self._stal_sum = 0.0
+        self._stal_count = 0
         w = cfg.aggregation.total_workers
         self.data_cfg = data_cfg or SyntheticLMConfig(
             vocab_size=cfg.model.vocab_size, seq_len=cfg.shape.seq_len,
@@ -77,9 +110,22 @@ class Trainer:
     # -- construction ---------------------------------------------------------
 
     def _build(self) -> None:
+        # the registry is the ONLY config->strategy construction path
+        self.strategy = registry.get_strategy(self.cfg.aggregation)
+        if self.strategy.kind == "mask":
+            self._build_mask()
+        elif self.strategy.kind == "event":
+            self._build_event()
+        else:
+            raise ValueError(f"strategy {self.cfg.aggregation.strategy!r} has "
+                             f"unknown kind {self.strategy.kind!r}")
+
+    def _build_mask(self) -> None:
         cfg = self.cfg
-        self.model = get_model(cfg.model)
-        self.strategy = agg_lib.from_config(cfg.aggregation)
+        self.model = self._model_override or get_model(cfg.model)
+        if self._batch_fn_override is not None:
+            raise ValueError("batch_fn overrides are only supported for "
+                             "event strategies (async/softsync/staleness)")
         self.sim = StragglerSimulator(self.strategy, self.latency, cfg.seed)
         sched = schedules.from_config(cfg.optimizer, cfg.aggregation.num_workers)
         self.optimizer = make_optimizer(cfg.optimizer, sched)
@@ -121,12 +167,54 @@ class Trainer:
                 "device backend lives inside the fused chunk dispatch")
         self.step = 0
 
+    def _build_event(self) -> None:
+        cfg = self.cfg
+        if cfg.chunk_size > 1 or cfg.straggler_backend != "host":
+            raise ValueError(
+                "event strategies (async/softsync/staleness) run the "
+                "discrete-event loop: chunk_size must be 1 and "
+                "straggler_backend 'host'")
+        self.model = self._model_override or get_model(cfg.model)
+        sched = schedules.from_config(cfg.optimizer, cfg.aggregation.num_workers)
+        self.optimizer = make_optimizer(cfg.optimizer, sched)
+        self._grad_fn = coordination.make_grad_fn(self.model)
+        self._update_fn = coordination.make_update_fn(
+            self.optimizer, cfg.optimizer.clip_global_norm)
+        if self._batch_fn_override is not None:
+            self._event_batch = self._batch_fn_override
+        else:
+            data_cfg = dataclasses.replace(
+                self.data_cfg, num_workers=self.strategy.total_workers)
+
+            def _batch(worker: int, draw: int) -> Dict:
+                b = worker_batch(data_cfg, worker, draw)
+                return {k: jnp.asarray(v) for k, v in b.items()}
+
+            self._event_batch = _batch
+        self.step = 0
+
     def init_state(self, seed: Optional[int] = None) -> None:
         key = jax.random.PRNGKey(self.cfg.seed if seed is None else seed)
         self.params = self.model.init(key)
         self.opt_state = self.optimizer.init(self.params)
         self.ema = (ema_lib.init(self.params)
                     if self.cfg.optimizer.ema_decay > 0 else None)
+        if self.strategy.kind == "event":
+            self._init_event_state()
+
+    def _init_event_state(self) -> None:
+        w = self.strategy.total_workers
+        self._read_params = [self.params for _ in range(w)]
+        self._read_version = np.zeros(w, dtype=np.int64)
+        self._draws = np.zeros(w, dtype=np.int64)
+        self._ev_state = self.strategy.init_state(self.cfg.seed)
+        self._arrival_count = 0
+        self._event_dead: set = set()
+        if self.strategy.uses_clock:
+            self._sched = coordination.EventScheduler(
+                w, self.latency, self.cfg.seed)
+        else:
+            self._sched = coordination.SerialScheduler()
 
     # -- checkpointing --------------------------------------------------------
 
@@ -134,40 +222,124 @@ class Trainer:
         tree = {"params": self.params, "opt": self.opt_state}
         if self.ema is not None:
             tree["ema"] = self.ema
+        if self.strategy.kind == "event":
+            if self.strategy.uses_clock:
+                tree["workers"] = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *self._read_params)
+            buf = getattr(self._ev_state, "buffer", None)
+            if buf:
+                tree["stale_buffer"] = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *[g for _, g in buf])
         return tree
+
+    def _mean_meta(self) -> Dict:
+        return {"sel_sum": self._sel_sum, "sel_count": self._sel_count,
+                "stal_sum": self._stal_sum, "stal_count": self._stal_count}
 
     def save_checkpoint(self) -> str:
         meta = {
-            "data_state": self.pipeline.state.save(),
             "num_workers": self.cfg.aggregation.num_workers,
             "backup_workers": self.cfg.aggregation.backup_workers,
+            "strategy": self.cfg.aggregation.strategy,
             "sim_time": self.sim_time,
             "restarts": self.restarts,
+            "means": self._mean_meta(),
         }
+        if self.strategy.kind == "event":
+            # the run loop checkpoints right after an applied update, where
+            # the softsync window is empty by construction; a mid-window
+            # snapshot would silently lose the buffered gradients on resume
+            if getattr(self._ev_state, "pending", None):
+                raise RuntimeError(
+                    "event checkpoint with a non-empty softsync window — "
+                    "checkpoint only lands right after an applied update")
+            meta["event"] = {
+                "sched": self._sched.state_dict(),
+                "read_version": [int(v) for v in self._read_version],
+                "draws": [int(d) for d in self._draws],
+                "arrival_count": int(self._arrival_count),
+                "dead": sorted(int(w) for w in self._event_dead),
+                "buffer_tags": [int(tag) for tag, _ in
+                                getattr(self._ev_state, "buffer", [])],
+                "strategy_rng": coordination.encode_rng(
+                    getattr(self._ev_state, "rng", None)),
+            }
+        else:
+            meta["data_state"] = self.pipeline.state.save()
         return ckpt_lib.save(self.cfg.checkpoint.directory, self.step,
                              self._state_tree(), meta, self.cfg.checkpoint.keep)
 
     def restore_checkpoint(self, step: Optional[int] = None) -> None:
-        tree, manifest = ckpt_lib.restore(self.cfg.checkpoint.directory,
-                                          self._template(), step)
+        # manifest first: the event-mode template depends on saved metadata
+        # (stale-buffer length); pin the resolved step so a concurrent save
+        # cannot shift "latest" between the two reads
+        manifest = ckpt_lib.read_manifest(self.cfg.checkpoint.directory, step)
+        tree, manifest = ckpt_lib.restore(
+            self.cfg.checkpoint.directory,
+            self._template(len(manifest.get("event", {}).get("buffer_tags",
+                                                             []))),
+            int(manifest["step"]))
         self.params = tree["params"]
         self.opt_state = tree["opt"]
         self.ema = tree.get("ema")
         self.step = int(manifest["step"])
         self.sim_time = float(manifest.get("sim_time", 0.0))
         self.restarts = int(manifest.get("restarts", 0))
-        self.pipeline.state = PipelineState.restore(manifest["data_state"])
-        # replay-exact resume: the straggler simulator is deterministic in
-        # (seed, step), so aligning its step restores the arrival sequence
-        self.sim.reset_to_step(self.step)
+        means = manifest.get("means", {})
+        self._sel_sum = float(means.get("sel_sum", 0.0))
+        self._sel_count = int(means.get("sel_count", 0))
+        self._stal_sum = float(means.get("stal_sum", 0.0))
+        self._stal_count = int(means.get("stal_count", 0))
+        if self.strategy.kind == "event":
+            self._restore_event_state(tree, manifest["event"])
+        else:
+            self.pipeline.state = PipelineState.restore(manifest["data_state"])
+            # replay-exact resume: the straggler simulator is deterministic
+            # in (seed, step), so aligning its step restores the arrivals
+            self.sim.reset_to_step(self.step)
 
-    def _template(self):
+    def _restore_event_state(self, tree, ev_meta: Dict) -> None:
+        self._init_event_state()
+        w = self.strategy.total_workers
+        if self.strategy.uses_clock:
+            self._read_params = [
+                jax.tree_util.tree_map(lambda x: x[i], tree["workers"])
+                for i in range(w)]
+        else:
+            self._read_params = [self.params]
+        self._read_version = np.array(ev_meta["read_version"], np.int64)
+        self._draws = np.array(ev_meta["draws"], np.int64)
+        self._arrival_count = int(ev_meta["arrival_count"])
+        self._event_dead = set(ev_meta.get("dead", []))
+        self._sched.load_state_dict(ev_meta["sched"])
+        tags = ev_meta.get("buffer_tags", [])
+        if tags:
+            self._ev_state.buffer = [
+                (int(tag),
+                 jax.tree_util.tree_map(lambda x: x[i], tree["stale_buffer"]))
+                for i, tag in enumerate(tags)]
+        rng = getattr(self._ev_state, "rng", None)
+        if rng is not None and ev_meta.get("strategy_rng"):
+            coordination.decode_rng(rng, ev_meta["strategy_rng"])
+
+    def _template(self, buffer_len: int = 0):
         key = jax.random.PRNGKey(0)
         params_t = jax.eval_shape(self.model.init, key)
         opt_t = jax.eval_shape(self.optimizer.init, params_t)
         tree = {"params": params_t, "opt": opt_t}
         if self.cfg.optimizer.ema_decay > 0:
             tree["ema"] = jax.eval_shape(ema_lib.init, params_t)
+
+        def stack_t(n):
+            return jax.tree_util.tree_map(
+                lambda t: jax.ShapeDtypeStruct((n,) + tuple(t.shape), t.dtype),
+                params_t)
+
+        if self.strategy.kind == "event":
+            if self.strategy.uses_clock:
+                tree["workers"] = stack_t(self.strategy.total_workers)
+            if buffer_len:
+                tree["stale_buffer"] = stack_t(buffer_len)
         return tree
 
     # -- elastic rescale ------------------------------------------------------
@@ -176,8 +348,12 @@ class Trainer:
         """Checkpoint, rebuild for `new_total` workers, restore, continue.
 
         new_total is rounded down to a divisor of the global batch so the
-        per-worker shard stays integral.
+        per-worker shard stays integral. Mask strategies only — event
+        regimes absorb worker loss natively (fewer arrival sources).
         """
+        if self.strategy.kind != "mask":
+            raise NotImplementedError("elastic rescale applies to mask "
+                                      "strategies only")
         w = max(1, new_total)
         while self.cfg.shape.global_batch % w:
             w -= 1
@@ -194,8 +370,11 @@ class Trainer:
     def run(self, num_steps: int, kill_worker_at: Optional[Dict[int, int]] = None,
             min_alive_behavior: str = "rescale") -> TrainResult:
         """kill_worker_at: {step: worker_id} failure injections."""
-        kill_worker_at = kill_worker_at or {}
+        kill_worker_at = dict(kill_worker_at or {})
         target = self.step + num_steps
+        if self.strategy.kind == "event":
+            self._run_event(target, kill_worker_at)
+            return self._result()
         while self.step < target:
             if self.step in kill_worker_at:
                 self.sim.kill_worker(kill_worker_at[self.step])
@@ -214,8 +393,14 @@ class Trainer:
             if (self.cfg.checkpoint.every_steps > 0
                     and self.step % self.cfg.checkpoint.every_steps == 0):
                 self.save_checkpoint()
-        return TrainResult(self.params, self.ema, self.metrics, self.sim_time,
-                           self.step, self.restarts)
+        return self._result()
+
+    def _result(self) -> TrainResult:
+        return TrainResult(
+            self.params, self.ema, self.metrics, self.sim_time, self.step,
+            self.restarts,
+            mean_selected=self._sel_sum / max(self._sel_count, 1),
+            mean_staleness=self._stal_sum / max(self._stal_count, 1))
 
     def _chunk_len_at(self, step: int, target: int,
                       kill_worker_at: Dict[int, int]) -> int:
@@ -243,9 +428,12 @@ class Trainer:
             jnp.asarray(self.step, jnp.int32), batch, mask)
         self.sim_time += ev.iteration_time
         self.step += 1
+        selected = int(ev.mask.sum())
+        self._sel_sum += selected
+        self._sel_count += 1
         if self.step % self.cfg.log_every == 0 or self.step == target:
             rec = {"step": self.step, "sim_time": self.sim_time,
-                   "selected": int(ev.mask.sum()),
+                   "selected": selected, "staleness": 0.0,
                    **{k: float(v) for k, v in m.items()}}
             self.metrics.append(rec)
 
@@ -264,6 +452,7 @@ class Trainer:
                 dead, self._chunk_key)
             masks = masks_dev                 # converted lazily iff logging
             times = np.asarray(times_dev, np.float64)
+            self._sel_sum += float(jnp.sum(masks_dev))
             self.sim.reset_to_step(self.sim.step + k)
         else:
             next_k = (self._chunk_len_at(self.step + k, target, kill_worker_at)
@@ -275,9 +464,11 @@ class Trainer:
             events = self.sim.next_events(k)
             masks = events.masks
             times = events.times
+            self._sel_sum += float(masks.sum())
             self.params, self.opt_state, self.ema, ms = self.chunk_step(
                 self.params, self.opt_state, self.ema, step0, batches,
                 jnp.asarray(masks))
+        self._sel_count += k
         # metrics sync only when a log record falls inside this chunk
         logged = [i for i in range(k)
                   if (self.step + i + 1) % self.cfg.log_every == 0
@@ -292,6 +483,113 @@ class Trainer:
             if logged and i == logged[0]:
                 logged.pop(0)
                 rec = {"step": self.step, "sim_time": self.sim_time,
-                       "selected": int(masks[i].sum()),
+                       "selected": int(masks[i].sum()), "staleness": 0.0,
                        **{key: float(v[i]) for key, v in ms_np.items()}}
                 self.metrics.append(rec)
+
+    # -- the event loop -------------------------------------------------------
+
+    def _event_alive(self) -> int:
+        return self.strategy.total_workers - len(self._event_dead)
+
+    def _kill_event_worker(self, worker: int) -> None:
+        if worker in self._event_dead:
+            return
+        self._event_dead.add(worker)
+        self._sched.drop_worker(worker)
+        if self._event_alive() == 0 or not self._sched.queue:
+            raise RuntimeError("insufficient live workers")
+
+    def _run_event(self, target: int,
+                   kill_worker_at: Dict[int, int]) -> None:
+        """Discrete-event parameter-server loop (async/softsync/staleness).
+
+        Mirrors ``coordination.run_events`` arrival-for-arrival (the
+        bit-exactness tests hold the two to the identical update and
+        staleness sequence) and adds checkpoint cadence, kill injection,
+        and the unified metrics records on top.
+        """
+        every = self.cfg.checkpoint.every_steps
+        ema_decay = self.cfg.optimizer.ema_decay
+        if kill_worker_at and not self.strategy.uses_clock:
+            raise ValueError("failure injection does not apply to serial "
+                             "rigs (the staleness strategy has a single "
+                             "logical worker)")
+        while self.step < target:
+            if self.step in kill_worker_at:
+                self._kill_event_worker(kill_worker_at.pop(self.step))
+            t, w = self._sched.pop()
+            batch = self._event_batch(w, int(self._draws[w]))
+            self._draws[w] += 1
+            loss, grads = self._grad_fn(self._read_params[w], batch)
+            arrival = coordination.Arrival(
+                index=self._arrival_count, worker=w, time=float(t),
+                staleness=int(self.step - self._read_version[w]),
+                version=self.step)
+            self._arrival_count += 1
+            if self.strategy.stals_per_arrival:
+                self._stal_sum += arrival.staleness
+                self._stal_count += 1
+            ready = self.strategy.on_arrival(self._ev_state, grads, arrival)
+            updated = False
+            if ready is not None:
+                self.params, self.opt_state, _ = self._update_fn(
+                    self.params, self.opt_state, ready.grads,
+                    jnp.asarray(self.step, jnp.int32))
+                if ema_decay > 0:
+                    self.ema = ema_lib.update(self.ema, self.params, ema_decay)
+                # simulated seconds; for the serial rig the scheduler's
+                # clock IS the arrival index (the legacy convention)
+                self.sim_time = float(t)
+                if not self.strategy.stals_per_arrival:
+                    self._stal_sum += ready.staleness
+                    self._stal_count += 1
+                self._sel_sum += ready.selected
+                self._sel_count += 1
+                self.step += 1
+                updated = True
+                if (self.step % self.cfg.log_every == 0
+                        or self.step == target):
+                    self.metrics.append({
+                        "step": self.step, "loss": float(loss),
+                        "sim_time": self.sim_time,
+                        "selected": ready.selected,
+                        "staleness": float(ready.staleness)})
+            # worker reads the fresh params and starts its next mini-batch
+            self._read_params[w] = self.params
+            self._read_version[w] = self.step
+            self._sched.push(t, w)
+            if updated and every > 0 and self.step % every == 0:
+                self.save_checkpoint()
+
+
+# ---------------------------------------------------------------------------
+# The one-call entry point
+# ---------------------------------------------------------------------------
+
+
+def run_experiment(cfg: TrainConfig, *, latency: Optional[LatencyModel] = None,
+                   data_cfg: Optional[SyntheticLMConfig] = None,
+                   model=None, batch_fn: Optional[Callable] = None,
+                   resume: bool = False, save_final: bool = False,
+                   kill_worker_at: Optional[Dict[int, int]] = None,
+                   min_alive_behavior: str = "rescale") -> TrainResult:
+    """Run any coordination regime — full_sync, backup, timeout, async,
+    softsync, staleness — from ``cfg.aggregation`` alone.
+
+    Builds the Trainer (strategy via the registry), initializes or resumes
+    state, runs ``cfg.total_steps`` steps (PS updates in event mode), and
+    returns the unified :class:`TrainResult`. ``model``/``batch_fn`` plug
+    non-LM problems into event regimes (e.g. the MNIST staleness rig).
+    """
+    tr = Trainer(cfg, latency=latency, data_cfg=data_cfg, model=model,
+                 batch_fn=batch_fn)
+    if resume and ckpt_lib.latest_step(cfg.checkpoint.directory) is not None:
+        tr.restore_checkpoint()
+    else:
+        tr.init_state()
+    res = tr.run(cfg.total_steps, kill_worker_at=kill_worker_at,
+                 min_alive_behavior=min_alive_behavior)
+    if save_final:
+        tr.save_checkpoint()
+    return res

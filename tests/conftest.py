@@ -5,3 +5,5 @@ import sys
 # see the real single device; multi-device semantics are exercised via
 # subprocess tests (test_spmd_subprocess.py) per the dry-run contract.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so tests can reuse benchmark helpers (benchmarks.common)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,199 @@
+"""The unified coordination API: Trainer-vs-legacy bit-exactness and the
+deprecation-shim contract (warn once, signatures frozen)."""
+import inspect
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import tiny_lm_config
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                OptimizerConfig, ShapeConfig, TrainConfig,
+                                replace)
+from repro.core import async_sim, coordination
+from repro.core.straggler import Uniform
+from repro.data.synthetic_lm import SyntheticLMConfig, worker_batch
+from repro.models import get_model
+from repro.optim import make_optimizer, schedules
+from repro.train.loop import run_experiment
+
+
+def _event_cfg(tmp_path, strategy, workers=4, updates=30, **agg_kw):
+    return TrainConfig(
+        model=tiny_lm_config(),
+        shape=ShapeConfig("t", 16, 4 * workers, "train"),
+        aggregation=AggregationConfig(strategy=strategy, num_workers=workers,
+                                      **agg_kw),
+        optimizer=OptimizerConfig(name="sgd", learning_rate=0.3,
+                                  scale_lr_with_workers=False,
+                                  ema_decay=0.99),
+        checkpoint=CheckpointConfig(directory=str(tmp_path), every_steps=0),
+        seed=3, total_steps=updates, log_every=1)
+
+
+def _legacy_ingredients(cfg):
+    """The exact model/grad/update/batch functions the Trainer builds."""
+    model = get_model(cfg.model)
+    params0 = model.init(jax.random.PRNGKey(cfg.seed))
+    grad_fn = coordination.make_grad_fn(model)
+    sched = schedules.from_config(cfg.optimizer, cfg.aggregation.num_workers)
+    opt = make_optimizer(cfg.optimizer, sched)
+    upd = coordination.make_update_fn(opt, cfg.optimizer.clip_global_norm)
+
+    def update_fn(params, opt_state, grads, step):
+        if opt_state is None:
+            opt_state = opt.init(params)
+        p, o, _ = upd(params, opt_state, grads, jnp.asarray(step, jnp.int32))
+        return p, o
+
+    data_cfg = SyntheticLMConfig(
+        vocab_size=cfg.model.vocab_size, seq_len=cfg.shape.seq_len,
+        global_batch=cfg.shape.global_batch,
+        num_workers=cfg.aggregation.num_workers, seed=cfg.seed)
+
+    def batch_fn(worker, draw):
+        b = worker_batch(data_cfg, worker, draw)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    return params0, grad_fn, update_fn, batch_fn
+
+
+def _first_leaf(tree):
+    return np.asarray(jax.tree_util.tree_leaves(tree)[0])
+
+
+def test_trainer_async_bit_exact_vs_legacy_simulator(tmp_path):
+    """Acceptance: the Trainer-driven async path replays the legacy
+    ``simulate_async`` update/staleness sequence EXACTLY — same seed,
+    same latency model, bit-identical params and EMA."""
+    cfg = _event_cfg(tmp_path, "async", workers=4, updates=30)
+    lat = Uniform(1.0, 2.0)
+    res = run_experiment(cfg, latency=lat)
+
+    params0, grad_fn, update_fn, batch_fn = _legacy_ingredients(cfg)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        leg = async_sim.simulate_async(
+            grad_fn, update_fn, params0, batch_fn, num_workers=4,
+            num_updates=30, latency=lat, seed=cfg.seed, ema_decay=0.99)
+
+    # identical staleness sequence and update (sim) times, update for update
+    np.testing.assert_array_equal(
+        np.array([m["staleness"] for m in res.metrics]),
+        leg.staleness.astype(float))
+    np.testing.assert_array_equal(
+        np.array([m["sim_time"] for m in res.metrics]), leg.sim_time)
+    # bit-identical final params and EMA
+    np.testing.assert_array_equal(_first_leaf(res.params),
+                                  _first_leaf(leg.params))
+    np.testing.assert_array_equal(_first_leaf(res.ema), _first_leaf(leg.ema))
+    assert res.steps == leg.updates
+    assert res.mean_staleness == pytest.approx(leg.staleness.mean())
+
+
+def test_trainer_softsync_bit_exact_vs_legacy_simulator(tmp_path):
+    cfg = _event_cfg(tmp_path, "softsync", workers=4, updates=15,
+                     softsync_c=2)
+    cfg = replace(cfg, optimizer=replace(cfg.optimizer, ema_decay=0.0))
+    lat = Uniform(1.0, 2.0)
+    res = run_experiment(cfg, latency=lat)
+
+    params0, grad_fn, update_fn, batch_fn = _legacy_ingredients(cfg)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        leg = async_sim.simulate_softsync(
+            grad_fn, update_fn, params0, batch_fn, num_workers=4, c=2,
+            num_updates=15, latency=lat, seed=cfg.seed)
+
+    np.testing.assert_array_equal(
+        np.array([m["sim_time"] for m in res.metrics]), leg.sim_time)
+    np.testing.assert_array_equal(_first_leaf(res.params),
+                                  _first_leaf(leg.params))
+    # softsync aggregates exactly c gradients per update
+    assert all(m["selected"] == 2 for m in res.metrics)
+    assert res.mean_staleness == pytest.approx(leg.staleness.mean())
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def _quadratic():
+    rng = np.random.RandomState(0)
+    x = rng.randn(256, 4).astype(np.float32)
+    y = (x @ rng.randn(4).astype(np.float32))
+
+    def batch_fn(worker, draw):
+        r = np.random.RandomState(worker * 1000 + draw)
+        idx = r.randint(0, 256, size=16)
+        return {"x": jnp.asarray(x[idx]), "y": jnp.asarray(y[idx])}
+
+    @jax.jit
+    def grad_fn(params, batch):
+        def loss(p):
+            return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+        return jax.value_and_grad(loss)(params)
+
+    def update_fn(params, opt_state, grads, step):
+        return (jax.tree_util.tree_map(lambda p, g: p - 0.05 * g, params,
+                                       grads), opt_state)
+
+    return grad_fn, update_fn, {"w": jnp.zeros(4)}, batch_fn
+
+
+@pytest.mark.parametrize("entry", ["simulate_async", "simulate_softsync",
+                                   "simulate_staleness", "from_config"])
+def test_deprecation_warns_exactly_once(entry):
+    coordination._WARNED.clear()
+    grad_fn, update_fn, params0, batch_fn = _quadratic()
+
+    def call():
+        if entry == "simulate_async":
+            async_sim.simulate_async(grad_fn, update_fn, params0, batch_fn,
+                                     num_workers=2, num_updates=3,
+                                     latency=Uniform(1.0, 1.5))
+        elif entry == "simulate_softsync":
+            async_sim.simulate_softsync(grad_fn, update_fn, params0, batch_fn,
+                                        num_workers=2, c=2, num_updates=3,
+                                        latency=Uniform(1.0, 1.5))
+        elif entry == "simulate_staleness":
+            async_sim.simulate_staleness(grad_fn, update_fn, params0,
+                                         lambda s: batch_fn(0, s),
+                                         num_updates=3, staleness=1)
+        else:
+            from repro.core import aggregation
+            aggregation.from_config(AggregationConfig(strategy="backup",
+                                                      num_workers=2,
+                                                      backup_workers=1))
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        call()
+        call()
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, (entry, [str(w.message) for w in dep])
+
+
+def test_legacy_signatures_unchanged():
+    """The shims keep the exact legacy parameter lists and defaults, so
+    every pre-registry call site (tests/test_async_sim.py included)
+    keeps working unmodified."""
+    sig = inspect.signature(async_sim.simulate_async)
+    assert list(sig.parameters) == ["grad_fn", "update_fn", "params0",
+                                    "batch_fn", "num_workers", "num_updates",
+                                    "latency", "seed", "ema_decay"]
+    assert sig.parameters["ema_decay"].default == 0.0
+    sig = inspect.signature(async_sim.simulate_softsync)
+    assert list(sig.parameters) == ["grad_fn", "update_fn", "params0",
+                                    "batch_fn", "num_workers", "c",
+                                    "num_updates", "latency", "seed"]
+    sig = inspect.signature(async_sim.simulate_staleness)
+    assert list(sig.parameters) == ["grad_fn", "update_fn", "params0",
+                                    "batch_fn", "num_updates", "staleness",
+                                    "ramp_steps", "ema_decay", "jitter",
+                                    "seed"]
+    assert sig.parameters["ramp_steps"].default == 0
+    assert sig.parameters["jitter"].default == 0

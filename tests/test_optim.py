@@ -107,6 +107,17 @@ def test_linear_anneal():
     assert float(sched(jnp.asarray(100))) == pytest.approx(0.0)
 
 
+def test_from_config_linear_anneal():
+    """The A.1 MNIST recipe routes through OptimizerConfig."""
+    from repro.configs.base import OptimizerConfig
+    cfg = OptimizerConfig(learning_rate=0.1, scale_lr_with_workers=False,
+                          linear_anneal_steps=100, linear_anneal_from=50)
+    sched = schedules.from_config(cfg)
+    assert float(sched(jnp.asarray(10))) == pytest.approx(0.1)
+    assert float(sched(jnp.asarray(75))) == pytest.approx(0.05)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-7)
+
+
 def test_warmup():
     sched = schedules.warmup(schedules.constant(1.0), 10)
     assert float(sched(jnp.asarray(5))) == pytest.approx(0.5)

@@ -1,0 +1,91 @@
+"""Strategy registry: config -> strategy round-trip for every regime."""
+import pytest
+
+from repro.configs.base import AggregationConfig
+from repro.core import coordination, registry
+
+
+def test_round_trip_all_regimes():
+    cases = {
+        "full_sync": (AggregationConfig(strategy="full_sync", num_workers=4,
+                                        backup_workers=2),
+                      coordination.FullSync),
+        "backup": (AggregationConfig(strategy="backup", num_workers=6,
+                                     backup_workers=2),
+                   coordination.BackupWorkers),
+        "timeout": (AggregationConfig(strategy="timeout", num_workers=4,
+                                      deadline_s=1.5),
+                    coordination.Timeout),
+        "async": (AggregationConfig(strategy="async", num_workers=5),
+                  coordination.Async),
+        "softsync": (AggregationConfig(strategy="softsync", num_workers=5,
+                                       softsync_c=3),
+                     coordination.SoftSync),
+        "staleness": (AggregationConfig(strategy="staleness", num_workers=1,
+                                        staleness_tau=8,
+                                        staleness_ramp_steps=10),
+                      coordination.Staleness),
+    }
+    for name, (cfg, cls) in cases.items():
+        s = registry.get_strategy(cfg)
+        assert isinstance(s, cls), name
+        assert s.name == name
+        assert s.kind in ("mask", "event")
+    # parameters survive the round trip
+    s = registry.get_strategy(cases["backup"][0])
+    assert (s.num_workers, s.backups, s.total_workers) == (6, 2, 8)
+    s = registry.get_strategy(cases["timeout"][0])
+    assert s.deadline_s == 1.5
+    s = registry.get_strategy(cases["softsync"][0])
+    assert (s.c, s.total_workers) == (3, 5)
+    s = registry.get_strategy(cases["staleness"][0])
+    assert (s.tau, s.ramp_steps, s.total_workers) == (8, 10, 1)
+    # full_sync launches all N+b machines and waits for every one
+    s = registry.get_strategy(cases["full_sync"][0])
+    assert s.num_workers == 6
+
+
+def test_unknown_strategy_lists_valid_names():
+    with pytest.raises(ValueError) as exc:
+        registry.get_strategy(AggregationConfig(strategy="gossip"))
+    msg = str(exc.value)
+    assert "gossip" in msg
+    for name in ("full_sync", "backup", "timeout", "async", "softsync",
+                 "staleness"):
+        assert name in msg, name
+
+
+def test_trainer_constructs_only_via_registry(tmp_path, monkeypatch):
+    """The Trainer must build its strategy through get_strategy — no
+    hand-rolled dispatch and no deprecated aggregation.from_config."""
+    from repro import configs
+    from repro.configs.base import (CheckpointConfig, OptimizerConfig,
+                                    ShapeConfig, TrainConfig)
+    from repro.core import aggregation
+    from repro.train.loop import Trainer
+
+    calls = []
+    real = registry.get_strategy
+
+    def spy(cfg):
+        s = real(cfg)
+        calls.append(s)
+        return s
+
+    monkeypatch.setattr(registry, "get_strategy", spy)
+
+    def forbidden(cfg):
+        raise AssertionError("Trainer must not use aggregation.from_config")
+
+    monkeypatch.setattr(aggregation, "from_config", forbidden)
+
+    cfg = TrainConfig(
+        model=configs.get_smoke_config("qwen3-0.6b"),
+        shape=ShapeConfig("t", 16, 12, "train"),
+        aggregation=AggregationConfig(strategy="backup", num_workers=2,
+                                      backup_workers=1),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.05,
+                                  scale_lr_with_workers=False),
+        checkpoint=CheckpointConfig(directory=str(tmp_path), every_steps=0))
+    tr = Trainer(cfg)
+    assert calls and tr.strategy is calls[-1]

@@ -69,3 +69,154 @@ def test_train_cli_smoke(tmp_path):
                     "--lr", "0.05"])
     import os
     assert os.path.exists(os.path.join(str(tmp_path), "LATEST"))
+
+
+# ---------------------------------------------------------------------------
+# Event strategies through the same Trainer / run_experiment entry point
+# ---------------------------------------------------------------------------
+
+
+def _event_cfg(tmp_path, strategy, workers=4, steps=20, every=0, **agg_kw):
+    from repro.configs.base import replace
+    cfg = _cfg(tmp_path, strategy, workers=workers, backups=0)
+    return replace(cfg,
+                   aggregation=AggregationConfig(strategy=strategy,
+                                                 num_workers=workers,
+                                                 **agg_kw),
+                   shape=ShapeConfig("t", 16, 4 * workers, "train"),
+                   checkpoint=CheckpointConfig(directory=str(tmp_path),
+                                               every_steps=every),
+                   total_steps=steps, log_every=1)
+
+
+@pytest.mark.parametrize("strategy,agg_kw", [("async", {}),
+                                             ("softsync", {"softsync_c": 2})])
+def test_trainer_event_strategies_run(tmp_path, strategy, agg_kw):
+    from repro.train.loop import run_experiment
+    cfg = _event_cfg(tmp_path / strategy, strategy, steps=20, **agg_kw)
+    res = run_experiment(cfg, latency=Uniform(1.0, 2.0))
+    assert res.steps == 20
+    losses = [m["loss"] for m in res.metrics]
+    assert all(np.isfinite(losses))
+    assert res.sim_time > 0
+    assert res.mean_staleness > 0          # async regimes apply stale grads
+    # unified per-update metrics schema across both execution modes
+    for m in res.metrics:
+        for key in ("step", "loss", "sim_time", "selected", "staleness"):
+            assert key in m
+
+
+def test_mask_metrics_share_event_schema(tmp_path):
+    tr = Trainer(_cfg(tmp_path, "backup", workers=4, backups=2),
+                 latency=PaperCalibrated())
+    tr.init_state()
+    res = tr.run(10)
+    for m in res.metrics:
+        for key in ("step", "loss", "sim_time", "selected", "staleness"):
+            assert key in m
+        assert m["staleness"] == 0.0       # synchronous: nothing is stale
+    assert res.mean_staleness == 0.0
+
+
+def test_timeout_reports_realized_mean_selected(tmp_path):
+    """TrainResult carries the *actual* mean aggregated-worker count, not
+    the effective_n() upper bound."""
+    tr = Trainer(_cfg(tmp_path, "timeout", workers=6, backups=0,
+                      deadline=0.05), latency=PaperCalibrated())
+    tr.init_state()
+    res = tr.run(20)
+    per_step = [m["selected"] for m in res.metrics]   # log_every=5 subset
+    assert 1.0 <= res.mean_selected <= 6.0
+    # a tight deadline under the heavy-tail model must drop someone
+    assert res.mean_selected < tr.strategy.effective_n()
+    assert min(per_step) >= 1
+
+
+def test_event_checkpoint_resume_replay_exact(tmp_path):
+    """Async resume from checkpoint replays the uninterrupted run exactly
+    (worker copies + scheduler queue/RNG are checkpointed state)."""
+    import jax
+    from repro.train.loop import run_experiment
+    cfg = _event_cfg(tmp_path / "full", "async", steps=20, every=8)
+    full = run_experiment(cfg, latency=Uniform(1.0, 2.0))
+
+    cfg2 = _event_cfg(tmp_path / "resume", "async", steps=20, every=8)
+    t1 = Trainer(cfg2, latency=Uniform(1.0, 2.0))
+    t1.init_state()
+    t1.run(16)                              # checkpoints land at 8 and 16
+    t2 = Trainer(cfg2, latency=Uniform(1.0, 2.0))
+    t2.restore_checkpoint()
+    assert t2.step == 16
+    r2 = t2.run(4)
+    a = np.asarray(jax.tree_util.tree_leaves(full.params)[0])
+    b = np.asarray(jax.tree_util.tree_leaves(r2.params)[0])
+    np.testing.assert_array_equal(a, b)
+    tail_full = [m["staleness"] for m in full.metrics if m["step"] > 16]
+    tail_res = [m["staleness"] for m in r2.metrics]
+    assert tail_full == tail_res
+
+
+def test_staleness_checkpoint_resume_mid_ramp(tmp_path):
+    """The serial rig's old-gradient buffer is checkpointed state: resume
+    in the middle of the ramp replays the uninterrupted run exactly."""
+    import jax
+    from repro.train.loop import run_experiment
+
+    def cfg_at(p, every):
+        return _event_cfg(p, "staleness", workers=1, steps=12, every=every,
+                          staleness_tau=3, staleness_ramp_steps=10)
+
+    full = run_experiment(cfg_at(tmp_path / "full", 0))
+    cfg2 = cfg_at(tmp_path / "resume", 4)
+    t1 = Trainer(cfg2)
+    t1.init_state()
+    t1.run(8)                               # buffer is non-empty mid-ramp
+    t2 = Trainer(cfg2)
+    t2.restore_checkpoint()
+    r2 = t2.run(4)
+    a = np.asarray(jax.tree_util.tree_leaves(full.params)[0])
+    b = np.asarray(jax.tree_util.tree_leaves(r2.params)[0])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_staleness_rejects_failure_injection(tmp_path):
+    cfg = _event_cfg(tmp_path, "staleness", workers=1, steps=5,
+                     staleness_tau=1)
+    tr = Trainer(cfg)
+    tr.init_state()
+    with pytest.raises(ValueError, match="serial"):
+        tr.run(5, kill_worker_at={2: 0})
+
+
+def test_event_failure_injection(tmp_path):
+    """A killed worker stops producing arrivals; the run still completes."""
+    cfg = _event_cfg(tmp_path, "async", workers=4, steps=24)
+    tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    tr.init_state()
+    res = tr.run(24, kill_worker_at={8: 0})
+    assert res.steps == 24
+    assert 0 in tr._event_dead
+
+
+def test_train_cli_event_strategy_smoke(tmp_path):
+    from repro.launch import train as train_cli
+    train_cli.main(["--arch", "qwen3-0.6b", "--smoke", "--steps", "5",
+                    "--strategy", "softsync", "--softsync-c", "2",
+                    "--workers", "3", "--batch-per-worker", "2",
+                    "--seq", "16", "--ckpt", str(tmp_path),
+                    "--optimizer", "momentum", "--lr", "0.05"])
+    import os
+    assert os.path.exists(os.path.join(str(tmp_path), "LATEST"))
+
+
+@pytest.mark.parametrize("argv", [
+    ["--strategy", "full_sync", "--backups", "2"],
+    ["--strategy", "async", "--deadline", "1.0"],
+    ["--strategy", "backup", "--softsync-c", "2"],
+    ["--strategy", "async", "--chunk-size", "4"],
+    ["--strategy", "softsync", "--straggler-backend", "device"],
+])
+def test_train_cli_rejects_mismatched_args(argv):
+    from repro.launch import train as train_cli
+    with pytest.raises(SystemExit):
+        train_cli.main(argv + ["--smoke", "--steps", "1"])
