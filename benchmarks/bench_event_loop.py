@@ -1,0 +1,146 @@
+"""Host/dispatch overhead of the EVENT training loop: legacy vs fused.
+
+Measures updates/s of the qwen3-0.6b smoke config (CPU-sized) for the
+async and softsync regimes at chunk_size in {1, 8, 32}. chunk_size=1 is
+the legacy per-arrival path — per gradient arrival it pays one grad-fn
+jit dispatch, one update-fn dispatch, a host heap pop/push, and a
+metrics float() sync; larger chunks run the fused event engine: the host
+plans a block of arrivals into flat arrays and a single lax.scan runs
+gradients, strategy application, optimizer and EMA on device
+(docs/perf.md "Event engine"). On smoke-scale models the per-arrival
+Python/dispatch overhead dominates, so this ratio tracks exactly the
+overhead the fused engine retires.
+
+Writes experiments/bench/BENCH_events.json and mirrors the headline
+summary (speedup_32_vs_1 for async — the acceptance metric) to the
+repo-root BENCH_events.json for the perf-trajectory tooling.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import save_json
+
+CHUNK_SIZES = (1, 8, 32)
+STRATEGIES = ("async", "softsync")
+ROOT_MIRROR = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_events.json")
+
+
+def build_trainer(strategy: str, chunk_size: int, workers: int = 4):
+    from repro import configs
+    from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                    OptimizerConfig, ShapeConfig, TrainConfig)
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    # smoke model, small shape: per-arrival device compute is a few ms, so
+    # the measurement isolates the event loop's host/dispatch overhead
+    # (the thing this benchmark exists to track), not model FLOPs
+    cfg = TrainConfig(
+        model=configs.get_smoke_config("qwen3-0.6b"),
+        shape=ShapeConfig("bench", 8, 2 * workers, "train"),
+        aggregation=AggregationConfig(strategy=strategy, num_workers=workers,
+                                      softsync_c=2),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.02,
+                                  scale_lr_with_workers=False,
+                                  ema_decay=0.999),
+        checkpoint=CheckpointConfig(every_steps=0),
+        # per-update logging, as in real training: the legacy path pays a
+        # metrics float() sync per update; the fused engine reads the whole
+        # chunk's losses back in one go
+        log_every=1,
+        chunk_size=chunk_size)
+    tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    tr.init_state()
+    return tr
+
+
+def measure_all(specs, updates: int, reps: int = 3):
+    """Build+compile every config first, then interleave the timed reps
+    (cfg0, cfg1, ..., cfg0, cfg1, ...) so CPU thermal drift doesn't
+    systematically penalize whichever config is measured last."""
+    trainers = []
+    for strategy, chunk_size in specs:
+        tr = build_trainer(strategy, chunk_size)
+        tr.run(max(chunk_size, 8))                 # compile + warm caches
+        trainers.append(tr)
+    best = [None] * len(specs)
+    for _ in range(reps):
+        for i, tr in enumerate(trainers):
+            t0 = time.perf_counter()
+            tr.run(updates)
+            dt = time.perf_counter() - t0
+            best[i] = dt if best[i] is None or dt < best[i] else best[i]
+    return [{"strategy": s, "chunk_size": c, "updates": updates,
+             "wall_s": w, "updates_per_s": updates / w}
+            for (s, c), w in zip(specs, best)]
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timed updates (CI)")
+    args = ap.parse_args(argv)
+
+    updates = 64 if args.quick else 192
+    specs = [(s, c) for s in STRATEGIES for c in CHUNK_SIZES]
+    results = measure_all(specs, updates)
+
+    def rate(strategy, chunk):
+        return next(r["updates_per_s"] for r in results
+                    if r["strategy"] == strategy and r["chunk_size"] == chunk)
+
+    def speedups(strategy):
+        base = rate(strategy, 1)
+        return {f"speedup_{c}_vs_1": rate(strategy, c) / base
+                for c in CHUNK_SIZES if c > 1}
+
+    per_strategy = {s: speedups(s) for s in STRATEGIES}
+    payload = {
+        "bench": "event_loop",
+        "model": "qwen3-0.6b smoke",
+        "updates": updates,
+        "results": results,
+        **{s: per_strategy[s] for s in STRATEGIES},
+        # headline / acceptance metric: fused async vs the legacy
+        # per-arrival loop (the bar for this repo is >= 3 on CPU)
+        "speedup_32_vs_1": per_strategy["async"]["speedup_32_vs_1"],
+    }
+    path = save_json("BENCH_events", payload)
+
+    mirror = {"bench": "event_loop",
+              "speedup_32_vs_1": payload["speedup_32_vs_1"],
+              **{s: per_strategy[s] for s in STRATEGIES},
+              "legacy_updates_per_s": {s: rate(s, 1) for s in STRATEGIES}}
+    with open(ROOT_MIRROR, "w") as f:
+        json.dump(mirror, f, indent=2, default=float)
+
+    for r in results:
+        print(f"strategy={r['strategy']:<9} chunk_size={r['chunk_size']:>3} "
+              f"{r['updates_per_s']:8.1f} updates/s")
+    print(f"async speedup 32 vs 1: {payload['speedup_32_vs_1']:.2f}x "
+          f"-> {path} (+ root BENCH_events.json)")
+    return payload
+
+
+def run(quick: bool = True):
+    """benchmarks/run.py harness contract: (name, us_per_call, derived)."""
+    payload = main(["--quick"] if quick else [])
+    rows = [(f"event_loop.{r['strategy']}_chunk{r['chunk_size']}",
+             1e6 / r["updates_per_s"], f"{r['updates_per_s']:.1f}up/s")
+            for r in payload["results"]]
+    rows.append(("event_loop.async_speedup_32_vs_1", 0.0,
+                 f"{payload['speedup_32_vs_1']:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

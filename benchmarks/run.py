@@ -11,6 +11,7 @@ EXPERIMENTS.md.
   bench_time_to_converge — Fig. 6 (optimal N/b split of 100 machines)
   bench_lr_sweep         — Table 2 / Fig. 7 (speed vs final-metric tradeoff)
   bench_sync_vs_async    — Figs. 8/9 (the headline comparison)
+  bench_event_loop       — fused event engine vs per-arrival loop
   bench_step_time        — host step-time microbenchmark per arch
   roofline               — §Roofline terms from the dry-run artifacts
 """
@@ -25,8 +26,9 @@ from benchmarks import common
 
 def main() -> None:
     quick = common.quick_mode()
-    from benchmarks import (bench_iterations_vs_n, bench_layer_staleness,
-                            bench_lr_sweep, bench_staleness, bench_step_time,
+    from benchmarks import (bench_event_loop, bench_iterations_vs_n,
+                            bench_layer_staleness, bench_lr_sweep,
+                            bench_staleness, bench_step_time,
                             bench_straggler, bench_sync_vs_async,
                             bench_time_to_converge, roofline)
     modules = [
@@ -37,6 +39,7 @@ def main() -> None:
         ("staleness", bench_staleness),
         ("lr_sweep", bench_lr_sweep),
         ("sync_vs_async", bench_sync_vs_async),
+        ("event_loop", bench_event_loop),
         ("step_time", bench_step_time),
         ("roofline", roofline),
     ]

@@ -298,9 +298,12 @@ class TrainConfig:
     log_every: int = 10
     microbatch: int = 0               # 0 => derive from shape & mesh
     # fused chunked loop: iterations per device dispatch. 1 = legacy
-    # per-step path; >1 runs K steps in one lax.scan with chunk boundaries
-    # forced at checkpoint / kill-injection / rescale steps.
+    # per-step (mask) / per-arrival (event) path; >1 fuses K iterations —
+    # SPMD steps for mask strategies, PS updates for event strategies —
+    # into one lax.scan with chunk boundaries forced at checkpoint /
+    # kill-injection / rescale steps.
     chunk_size: int = 1
+    # mask strategies only (event arrivals are always host-scheduled):
     # 'host'   — numpy straggler streams, bit-exact with the legacy path
     # 'device' — jax.random sampling + select_jax inside the scan body
     #            (distribution-equivalent, zero host work per step)

@@ -48,6 +48,18 @@ The functional engine ``run_events`` is the faithful port of the legacy
 ``async_sim.simulate_*`` discrete-event loops (same RandomState draw
 order, same heap discipline), so the deprecated shims delegate here and
 stay bit-exact.
+
+**The chunked event engine** (docs/perf.md "Event engine"): because the
+apply-or-buffer verdict of every built-in event strategy depends only on
+the arrival sequence and per-arrival counters — never on the gradient
+values — the host can cheaply precompute a block of K arrivals into flat
+arrays (``plan_events`` → :class:`EventPlan`), and a single ``lax.scan``
+(``repro.train.train_step.build_event_chunk_step``) then runs gradient
+computation, strategy application, optimizer update and EMA entirely on
+device. Each strategy exposes the host half as ``plan_arrival`` and the
+traceable half as ``on_arrival_scan``; the plan replays ``run_events``'
+exact update/staleness sequence (parity-tested in
+tests/test_event_scan.py).
 """
 from __future__ import annotations
 
@@ -327,12 +339,30 @@ class EventStrategy(CoordinationStrategy):
                               entry per *arrival* (async/softsync) vs per
                               *update* (staleness rig).
     ``losses_per_arrival``  — likewise for AsyncResult.losses.
+    ``scan_supported``      — True when the strategy implements the
+                              chunked plan/scan protocol below.
+
+    The chunked protocol splits ``on_arrival`` into a gradient-free host
+    half and a traceable device half:
+
+    * ``init_plan_state(seed)`` / ``plan_arrival(plan_state, arrival)``
+      run on the host while a chunk is being planned. ``plan_arrival``
+      must make the SAME apply-or-buffer decision ``on_arrival`` would
+      (same strategy-RNG draw order), but without gradients — it returns
+      a :class:`PlanVerdict` of pure bookkeeping.
+    * ``init_scan_state(params_like)`` / ``on_arrival_scan(aux, grads,
+      row)`` run inside the fused ``lax.scan``. ``aux`` is the strategy's
+      device-resident carry (accumulators, ring buffer); ``row`` is one
+      row of :meth:`EventPlan.rows`. Returns ``(aux', agg_grads)`` where
+      ``agg_grads`` is the gradient tree to apply when ``row["apply"]``
+      is set (and unused otherwise).
     """
 
     kind = "event"
     uses_clock = True
     stals_per_arrival = True
     losses_per_arrival = False
+    scan_supported = False
 
     def init_state(self, seed: int = 0) -> Any:
         """Fresh mutable per-run state (buffers, strategy-local RNG)."""
@@ -343,6 +373,22 @@ class EventStrategy(CoordinationStrategy):
         """Decide what the arrival of `grads` does to the parameter server."""
         raise NotImplementedError
 
+    # -- chunked plan/scan protocol (host half + device half) -----------------
+
+    def init_plan_state(self, seed: int = 0) -> Any:
+        """Gradient-free twin of ``init_state`` for the chunk planner."""
+        return None
+
+    def plan_arrival(self, plan_state: Any, arrival: Arrival) -> "PlanVerdict":
+        raise NotImplementedError
+
+    def init_scan_state(self, params_like: Any) -> Any:
+        """Device-resident aux carry for the fused scan (default: none)."""
+        return ()
+
+    def on_arrival_scan(self, aux: Any, grads: Any, row: Dict) -> Tuple[Any, Any]:
+        raise NotImplementedError
+
 
 @dataclasses.dataclass(frozen=True)
 class Async(EventStrategy):
@@ -351,6 +397,7 @@ class Async(EventStrategy):
     num_workers: int
 
     name = "async"
+    scan_supported = True
 
     @property
     def total_workers(self) -> int:
@@ -359,10 +406,23 @@ class Async(EventStrategy):
     def on_arrival(self, state, grads, arrival):
         return ReadyUpdate(grads, float(arrival.staleness), 1)
 
+    def plan_arrival(self, plan_state, arrival):
+        return PlanVerdict(True, float(arrival.staleness), 1)
+
+    def on_arrival_scan(self, aux, grads, row):
+        return aux, grads
+
 
 @dataclasses.dataclass
 class _SoftSyncState:
     pending: List[Any] = dataclasses.field(default_factory=list)
+    pending_stals: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _SoftSyncPlan:
+    """Host half of the softsync window: staleness tags only, no grads."""
+
     pending_stals: List[int] = dataclasses.field(default_factory=list)
 
 
@@ -374,6 +434,7 @@ class SoftSync(EventStrategy):
     c: int = 1
 
     name = "softsync"
+    scan_supported = True
 
     @property
     def total_workers(self) -> int:
@@ -395,6 +456,31 @@ class SoftSync(EventStrategy):
         state.pending_stals = []
         return ReadyUpdate(mean_g, stal, n)
 
+    def init_plan_state(self, seed: int = 0) -> _SoftSyncPlan:
+        return _SoftSyncPlan()
+
+    def plan_arrival(self, plan_state, arrival):
+        plan_state.pending_stals.append(arrival.staleness)
+        if len(plan_state.pending_stals) < self.c:
+            return PlanVerdict(False)
+        stal = float(np.mean(plan_state.pending_stals))
+        n = len(plan_state.pending_stals)
+        plan_state.pending_stals = []
+        return PlanVerdict(True, stal, n)
+
+    def init_scan_state(self, params_like):
+        # the device window: a running gradient sum (grads share the
+        # params dtype, matching the legacy pending-list summation)
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, p.dtype), params_like)
+
+    def on_arrival_scan(self, aux, grads, row):
+        acc = jax.tree_util.tree_map(lambda a, g: a + g, aux, grads)
+        agg = jax.tree_util.tree_map(lambda a: a / self.c, acc)
+        new_aux = jax.tree_util.tree_map(
+            lambda a: jnp.where(row["apply"], jnp.zeros_like(a), a), acc)
+        return new_aux, agg
+
 
 def staleness_schedule(step: int, target: int, ramp_steps: int) -> int:
     """Paper trick: slowly increase staleness over the first epochs."""
@@ -407,6 +493,21 @@ def staleness_schedule(step: int, target: int, ramp_steps: int) -> int:
 class _StalenessState:
     rng: np.random.RandomState
     buffer: List[Tuple[int, Any]] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _StalenessPlan:
+    """Host half of the old-gradient FIFO: (version tag, ring slot) pairs.
+
+    Gradient values live on device in the ring buffer carried by the
+    fused scan; the plan tracks which slot holds which entry. Slots are
+    assigned round-robin (``writes % capacity``) — safe because the FIFO
+    never holds more than ``scan_capacity`` live entries.
+    """
+
+    rng: np.random.RandomState
+    fifo: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    writes: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -423,19 +524,34 @@ class Staleness(EventStrategy):
     uses_clock = False
     stals_per_arrival = False
     losses_per_arrival = True
+    scan_supported = True
 
     @property
     def total_workers(self) -> int:
         return 1
 
+    @property
+    def scan_capacity(self) -> int:
+        """Static ring-buffer size: the FIFO holds at most tau+jitter
+        entries after an append (apply pops once len exceeds tau)."""
+        return max(1, self.tau + self.jitter + 1)
+
     def init_state(self, seed: int = 0) -> _StalenessState:
         return _StalenessState(rng=np.random.RandomState(seed))
 
-    def on_arrival(self, state, grads, arrival):
+    def _effective_tau(self, rng: np.random.RandomState,
+                       arrival: Arrival) -> int:
+        """The ramped + jittered tau for this arrival. Shared by the
+        legacy and plan paths: fused/legacy checkpoint compatibility
+        depends on both consuming the SAME schedule and RNG draw order."""
         tau = staleness_schedule(arrival.index, self.tau, self.ramp_steps)
         if self.jitter > 0 and tau > 0:
-            tau = max(0, tau + int(state.rng.randint(-self.jitter,
-                                                     self.jitter + 1)))
+            tau = max(0, tau + int(rng.randint(-self.jitter,
+                                               self.jitter + 1)))
+        return tau
+
+    def on_arrival(self, state, grads, arrival):
+        tau = self._effective_tau(state.rng, arrival)
         state.buffer.append((arrival.version, grads))
         # apply the OLDEST buffered gradient once it is `tau` steps old;
         # growing tau pauses updates while the buffer fills — mimicking the
@@ -445,10 +561,184 @@ class Staleness(EventStrategy):
         computed_at, g = state.buffer.pop(0)
         return ReadyUpdate(g, float(arrival.version - computed_at), 1)
 
+    def init_plan_state(self, seed: int = 0) -> _StalenessPlan:
+        return _StalenessPlan(rng=np.random.RandomState(seed))
+
+    def plan_arrival(self, plan_state, arrival):
+        tau = self._effective_tau(plan_state.rng, arrival)
+        slot = plan_state.writes % self.scan_capacity
+        plan_state.writes += 1
+        plan_state.fifo.append((arrival.version, slot))
+        assert len(plan_state.fifo) <= self.scan_capacity
+        if len(plan_state.fifo) <= tau:
+            return PlanVerdict(False, slot_w=slot)
+        tag, read_slot = plan_state.fifo.pop(0)
+        return PlanVerdict(True, float(arrival.version - tag), 1,
+                           slot_w=slot, slot_r=read_slot)
+
+    def init_scan_state(self, params_like):
+        c = self.scan_capacity
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros((c,) + p.shape, p.dtype), params_like)
+
+    def on_arrival_scan(self, aux, grads, row):
+        ring = jax.tree_util.tree_map(
+            lambda r, g: r.at[row["slot_w"]].set(g), aux, grads)
+        agg = jax.tree_util.tree_map(lambda r: r[row["slot_r"]], ring)
+        return ring, agg
+
+
+# ---------------------------------------------------------------------------
+# The chunked event engine: host plan for the device scan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanVerdict:
+    """``plan_arrival``'s gradient-free twin of ``on_arrival``'s verdict."""
+
+    apply: bool
+    staleness: float = 0.0
+    selected: int = 0
+    slot_w: int = 0          # staleness ring slot written by this arrival
+    slot_r: int = 0          # ring slot holding the gradient applied
+
+
+@dataclasses.dataclass
+class EventPlan:
+    """One chunk of K arrivals, host-precomputed into flat arrays.
+
+    Everything the device scan cannot cheaply decide is resolved here —
+    which arrivals apply a PS update, each update's lr-schedule step,
+    the ring-buffer slots, and the full staleness bookkeeping. All of it
+    is a pure function of the scheduler and per-arrival counters,
+    independent of gradient values, which is what makes the fused path
+    possible at all.
+    """
+
+    worker: np.ndarray             # [K] arrival worker ids
+    draw: np.ndarray               # [K] per-worker batch draw index
+    time: np.ndarray               # [K] arrival clock (simulated s)
+    apply: np.ndarray              # [K] bool: a PS update applies here
+    step: np.ndarray               # [K] PS version at arrival (update step)
+    arrival_staleness: np.ndarray  # [K] staleness of each arrival
+    update_staleness: np.ndarray   # [K] staleness of the applied update
+    selected: np.ndarray           # [K] gradients aggregated per update
+    slot_w: np.ndarray             # [K] ring write slot (staleness rig)
+    slot_r: np.ndarray             # [K] ring read slot (staleness rig)
+    updates: int                   # number of True entries in `apply`
+
+    def __len__(self) -> int:
+        return len(self.worker)
+
+    def rows(self) -> Dict[str, jnp.ndarray]:
+        """The per-arrival scan inputs, uploaded once per chunk."""
+        return {"worker": jnp.asarray(self.worker, jnp.int32),
+                "apply": jnp.asarray(self.apply),
+                "step": jnp.asarray(self.step, jnp.int32),
+                "slot_w": jnp.asarray(self.slot_w, jnp.int32),
+                "slot_r": jnp.asarray(self.slot_r, jnp.int32)}
+
+
+def plan_events(strategy: "EventStrategy", sched, plan_state: Any,
+                read_version: np.ndarray, draws: np.ndarray, *,
+                version0: int, arrival0: int, num_updates: int) -> EventPlan:
+    """Pop arrivals from `sched` until `num_updates` PS updates are planned.
+
+    The host twin of ``run_events``' control flow with the gradient math
+    stripped out: identical pop/push RNG discipline and per-arrival
+    bookkeeping, so the fused scan replays the exact update/staleness
+    sequence. Mutates ``sched``, ``plan_state``, ``read_version`` and
+    ``draws`` in place. The returned plan's LAST arrival always applies
+    the final update, so chunk boundaries land exactly on PS-update
+    counts (checkpoint/kill semantics unchanged) and windowed strategies
+    (softsync) hold no pending gradients between chunks.
+    """
+    cols: Dict[str, list] = {k: [] for k in
+                             ("worker", "draw", "time", "apply", "step",
+                              "astal", "ustal", "sel", "sw", "sr")}
+    version, arrival, updates = int(version0), int(arrival0), 0
+    while updates < num_updates:
+        t, wk = sched.pop()
+        ar = Arrival(index=arrival, worker=wk, time=float(t),
+                     staleness=int(version - read_version[wk]),
+                     version=version)
+        arrival += 1
+        v = strategy.plan_arrival(plan_state, ar)
+        cols["worker"].append(wk)
+        cols["draw"].append(int(draws[wk]))
+        draws[wk] += 1
+        cols["time"].append(float(t))
+        cols["apply"].append(bool(v.apply))
+        cols["step"].append(version)
+        cols["astal"].append(ar.staleness)
+        cols["ustal"].append(float(v.staleness))
+        cols["sel"].append(int(v.selected))
+        cols["sw"].append(int(v.slot_w))
+        cols["sr"].append(int(v.slot_r))
+        if v.apply:
+            version += 1
+            updates += 1
+        read_version[wk] = version
+        sched.push(t, wk)
+    return EventPlan(
+        worker=np.asarray(cols["worker"], np.int32),
+        draw=np.asarray(cols["draw"], np.int64),
+        time=np.asarray(cols["time"], np.float64),
+        apply=np.asarray(cols["apply"], bool),
+        step=np.asarray(cols["step"], np.int32),
+        arrival_staleness=np.asarray(cols["astal"], np.int64),
+        update_staleness=np.asarray(cols["ustal"], np.float64),
+        selected=np.asarray(cols["sel"], np.int64),
+        slot_w=np.asarray(cols["sw"], np.int32),
+        slot_r=np.asarray(cols["sr"], np.int32),
+        updates=updates)
+
 
 # ---------------------------------------------------------------------------
 # The functional event engine (what the deprecated shims delegate to)
 # ---------------------------------------------------------------------------
+
+
+class VersionedReads:
+    """Per-worker read-parameter copies, stored once per PS version.
+
+    The legacy engine kept a ``read_params`` list with one slot per
+    worker; the slots were references, but the list obscured the sharing
+    and nothing enforced it. This store makes the invariant structural:
+    every worker whose read version equals the current version shares ONE
+    reference to the live params, and a distinct tree is retained only
+    for versions some worker still holds (copy-on-divergence). Peak host
+    memory is O(distinct live versions), not O(num_workers) — the
+    difference between 100 retained parameter trees and a handful for
+    ``num_workers=100`` async runs.
+    """
+
+    def __init__(self, params0: Any, num_workers: int):
+        self.version = np.zeros(num_workers, dtype=np.int64)
+        self._trees: Dict[int, Any] = {0: params0}
+        self._readers: Dict[int, int] = {0: num_workers}
+
+    def read(self, worker: int) -> Any:
+        return self._trees[int(self.version[worker])]
+
+    def write(self, worker: int, params: Any, version: int) -> None:
+        old, new = int(self.version[worker]), int(version)
+        if old == new:          # params cannot change without an update
+            return
+        self._readers[old] -= 1
+        if not self._readers[old]:
+            del self._trees[old], self._readers[old]
+        self.version[worker] = new
+        if new in self._readers:
+            self._readers[new] += 1
+        else:
+            self._trees[new] = params
+            self._readers[new] = 1
+
+    @property
+    def distinct_versions(self) -> int:
+        return len(self._trees)
 
 
 @dataclasses.dataclass
@@ -465,17 +755,30 @@ def run_events(strategy: EventStrategy, grad_fn: Callable,
                update_fn: Callable, params0: Any,
                batch_fn: Callable[[int, int], Dict], num_updates: int,
                latency: Optional[LatencyModel] = None, seed: int = 0,
-               ema_decay: float = 0.0) -> AsyncResult:
+               ema_decay: float = 0.0,
+               init_opt_state: Optional[Callable] = None) -> AsyncResult:
     """Drive an event strategy to `num_updates` parameter-server updates.
 
     grad_fn(params, batch) -> (loss, grads);
-    update_fn(params, opt_state, grads, step) -> (params, opt_state)
-      (the caller closes over the optimizer; step drives the lr schedule);
+    update_fn(params, opt_state, grads, step) -> (params, opt_state, ...)
+      (the caller closes over the optimizer; step drives the lr schedule;
+      extra trailing return values — e.g. ``make_update_fn``'s stats dict
+      — are ignored);
     batch_fn(worker, draw_index) -> batch.
+
+    ``init_opt_state(params0) -> opt_state`` makes optimizer-state
+    initialization explicit — one contract shared with the fused scan
+    path, which cannot lazily initialize inside a traced body. When
+    omitted it is read off ``update_fn.init_opt_state`` (set by
+    ``make_update_fn``); with neither present the legacy handshake
+    applies: ``opt_state`` starts as None and the caller's ``update_fn``
+    closure initializes it on first use.
 
     Bit-exact port of the legacy ``async_sim.simulate_*`` loops: same
     RandomState draw order, same heap discipline, same read-after-update
-    parameter-copy semantics.
+    parameter-copy semantics (see :class:`VersionedReads` — workers at
+    the current version share one reference, copies exist only per
+    divergent version).
     """
     w = strategy.total_workers
     if strategy.uses_clock:
@@ -484,12 +787,13 @@ def run_events(strategy: EventStrategy, grad_fn: Callable,
         sched = SerialScheduler()
     state = strategy.init_state(seed)
     params = params0
-    opt_state = None  # lazily initialized by caller's update_fn via closure
+    if init_opt_state is None:
+        init_opt_state = getattr(update_fn, "init_opt_state", None)
+    opt_state = init_opt_state(params0) if init_opt_state else None
     ema_state = ema_lib.init(params) if ema_decay > 0 else None
 
-    # worker state: the params version each worker last read
-    read_params: List[Any] = [params for _ in range(w)]
-    read_version = np.zeros(w, dtype=np.int64)
+    # worker state: one shared reference per distinct read version
+    reads = VersionedReads(params, w)
     draws = np.zeros(w, dtype=np.int64)
 
     losses, stals, times = [], [], []
@@ -499,9 +803,9 @@ def run_events(strategy: EventStrategy, grad_fn: Callable,
         t, wk = sched.pop()
         batch = batch_fn(wk, int(draws[wk]))
         draws[wk] += 1
-        loss, grads = grad_fn(read_params[wk], batch)
+        loss, grads = grad_fn(reads.read(wk), batch)
         arrival = Arrival(index=arrival_index, worker=wk, time=t,
-                          staleness=int(version - read_version[wk]),
+                          staleness=int(version - reads.version[wk]),
                           version=version)
         arrival_index += 1
         if strategy.stals_per_arrival:
@@ -510,8 +814,8 @@ def run_events(strategy: EventStrategy, grad_fn: Callable,
             losses.append(float(loss))
         ready = strategy.on_arrival(state, grads, arrival)
         if ready is not None:
-            params, opt_state = update_fn(params, opt_state, ready.grads,
-                                          version)
+            out = update_fn(params, opt_state, ready.grads, version)
+            params, opt_state = out[0], out[1]
             if ema_state is not None:
                 ema_state = ema_lib.update(ema_state, params, ema_decay)
             if not strategy.stals_per_arrival:
@@ -521,8 +825,7 @@ def run_events(strategy: EventStrategy, grad_fn: Callable,
             times.append(t)
             version += 1
         # worker reads the fresh params and starts its next mini-batch
-        read_params[wk] = params
-        read_version[wk] = version
+        reads.write(wk, params, version)
         sched.push(t, wk)
 
     sim_time = (np.arange(len(losses), dtype=np.float64)
@@ -569,16 +872,27 @@ def make_update_fn(optimizer, clip_norm: float = 0.0) -> Callable:
     """Jitted (params, opt_state, grads, step) -> (params, opt_state, stats).
 
     No donation: event mode keeps per-worker parameter copies that may
-    alias the live params buffer.
+    alias the live params buffer. The returned callable carries
+    ``init_opt_state`` (the optimizer's init) so every event engine —
+    ``run_events``, the Trainer, and the fused scan — shares one explicit
+    optimizer-state initialization contract instead of the legacy
+    ``opt_state = None`` lazy handshake.
     """
     from repro.optim import optimizers as opt_lib
 
-    def update(params, opt_state, grads, step):
-        if clip_norm > 0:
-            grads, gnorm = opt_lib.clip_by_global_norm(grads, clip_norm)
-        return optimizer.apply(params, grads, opt_state, step)
+    jitted = jax.jit(
+        lambda params, opt_state, grads, step: optimizer.apply(
+            params,
+            opt_lib.clip_by_global_norm(grads, clip_norm)[0]
+            if clip_norm > 0 else grads,
+            opt_state, step))
 
-    return jax.jit(update)
+    # plain-function wrapper: jit callables reject attribute assignment
+    def update_fn(params, opt_state, grads, step):
+        return jitted(params, opt_state, grads, step)
+
+    update_fn.init_opt_state = optimizer.init
+    return update_fn
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,12 @@ arXiv:2407.00101) land as one-file plugins:
     @register("my_regime")
     def _build(cfg: AggregationConfig) -> CoordinationStrategy:
         return MyRegime(cfg.num_workers, ...)
+
+Event-strategy plugins that additionally implement the chunked
+plan/scan protocol (``plan_arrival`` + ``on_arrival_scan``, advertised
+via ``scan_supported = True``) get the fused device-resident event
+engine for free at ``chunk_size > 1``; :func:`supports_event_scan` is
+how the Trainer decides whether the fused path is available.
 """
 from __future__ import annotations
 
@@ -32,6 +38,16 @@ def register(name: str) -> Callable:
 
 def available() -> List[str]:
     return sorted(_BUILDERS)
+
+
+def supports_event_scan(strategy: coordination.CoordinationStrategy) -> bool:
+    """True when an event strategy implements the chunked plan/scan
+    protocol (``plan_arrival`` host half + ``on_arrival_scan`` device
+    half) required by the fused event engine (``chunk_size > 1``).
+    Third-party plugins that only implement ``on_arrival`` still run on
+    the legacy per-arrival path at ``chunk_size=1``."""
+    return (getattr(strategy, "kind", "") == "event"
+            and bool(getattr(strategy, "scan_supported", False)))
 
 
 def get_strategy(agg_cfg) -> coordination.CoordinationStrategy:

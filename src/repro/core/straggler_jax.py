@@ -83,3 +83,21 @@ def step_arrivals(model: LatencyModel, base_key, step, workers: int,
     if dead is not None:
         arr = jnp.where(dead, jnp.inf, arr)
     return arr
+
+
+def chunk_arrivals(sample_fn: SampleFn, key, steps, num_workers: int,
+                   dead=None) -> jax.Array:
+    """[K, W] arrivals for a whole fused chunk in one vectorized draw.
+
+    vmaps ``sample_fn`` over per-step ``fold_in(key, step)`` keys — the
+    same streams as per-step generation, so results are invariant to how
+    a run is partitioned into chunks — and marks dead workers with +inf
+    (they never arrive). Hoisting this out of the ``lax.scan`` body is
+    what keeps the per-iteration cost at the bare train-step compute:
+    threefry expands to hundreds of HLO ops per key.
+    """
+    arr = jax.vmap(
+        lambda s: sample_fn(jax.random.fold_in(key, s), (num_workers,)))(steps)
+    if dead is not None:
+        arr = jnp.where(dead[None, :], jnp.inf, arr)
+    return arr

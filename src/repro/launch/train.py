@@ -70,9 +70,6 @@ def _validate(ap: argparse.ArgumentParser, args) -> None:
     if args.softsync_c is not None and args.strategy != "softsync":
         ap.error(f"--softsync-c only applies to --strategy softsync "
                  f"(got --strategy {args.strategy})")
-    if args.strategy in EVENT_STRATEGIES and args.chunk_size > 1:
-        ap.error(f"--chunk-size > 1 only applies to mask strategies "
-                 f"{MASK_STRATEGIES} (got --strategy {args.strategy})")
     if args.strategy in EVENT_STRATEGIES and args.straggler_backend != "host":
         ap.error(f"--straggler-backend device only applies to mask "
                  f"strategies (got --strategy {args.strategy})")
@@ -106,7 +103,9 @@ def main(argv=None) -> None:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--chunk-size", type=int, default=1,
-                    help="steps fused per device dispatch (1 = legacy loop)")
+                    help="iterations fused per device dispatch — SPMD steps "
+                         "for mask strategies, PS updates for event "
+                         "strategies (1 = legacy per-step/per-arrival loop)")
     ap.add_argument("--straggler-backend", choices=["host", "device"],
                     default="host",
                     help="'device' samples arrivals/batches inside the scan")

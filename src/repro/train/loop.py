@@ -25,6 +25,17 @@ latency model, the strategy decides apply-or-buffer per arrival
 parameter copies, scheduler queue and RNG are all checkpointed), EMA,
 failure injection, and the same metrics schema as mask mode.
 
+With ``cfg.chunk_size > 1`` event mode is fused too: the host scheduler
+cheaply precomputes a block of arrivals into flat arrays
+(``coordination.plan_events`` — the apply/staleness verdicts of every
+built-in event strategy are gradient-independent), and a single
+``lax.scan`` (``build_event_chunk_step``) runs gradients, strategy
+application, optimizer and EMA on device, with the per-worker read
+copies held as ONE stacked ``[W, ...]`` device pytree updated by
+scatter. Chunk boundaries always land on PS-update counts and are
+forced at checkpoint/kill steps, so resume/failure semantics — and the
+on-disk checkpoint format — are identical to the per-arrival path.
+
 Unified per-update metrics (both modes, see docs/api.md):
     ``step, loss, sim_time, selected, staleness``
 plus ``TrainResult.mean_selected`` (the *actual* mean aggregated-worker
@@ -61,7 +72,8 @@ from repro.models import get_model
 from repro.optim import make_optimizer, schedules
 from repro.train import checkpoint as ckpt_lib
 from repro.train import elastic
-from repro.train.train_step import build_chunk_step, build_train_step
+from repro.train.train_step import (build_chunk_step, build_event_chunk_step,
+                                    build_train_step)
 
 
 @dataclasses.dataclass
@@ -169,19 +181,37 @@ class Trainer:
 
     def _build_event(self) -> None:
         cfg = self.cfg
-        if cfg.chunk_size > 1 or cfg.straggler_backend != "host":
+        if cfg.straggler_backend != "host":
             raise ValueError(
-                "event strategies (async/softsync/staleness) run the "
-                "discrete-event loop: chunk_size must be 1 and "
-                "straggler_backend 'host'")
+                "event strategies (async/softsync/staleness) schedule "
+                "arrivals on the host: straggler_backend must be 'host'")
+        self._event_fused = cfg.chunk_size > 1
+        if self._event_fused and not registry.supports_event_scan(self.strategy):
+            raise ValueError(
+                f"strategy {cfg.aggregation.strategy!r} does not implement "
+                "the chunked plan/scan protocol (plan_arrival + "
+                "on_arrival_scan); use chunk_size=1")
         self.model = self._model_override or get_model(cfg.model)
         sched = schedules.from_config(cfg.optimizer, cfg.aggregation.num_workers)
         self.optimizer = make_optimizer(cfg.optimizer, sched)
         self._grad_fn = coordination.make_grad_fn(self.model)
         self._update_fn = coordination.make_update_fn(
             self.optimizer, cfg.optimizer.clip_global_norm)
+        if self._event_fused:
+            # fused event engine: K arrivals per lax.scan dispatch; the
+            # carry (params/opt/ema/stacked workers/strategy aux) stays
+            # device-resident between chunks, so donate all of it
+            self._event_chunk = jax.jit(
+                build_event_chunk_step(self._grad_fn, self._update_fn,
+                                       self.strategy,
+                                       ema_decay=cfg.optimizer.ema_decay),
+                donate_argnums=(0, 1, 2, 3, 4))
         if self._batch_fn_override is not None:
             self._event_batch = self._batch_fn_override
+            # fused stacking has to pull override batches back to host
+            self._event_batch_host = lambda w, d: {
+                k: np.asarray(v)
+                for k, v in self._batch_fn_override(w, d).items()}
         else:
             data_cfg = dataclasses.replace(
                 self.data_cfg, num_workers=self.strategy.total_workers)
@@ -191,6 +221,11 @@ class Trainer:
                 return {k: jnp.asarray(v) for k, v in b.items()}
 
             self._event_batch = _batch
+            # numpy twin for the fused path: the chunk is stacked on host
+            # and uploaded ONCE, instead of K per-arrival device uploads
+            # immediately pulled back for stacking
+            self._event_batch_host = (
+                lambda w, d: worker_batch(data_cfg, w, d))
         self.step = 0
 
     def init_state(self, seed: Optional[int] = None) -> None:
@@ -204,10 +239,8 @@ class Trainer:
 
     def _init_event_state(self) -> None:
         w = self.strategy.total_workers
-        self._read_params = [self.params for _ in range(w)]
         self._read_version = np.zeros(w, dtype=np.int64)
         self._draws = np.zeros(w, dtype=np.int64)
-        self._ev_state = self.strategy.init_state(self.cfg.seed)
         self._arrival_count = 0
         self._event_dead: set = set()
         if self.strategy.uses_clock:
@@ -215,6 +248,18 @@ class Trainer:
                 w, self.latency, self.cfg.seed)
         else:
             self._sched = coordination.SerialScheduler()
+        if self._event_fused:
+            # device form: one stacked [W, ...] tree of worker read
+            # copies + the strategy's scan carry; host form: plan state
+            # (counters, staleness tags/rng) only — no gradient trees
+            self._ev_state = None
+            self._plan_state = self.strategy.init_plan_state(self.cfg.seed)
+            self._workers_stacked = jax.tree_util.tree_map(
+                lambda p: jnp.stack([p] * w), self.params)
+            self._scan_aux = self.strategy.init_scan_state(self.params)
+        else:
+            self._read_params = [self.params for _ in range(w)]
+            self._ev_state = self.strategy.init_state(self.cfg.seed)
 
     # -- checkpointing --------------------------------------------------------
 
@@ -223,13 +268,24 @@ class Trainer:
         if self.ema is not None:
             tree["ema"] = self.ema
         if self.strategy.kind == "event":
-            if self.strategy.uses_clock:
-                tree["workers"] = jax.tree_util.tree_map(
-                    lambda *xs: jnp.stack(xs), *self._read_params)
-            buf = getattr(self._ev_state, "buffer", None)
-            if buf:
-                tree["stale_buffer"] = jax.tree_util.tree_map(
-                    lambda *xs: jnp.stack(xs), *[g for _, g in buf])
+            if self._event_fused:
+                if self.strategy.uses_clock:
+                    tree["workers"] = self._workers_stacked
+                slots = [s for _, s in getattr(self._plan_state, "fifo", [])]
+                if slots:
+                    # gather the ring in FIFO order -> same on-disk layout
+                    # as the legacy stacked old-gradient buffer
+                    idx = jnp.asarray(slots, jnp.int32)
+                    tree["stale_buffer"] = jax.tree_util.tree_map(
+                        lambda r: r[idx], self._scan_aux)
+            else:
+                if self.strategy.uses_clock:
+                    tree["workers"] = jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs), *self._read_params)
+                buf = getattr(self._ev_state, "buffer", None)
+                if buf:
+                    tree["stale_buffer"] = jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs), *[g for _, g in buf])
         return tree
 
     def _mean_meta(self) -> Dict:
@@ -249,20 +305,27 @@ class Trainer:
             # the run loop checkpoints right after an applied update, where
             # the softsync window is empty by construction; a mid-window
             # snapshot would silently lose the buffered gradients on resume
-            if getattr(self._ev_state, "pending", None):
+            strat_state = self._plan_state if self._event_fused else self._ev_state
+            if getattr(strat_state, "pending", None) or getattr(
+                    strat_state, "pending_stals", None):
                 raise RuntimeError(
                     "event checkpoint with a non-empty softsync window — "
                     "checkpoint only lands right after an applied update")
+            if self._event_fused:
+                tags = [int(tag) for tag, _ in
+                        getattr(strat_state, "fifo", [])]
+            else:
+                tags = [int(tag) for tag, _ in
+                        getattr(strat_state, "buffer", [])]
             meta["event"] = {
                 "sched": self._sched.state_dict(),
                 "read_version": [int(v) for v in self._read_version],
                 "draws": [int(d) for d in self._draws],
                 "arrival_count": int(self._arrival_count),
                 "dead": sorted(int(w) for w in self._event_dead),
-                "buffer_tags": [int(tag) for tag, _ in
-                                getattr(self._ev_state, "buffer", [])],
+                "buffer_tags": tags,
                 "strategy_rng": coordination.encode_rng(
-                    getattr(self._ev_state, "rng", None)),
+                    getattr(strat_state, "rng", None)),
             }
         else:
             meta["data_state"] = self.pipeline.state.save()
@@ -301,24 +364,51 @@ class Trainer:
     def _restore_event_state(self, tree, ev_meta: Dict) -> None:
         self._init_event_state()
         w = self.strategy.total_workers
-        if self.strategy.uses_clock:
-            self._read_params = [
-                jax.tree_util.tree_map(lambda x: x[i], tree["workers"])
-                for i in range(w)]
-        else:
-            self._read_params = [self.params]
         self._read_version = np.array(ev_meta["read_version"], np.int64)
         self._draws = np.array(ev_meta["draws"], np.int64)
         self._arrival_count = int(ev_meta["arrival_count"])
         self._event_dead = set(ev_meta.get("dead", []))
         self._sched.load_state_dict(ev_meta["sched"])
         tags = ev_meta.get("buffer_tags", [])
-        if tags:
-            self._ev_state.buffer = [
-                (int(tag),
-                 jax.tree_util.tree_map(lambda x: x[i], tree["stale_buffer"]))
-                for i, tag in enumerate(tags)]
-        rng = getattr(self._ev_state, "rng", None)
+        if self._event_fused:
+            if self.strategy.uses_clock:
+                self._workers_stacked = tree["workers"]
+            if tags:
+                # scatter the FIFO-ordered buffer into ring slots 0..n-1
+                # and rebase the round-robin write pointer after them
+                self._scan_aux = jax.tree_util.tree_map(
+                    lambda r, b: r.at[:len(tags)].set(b),
+                    self._scan_aux, tree["stale_buffer"])
+                self._plan_state.fifo = [(int(tag), i)
+                                         for i, tag in enumerate(tags)]
+                self._plan_state.writes = len(tags)
+            strat_state = self._plan_state
+        else:
+            if self.strategy.uses_clock:
+                # share one reference per distinct read version: workers
+                # at the current version get the live params; a copy is
+                # gathered only per divergent version (memory fix for
+                # large-W async runs)
+                by_version: Dict[int, Any] = {}
+                self._read_params = []
+                for i in range(w):
+                    v = int(self._read_version[i])
+                    if v not in by_version:
+                        by_version[v] = (
+                            self.params if v == self.step else
+                            jax.tree_util.tree_map(lambda x, i=i: x[i],
+                                                   tree["workers"]))
+                    self._read_params.append(by_version[v])
+            else:
+                self._read_params = [self.params]
+            if tags:
+                self._ev_state.buffer = [
+                    (int(tag),
+                     jax.tree_util.tree_map(lambda x, i=i: x[i],
+                                            tree["stale_buffer"]))
+                    for i, tag in enumerate(tags)]
+            strat_state = self._ev_state
+        rng = getattr(strat_state, "rng", None)
         if rng is not None and ev_meta.get("strategy_rng"):
             coordination.decode_rng(rng, ev_meta["strategy_rng"])
 
@@ -373,7 +463,10 @@ class Trainer:
         kill_worker_at = dict(kill_worker_at or {})
         target = self.step + num_steps
         if self.strategy.kind == "event":
-            self._run_event(target, kill_worker_at)
+            if self._event_fused:
+                self._run_event_chunked(target, kill_worker_at)
+            else:
+                self._run_event(target, kill_worker_at)
             return self._result()
         while self.step < target:
             if self.step in kill_worker_at:
@@ -560,6 +653,66 @@ class Trainer:
             self._read_version[w] = self.step
             self._sched.push(t, w)
             if updated and every > 0 and self.step % every == 0:
+                self.save_checkpoint()
+
+    def _run_event_chunked(self, target: int,
+                           kill_worker_at: Dict[int, int]) -> None:
+        """Fused event path: a host-planned block of arrivals per
+        ``lax.scan`` dispatch (see ``coordination.plan_events`` and
+        ``build_event_chunk_step``).
+
+        Chunk lengths are counted in PS *updates* (``_chunk_len_at`` —
+        the same boundary rules as mask mode), and every chunk's plan
+        ends exactly on its last update, so checkpoints and kill
+        injections land on identical steps, with identical state, as the
+        per-arrival path.
+        """
+        every = self.cfg.checkpoint.every_steps
+        if kill_worker_at and not self.strategy.uses_clock:
+            raise ValueError("failure injection does not apply to serial "
+                             "rigs (the staleness strategy has a single "
+                             "logical worker)")
+        while self.step < target:
+            if self.step in kill_worker_at:
+                self._kill_event_worker(kill_worker_at.pop(self.step))
+            u = self._chunk_len_at(self.step, target, kill_worker_at)
+            plan = coordination.plan_events(
+                self.strategy, self._sched, self._plan_state,
+                self._read_version, self._draws,
+                version0=self.step, arrival0=self._arrival_count,
+                num_updates=u)
+            self._arrival_count += len(plan)
+            batches = [self._event_batch_host(int(wk), int(d))
+                       for wk, d in zip(plan.worker, plan.draw)]
+            chunk_batches = {
+                k: jnp.asarray(np.stack([b[k] for b in batches]))
+                for k in batches[0]}
+            (self.params, self.opt_state, self.ema, self._workers_stacked,
+             self._scan_aux, losses) = self._event_chunk(
+                self.params, self.opt_state, self.ema, self._workers_stacked,
+                self._scan_aux, chunk_batches, plan.rows())
+            # host bookkeeping straight off the plan — no device sync
+            if self.strategy.stals_per_arrival:
+                self._stal_sum += float(plan.arrival_staleness.sum())
+                self._stal_count += len(plan)
+            else:
+                self._stal_sum += float(plan.update_staleness[plan.apply].sum())
+                self._stal_count += plan.updates
+            self._sel_sum += float(plan.selected[plan.apply].sum())
+            self._sel_count += plan.updates
+            losses_np = None          # read back only if a record logs
+            for k in np.nonzero(plan.apply)[0]:
+                self.step += 1
+                self.sim_time = float(plan.time[k])
+                if self.step % self.cfg.log_every == 0 or self.step == target:
+                    if losses_np is None:
+                        losses_np = np.asarray(losses)
+                    self.metrics.append({
+                        "step": self.step, "loss": float(losses_np[k]),
+                        "sim_time": self.sim_time,
+                        "selected": int(plan.selected[k]),
+                        "staleness": float(plan.update_staleness[k])})
+            if every > 0 and self.step % every == 0:
                 self.save_checkpoint()
 
 

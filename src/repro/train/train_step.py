@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ema as ema_lib
+from repro.core import straggler_jax
 from repro.core import sync_backup
 from repro.optim import optimizers as opt_lib
 
@@ -175,21 +176,72 @@ def build_chunk_step(model, optimizer: opt_lib.Optimizer, *, num_workers: int,
         raise ValueError("device mode needs sample_fn, select_fn and data_fn")
 
     def chunk(params, opt_state, ema_state, step0, k, dead, key):
-        # All chunk randomness is generated vectorized up front (vmap over
-        # per-step keys — same streams as per-step generation, so results
-        # are invariant to how the run is partitioned into chunks) instead
-        # of inside the scan body: threefry expands to hundreds of HLO ops,
-        # and hoisting it keeps the scan body at the bare train-step cost.
+        # All chunk randomness is generated vectorized up front
+        # (straggler_jax.chunk_arrivals — per-step fold_in streams, so
+        # results are invariant to chunk partitioning) instead of inside
+        # the scan body: hoisting the threefry expansion keeps the scan
+        # body at the bare train-step cost.
         steps = step0 + jnp.arange(k, dtype=step0.dtype)
         batches = jax.vmap(data_fn)(steps)
-        arrivals = jax.vmap(
-            lambda s: sample_fn(jax.random.fold_in(key, s), dead.shape))(steps)
-        arrivals = jnp.where(dead[None, :], jnp.inf, arrivals)
+        arrivals = straggler_jax.chunk_arrivals(sample_fn, key, steps,
+                                                dead.shape[0], dead)
         masks, times = jax.vmap(select_fn)(arrivals)
         masks = masks & ~dead[None, :]
         p, o, e, ms = scan_steps(params, opt_state, ema_state, step0,
                                  batches, masks)
         return p, o, e, ms, masks, times
+
+    return chunk
+
+
+def build_event_chunk_step(grad_fn: Callable, update_fn: Callable, strategy,
+                           *, ema_decay: float = 0.0) -> Callable:
+    """Fused K-arrival event engine: one ``lax.scan`` dispatch per chunk.
+
+        chunk(params, opt_state, ema, workers [W, ...], aux,
+              batches [K, b, ...], rows {name: [K]})
+            -> (params, opt_state, ema, workers, aux, losses [K])
+
+    ``workers`` is the stacked per-worker read-parameter pytree (one
+    ``[W, ...]`` device tree instead of W host copies); ``aux`` is the
+    strategy's device carry (``init_scan_state`` — softsync gradient
+    window / staleness ring buffer); ``rows`` is the host-precomputed
+    :class:`repro.core.coordination.EventPlan` (``plan.rows()``). Per
+    arrival the body gathers the worker's read copy, runs grad_fn, lets
+    the strategy aggregate-or-buffer (``on_arrival_scan``), conditionally
+    applies the optimizer + EMA (``row["apply"]`` — host-planned, since
+    every built-in strategy's verdict is gradient-independent), and
+    scatters the fresh params back to the worker's row. The scan replays
+    ``run_events``' exact update/staleness sequence because all control
+    flow comes from the plan (tests/test_event_scan.py).
+    """
+
+    def chunk(params, opt_state, ema_state, workers, aux, batches, rows):
+        def body(carry, xs):
+            p, o, e, w_stack, ax = carry
+            batch, row = xs
+            read = jax.tree_util.tree_map(lambda s: s[row["worker"]], w_stack)
+            loss, grads = grad_fn(read, batch)
+            ax, agg = strategy.on_arrival_scan(ax, grads, row)
+
+            def apply_update(p, o, e):
+                out = update_fn(p, o, agg, row["step"])
+                p2, o2 = out[0], out[1]
+                if ema_decay > 0:
+                    e = ema_lib.update(e, p2, ema_decay)
+                return p2, o2, e
+
+            p, o, e = jax.lax.cond(row["apply"], apply_update,
+                                   lambda p, o, e: (p, o, e), p, o, e)
+            # the worker reads the fresh params for its next mini-batch
+            w_stack = jax.tree_util.tree_map(
+                lambda s, x: s.at[row["worker"]].set(x), w_stack, p)
+            return (p, o, e, w_stack, ax), loss
+
+        (p, o, e, w_stack, ax), losses = jax.lax.scan(
+            body, (params, opt_state, ema_state, workers, aux),
+            (batches, rows))
+        return p, o, e, w_stack, ax, losses
 
     return chunk
 

@@ -1,0 +1,347 @@
+"""Fused event engine parity: the chunked plan+scan path must replay
+``run_events``' (and the legacy per-arrival Trainer's) exact update and
+staleness sequence for Async, SoftSync and Staleness, with final params
+matching to float tolerance; checkpoint/resume of the chunked path must
+be replay-exact."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import tiny_lm_config
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                OptimizerConfig, ShapeConfig, TrainConfig)
+from repro.core import coordination
+from repro.core.straggler import Uniform
+from repro.data.synthetic_lm import SyntheticLMConfig, worker_batch
+from repro.models import get_model
+from repro.optim import make_optimizer, schedules
+from repro.train.loop import Trainer, run_experiment
+
+# the fused scan compiles a different XLA graph than the per-arrival
+# dispatches, so params match to float tolerance, not bitwise; the
+# update/staleness/selected sequences are integers and must be EXACT
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _cfg(tmp_path, strategy, *, workers=4, updates=30, chunk=1, every=0,
+         ema=0.99, **agg_kw):
+    return TrainConfig(
+        model=tiny_lm_config(),
+        shape=ShapeConfig("t", 16, 4 * workers, "train"),
+        aggregation=AggregationConfig(strategy=strategy, num_workers=workers,
+                                      **agg_kw),
+        optimizer=OptimizerConfig(name="sgd", learning_rate=0.3,
+                                  scale_lr_with_workers=False,
+                                  ema_decay=ema),
+        checkpoint=CheckpointConfig(directory=str(tmp_path),
+                                    every_steps=every),
+        seed=3, total_steps=updates, log_every=1, chunk_size=chunk)
+
+
+def _ingredients(cfg):
+    """The exact model/grad/update/batch functions the Trainer builds."""
+    model = get_model(cfg.model)
+    params0 = model.init(jax.random.PRNGKey(cfg.seed))
+    grad_fn = coordination.make_grad_fn(model)
+    sched = schedules.from_config(cfg.optimizer, cfg.aggregation.num_workers)
+    opt = make_optimizer(cfg.optimizer, sched)
+    # make_update_fn is usable by run_events directly now: the engine
+    # tolerates the (params, opt_state, stats) return and initializes
+    # opt_state through the explicit init_opt_state contract
+    update_fn = coordination.make_update_fn(opt, cfg.optimizer.clip_global_norm)
+    data_cfg = SyntheticLMConfig(
+        vocab_size=cfg.model.vocab_size, seq_len=cfg.shape.seq_len,
+        global_batch=cfg.shape.global_batch,
+        num_workers=cfg.aggregation.num_workers, seed=cfg.seed)
+
+    def batch_fn(worker, draw):
+        b = worker_batch(data_cfg, worker, draw)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    return params0, grad_fn, update_fn, batch_fn
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _assert_trees_close(a, b, **tol):
+    for x, y in zip(_leaves(a), _leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float64),
+                                   np.asarray(y, np.float64), **tol)
+
+
+# ---------------------------------------------------------------------------
+# Fused path vs the functional engine (run_events)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_async_matches_run_events(tmp_path):
+    cfg = _cfg(tmp_path, "async", workers=4, updates=30, chunk=8)
+    lat = Uniform(1.0, 2.0)
+    res = run_experiment(cfg, latency=lat)
+
+    params0, grad_fn, update_fn, batch_fn = _ingredients(cfg)
+    leg = coordination.run_events(
+        coordination.Async(4), grad_fn, update_fn, params0, batch_fn,
+        num_updates=30, latency=lat, seed=cfg.seed, ema_decay=0.99)
+
+    assert res.steps == leg.updates
+    np.testing.assert_array_equal(
+        np.array([m["staleness"] for m in res.metrics]),
+        leg.staleness.astype(float))
+    np.testing.assert_array_equal(
+        np.array([m["sim_time"] for m in res.metrics]), leg.sim_time)
+    assert res.mean_staleness == pytest.approx(leg.staleness.mean())
+    _assert_trees_close(res.params, leg.params, **TOL)
+    _assert_trees_close(res.ema, leg.ema, **TOL)
+
+
+def test_fused_softsync_matches_run_events(tmp_path):
+    cfg = _cfg(tmp_path, "softsync", workers=4, updates=16, chunk=8,
+               ema=0.0, softsync_c=2)
+    lat = Uniform(1.0, 2.0)
+    res = run_experiment(cfg, latency=lat)
+
+    params0, grad_fn, update_fn, batch_fn = _ingredients(cfg)
+    leg = coordination.run_events(
+        coordination.SoftSync(4, 2), grad_fn, update_fn, params0, batch_fn,
+        num_updates=16, latency=lat, seed=cfg.seed)
+
+    assert res.steps == leg.updates
+    np.testing.assert_array_equal(
+        np.array([m["sim_time"] for m in res.metrics]), leg.sim_time)
+    assert all(m["selected"] == 2 for m in res.metrics)
+    assert res.mean_staleness == pytest.approx(leg.staleness.mean())
+    _assert_trees_close(res.params, leg.params, **TOL)
+
+
+def test_fused_staleness_serial_matches_run_events(tmp_path):
+    """The serial-scheduler rig, ramp and jitter included: the plan's
+    tau schedule and strategy-RNG draw order must mirror on_arrival."""
+    cfg = _cfg(tmp_path, "staleness", workers=1, updates=14, chunk=5,
+               ema=0.0, staleness_tau=3, staleness_ramp_steps=8,
+               staleness_jitter=1)
+    res = run_experiment(cfg)
+
+    params0, grad_fn, update_fn, batch_fn = _ingredients(cfg)
+    leg = coordination.run_events(
+        coordination.Staleness(3, 8, 1), grad_fn, update_fn, params0,
+        batch_fn, num_updates=14, seed=cfg.seed)
+
+    assert res.steps == leg.updates
+    np.testing.assert_array_equal(
+        np.array([m["staleness"] for m in res.metrics]),
+        leg.staleness.astype(float))
+    _assert_trees_close(res.params, leg.params, **TOL)
+
+
+def test_fused_staleness_tau0_is_serial_sgd(tmp_path):
+    """tau=0: the ring is a pass-through and the scan is plain SGD."""
+    cfg = _cfg(tmp_path, "staleness", workers=1, updates=8, chunk=4,
+               ema=0.0, staleness_tau=0)
+    res = run_experiment(cfg)
+    params0, grad_fn, update_fn, batch_fn = _ingredients(cfg)
+    leg = coordination.run_events(
+        coordination.Staleness(0), grad_fn, update_fn, params0, batch_fn,
+        num_updates=8, seed=cfg.seed)
+    assert np.all(np.array([m["staleness"] for m in res.metrics]) == 0.0)
+    _assert_trees_close(res.params, leg.params, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Fused path vs the legacy per-arrival Trainer (identical metrics stream)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_matches_legacy_trainer_async(tmp_path):
+    lat = Uniform(1.0, 2.0)
+    legacy = run_experiment(_cfg(tmp_path / "legacy", "async", updates=24,
+                                 chunk=1), latency=lat)
+    fused = run_experiment(_cfg(tmp_path / "fused", "async", updates=24,
+                                chunk=8), latency=lat)
+    assert len(legacy.metrics) == len(fused.metrics)
+    for ml, mf in zip(legacy.metrics, fused.metrics):
+        assert ml["step"] == mf["step"]
+        assert ml["selected"] == mf["selected"]
+        assert ml["staleness"] == mf["staleness"]
+        assert ml["sim_time"] == mf["sim_time"]
+        assert ml["loss"] == pytest.approx(mf["loss"], rel=2e-4, abs=2e-4)
+    assert legacy.mean_selected == fused.mean_selected
+    assert legacy.mean_staleness == fused.mean_staleness
+    _assert_trees_close(legacy.params, fused.params, **TOL)
+
+
+def test_fused_event_failure_injection(tmp_path):
+    """Kill steps force chunk boundaries; a killed worker stops arriving."""
+    cfg = _cfg(tmp_path, "async", workers=4, updates=24, chunk=8)
+    tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    tr.init_state()
+    res = tr.run(24, kill_worker_at={10: 0})
+    assert res.steps == 24
+    assert 0 in tr._event_dead
+    # parity with the legacy path under the same kill
+    cfg1 = _cfg(tmp_path / "legacy", "async", workers=4, updates=24, chunk=1)
+    t1 = Trainer(cfg1, latency=Uniform(1.0, 2.0))
+    t1.init_state()
+    r1 = t1.run(24, kill_worker_at={10: 0})
+    np.testing.assert_array_equal(
+        np.array([m["staleness"] for m in r1.metrics]),
+        np.array([m["staleness"] for m in res.metrics]))
+    _assert_trees_close(r1.params, res.params, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/resume replay-exactness of the chunked path
+# ---------------------------------------------------------------------------
+
+
+def test_fused_event_checkpoint_resume_replay_exact(tmp_path):
+    """Resume of the chunked async path is bit-exact: chunk boundaries
+    are forced at the checkpoint cadence, so the post-resume partition
+    (and therefore the compiled scan sequence) matches the full run."""
+    lat = Uniform(1.0, 2.0)
+    cfg_full = _cfg(tmp_path / "full", "async", updates=20, chunk=5, every=8)
+    full = run_experiment(cfg_full, latency=lat)
+
+    cfg2 = _cfg(tmp_path / "resume", "async", updates=20, chunk=5, every=8)
+    t1 = Trainer(cfg2, latency=lat)
+    t1.init_state()
+    t1.run(16)                              # checkpoints land at 8 and 16
+    t2 = Trainer(cfg2, latency=lat)
+    t2.restore_checkpoint()
+    assert t2.step == 16
+    r2 = t2.run(4)
+    for a, b in zip(_leaves(full.params), _leaves(r2.params)):
+        np.testing.assert_array_equal(a, b)
+    tail_full = [m["staleness"] for m in full.metrics if m["step"] > 16]
+    tail_res = [m["staleness"] for m in r2.metrics]
+    assert tail_full == tail_res
+
+
+def test_fused_staleness_resume_mid_ramp(tmp_path):
+    """The device ring buffer round-trips through the checkpoint (FIFO
+    order + version tags + strategy RNG) and resume replays exactly."""
+    def cfg_at(p, every):
+        return _cfg(p, "staleness", workers=1, updates=12, chunk=3,
+                    every=every, ema=0.0, staleness_tau=3,
+                    staleness_ramp_steps=10)
+
+    full = run_experiment(cfg_at(tmp_path / "full", 0))
+    cfg2 = cfg_at(tmp_path / "resume", 4)
+    t1 = Trainer(cfg2)
+    t1.init_state()
+    t1.run(8)                               # ring is non-empty mid-ramp
+    t2 = Trainer(cfg2)
+    t2.restore_checkpoint()
+    r2 = t2.run(4)
+    for a, b in zip(_leaves(full.params), _leaves(r2.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_legacy_checkpoint_resumes_into_fused(tmp_path):
+    """The fused path keeps the legacy on-disk format: a checkpoint
+    written by the per-arrival loop restores into the chunked engine."""
+    lat = Uniform(1.0, 2.0)
+    legacy_full = run_experiment(
+        _cfg(tmp_path / "base", "async", updates=20, chunk=1), latency=lat)
+
+    cfg1 = _cfg(tmp_path / "x", "async", updates=20, chunk=1, every=8)
+    t1 = Trainer(cfg1, latency=lat)
+    t1.init_state()
+    t1.run(16)
+    cfg2 = _cfg(tmp_path / "x", "async", updates=20, chunk=5, every=8)
+    t2 = Trainer(cfg2, latency=lat)
+    t2.restore_checkpoint()
+    assert t2.step == 16
+    r2 = t2.run(4)
+    _assert_trees_close(legacy_full.params, r2.params, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# The explicit opt-state contract and the versioned read store
+# ---------------------------------------------------------------------------
+
+
+def test_run_events_explicit_opt_state_contract(tmp_path):
+    """make_update_fn + run_events share one init contract: identical
+    results to the legacy lazy opt_state=None closure handshake."""
+    from repro.configs.base import replace
+    cfg = replace(_cfg(tmp_path, "async", updates=10),
+                  optimizer=OptimizerConfig(name="momentum",
+                                            learning_rate=0.05,
+                                            scale_lr_with_workers=False,
+                                            ema_decay=0.0))
+    params0, grad_fn, update_fn, batch_fn = _ingredients(cfg)
+    assert callable(update_fn.init_opt_state)
+    lat = Uniform(1.0, 2.0)
+    explicit = coordination.run_events(
+        coordination.Async(4), grad_fn, update_fn, params0, batch_fn,
+        num_updates=10, latency=lat, seed=3)
+
+    sched = schedules.from_config(cfg.optimizer, 4)
+    opt = make_optimizer(cfg.optimizer, sched)
+    inner = coordination.make_update_fn(opt, 0.0)
+
+    def lazy_update(params, opt_state, grads, step):   # legacy handshake
+        if opt_state is None:
+            opt_state = opt.init(params)
+        p, o, _ = inner(params, opt_state, grads,
+                        jnp.asarray(step, jnp.int32))
+        return p, o
+
+    lazy = coordination.run_events(
+        coordination.Async(4), grad_fn, lazy_update, params0, batch_fn,
+        num_updates=10, latency=lat, seed=3)
+    for a, b in zip(_leaves(explicit.params), _leaves(lazy.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fused_with_model_and_batch_fn_overrides(tmp_path):
+    """Non-LM rigs (the MNIST §2.1 path) route their batch_fn override
+    through the fused engine's host-side chunk stacking."""
+    from repro.configs.base import ModelConfig, replace
+    from repro.data import mnist_like
+    from repro.models import mnist_cnn
+
+    data_cfg = mnist_like.MnistLikeConfig(num_train=256, num_test=64)
+    train, _ = mnist_like.make_dataset(data_cfg)
+    model = mnist_cnn.make(widths=(4, 4, 8, 8))
+
+    def batch_fn(worker, draw):
+        rng = np.random.RandomState(draw)
+        idx = rng.randint(0, data_cfg.num_train, size=16)
+        return {"images": jnp.asarray(train["images"][idx]),
+                "labels": jnp.asarray(train["labels"][idx])}
+
+    def cfg(chunk):
+        base = _cfg(tmp_path / str(chunk), "staleness", workers=1,
+                    updates=10, chunk=chunk, ema=0.0, staleness_tau=2,
+                    staleness_ramp_steps=5)
+        return replace(base, model=ModelConfig(name="mnist_cnn"),
+                       shape=ShapeConfig("mnist", 1, 16, "train"))
+
+    r1 = run_experiment(cfg(1), model=model, batch_fn=batch_fn)
+    r4 = run_experiment(cfg(4), model=model, batch_fn=batch_fn)
+    assert ([m["staleness"] for m in r1.metrics]
+            == [m["staleness"] for m in r4.metrics])
+    _assert_trees_close(r1.params, r4.params, **TOL)
+
+
+def test_versioned_reads_shares_references():
+    """Workers at the same read version share ONE tree; divergent
+    versions each retain exactly one copy (the num_workers=100 fix)."""
+    p0 = {"w": jnp.zeros(3)}
+    store = coordination.VersionedReads(p0, num_workers=100)
+    assert store.distinct_versions == 1
+    assert store.read(7) is p0
+    p1 = {"w": jnp.ones(3)}
+    store.write(0, p1, version=1)           # one worker diverges forward
+    assert store.distinct_versions == 2
+    for w in range(1, 100):                 # everyone else catches up
+        store.write(w, p1, version=1)
+    assert store.distinct_versions == 1     # version-0 tree was released
+    assert store.read(50) is p1
+    store.write(3, p1, version=1)           # same-version write is a no-op
+    assert store.distinct_versions == 1

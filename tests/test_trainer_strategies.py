@@ -209,11 +209,24 @@ def test_train_cli_event_strategy_smoke(tmp_path):
     assert os.path.exists(os.path.join(str(tmp_path), "LATEST"))
 
 
+def test_train_cli_fused_event_smoke(tmp_path):
+    """--chunk-size now applies to event strategies: the fused engine."""
+    from repro.launch import train as train_cli
+    train_cli.main(["--arch", "qwen3-0.6b", "--smoke", "--steps", "6",
+                    "--strategy", "async", "--chunk-size", "4",
+                    "--workers", "3", "--batch-per-worker", "2",
+                    "--seq", "16", "--ckpt", str(tmp_path),
+                    "--optimizer", "momentum", "--lr", "0.05"])
+    import os
+    assert os.path.exists(os.path.join(str(tmp_path), "LATEST"))
+
+
 @pytest.mark.parametrize("argv", [
     ["--strategy", "full_sync", "--backups", "2"],
     ["--strategy", "async", "--deadline", "1.0"],
     ["--strategy", "backup", "--softsync-c", "2"],
-    ["--strategy", "async", "--chunk-size", "4"],
+    ["--strategy", "timeout", "--backups", "1"],
+    ["--strategy", "async", "--straggler-backend", "device"],
     ["--strategy", "softsync", "--straggler-backend", "device"],
 ])
 def test_train_cli_rejects_mismatched_args(argv):
