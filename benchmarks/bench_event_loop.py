@@ -18,7 +18,6 @@ repo-root BENCH_events.json for the perf-trajectory tooling.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -26,12 +25,10 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
 
-from common import save_json
+from common import write_bench
 
 CHUNK_SIZES = (1, 8, 32)
 STRATEGIES = ("async", "softsync")
-ROOT_MIRROR = os.path.join(os.path.dirname(__file__), "..",
-                           "BENCH_events.json")
 
 
 def build_trainer(strategy: str, chunk_size: int, workers: int = 4):
@@ -114,14 +111,11 @@ def main(argv=None) -> dict:
         # per-arrival loop (the bar for this repo is >= 3 on CPU)
         "speedup_32_vs_1": per_strategy["async"]["speedup_32_vs_1"],
     }
-    path = save_json("BENCH_events", payload)
-
     mirror = {"bench": "event_loop",
               "speedup_32_vs_1": payload["speedup_32_vs_1"],
               **{s: per_strategy[s] for s in STRATEGIES},
               "legacy_updates_per_s": {s: rate(s, 1) for s in STRATEGIES}}
-    with open(ROOT_MIRROR, "w") as f:
-        json.dump(mirror, f, indent=2, default=float)
+    path = write_bench("BENCH_events", payload, mirror=mirror)
 
     for r in results:
         print(f"strategy={r['strategy']:<9} chunk_size={r['chunk_size']:>3} "

@@ -23,7 +23,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 import numpy as np
 
-from common import save_json
+from common import write_bench
 
 CHUNK_SIZES = (1, 8, 32)
 
@@ -122,7 +122,12 @@ def main(argv=None) -> dict:
         "speedup_32_host_vs_1": speedup(32, "host"),
         "speedup_32_device_vs_1": speedup(32, "device"),
     }
-    path = save_json("BENCH_loop", payload)
+    # root mirror: the headline speedups only (the perf-trajectory file)
+    path = write_bench("BENCH_loop", payload,
+                       mirror={k: payload[k] for k in
+                               ("bench", "speedup_8_vs_1", "speedup_32_vs_1",
+                                "speedup_32_host_vs_1",
+                                "speedup_32_device_vs_1")})
     for r in results:
         print(f"chunk_size={r['chunk_size']:>3} backend={r['backend']:<6} "
               f"{r['steps_per_s']:8.1f} steps/s")

@@ -1,0 +1,163 @@
+"""SPMD execution engine vs the single-device simulated backend.
+
+Measures wall-clock steps/s of the tiny-LM backup-worker rig for
+W in {4, 8} workers and chunk_size in {1, 32}, on both execution
+backends: 'sim' (one device, workers as loop index) and 'spmd' (the
+repro.distributed.spmd_engine — workers over a real mesh 'data' axis
+with mesh_data = W, masked aggregation as an in-shard backup_reduce +
+psum collective; docs/spmd.md).
+
+The process forces 8 host platform devices, so on CPU hosts every
+"device" is a slice of the same machine and the ratio reported here
+measures the ENGINE'S overhead (shard_map partitioning, the collective,
+the interpret-mode Pallas reduce), not a speedup — the win appears on
+real accelerators where the per-worker gradients genuinely parallelize.
+Tracking the overhead ratio per commit is the point: it is the price of
+mesh execution at a given (W, K), and regressions here are regressions
+on real hardware too.
+
+Writes experiments/bench/BENCH_spmd.json and mirrors the headline
+summary to the repo-root BENCH_spmd.json.
+"""
+from __future__ import annotations
+
+import os
+
+# must precede ANY jax import in this process (common.py imports jax)
+_FORCED = "--xla_force_host_platform_device_count"
+if _FORCED not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" {_FORCED}=8").strip()
+
+import argparse
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import write_bench
+
+WORKER_COUNTS = (4, 8)
+CHUNK_SIZES = (1, 32)
+
+
+def build_trainer(backend: str, workers: int, chunk_size: int):
+    from repro import configs
+    from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                    ExecutionConfig, OptimizerConfig,
+                                    ShapeConfig, TrainConfig, replace)
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    # tiny model, small shape: the measurement isolates the execution
+    # machinery (dispatch, partitioning, collectives), not model FLOPs
+    model = replace(configs.get_smoke_config("qwen3-0.6b"), num_layers=1,
+                    d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                    d_ff=64, vocab_size=64, vocab_pad_multiple=16)
+    cfg = TrainConfig(
+        model=model,
+        shape=ShapeConfig("bench", 16, 2 * workers, "train"),
+        aggregation=AggregationConfig(strategy="backup",
+                                      num_workers=workers - 1,
+                                      backup_workers=1),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.02,
+                                  scale_lr_with_workers=False,
+                                  ema_decay=0.999),
+        checkpoint=CheckpointConfig(every_steps=0),
+        execution=ExecutionConfig(backend=backend, mesh_data=workers),
+        log_every=1, chunk_size=chunk_size)
+    tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    tr.init_state()
+    return tr
+
+
+def measure_all(specs, steps: int, reps: int = 3):
+    """Build+compile every config first, then interleave the timed reps
+    so CPU thermal drift doesn't systematically penalize whichever
+    config is measured last."""
+    trainers = []
+    for backend, workers, chunk in specs:
+        tr = build_trainer(backend, workers, chunk)
+        tr.run(max(chunk, 8))                      # compile + warm caches
+        trainers.append(tr)
+    best = [None] * len(specs)
+    for _ in range(reps):
+        for i, tr in enumerate(trainers):
+            t0 = time.perf_counter()
+            tr.run(steps)
+            dt = time.perf_counter() - t0
+            best[i] = dt if best[i] is None or dt < best[i] else best[i]
+    return [{"backend": b, "workers": w, "chunk_size": c, "steps": steps,
+             "wall_s": wall, "steps_per_s": steps / wall}
+            for (b, w, c), wall in zip(specs, best)]
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timed steps (CI)")
+    args = ap.parse_args(argv)
+
+    steps = 32 if args.quick else 96
+    specs = [(b, w, c) for w in WORKER_COUNTS for c in CHUNK_SIZES
+             for b in ("sim", "spmd")]
+    results = measure_all(specs, steps)
+
+    def rate(backend, workers, chunk):
+        return next(r["steps_per_s"] for r in results
+                    if r["backend"] == backend and r["workers"] == workers
+                    and r["chunk_size"] == chunk)
+
+    # spmd/sim per cell: < 1 on forced CPU devices (engine overhead),
+    # the quantity to keep from regressing
+    ratios = {f"spmd_vs_sim_w{w}_chunk{c}":
+              rate("spmd", w, c) / rate("sim", w, c)
+              for w in WORKER_COUNTS for c in CHUNK_SIZES}
+    payload = {
+        "bench": "spmd",
+        "model": "qwen3-0.6b tiny (1L, d32)",
+        "devices_forced": 8,
+        "steps": steps,
+        "results": results,
+        **ratios,
+    }
+    path = write_bench("BENCH_spmd", payload,
+                       mirror={"bench": "spmd", **ratios})
+    for r in results:
+        print(f"backend={r['backend']:<5} W={r['workers']} "
+              f"chunk={r['chunk_size']:>3} {r['steps_per_s']:8.1f} steps/s")
+    for k, v in ratios.items():
+        print(f"{k}: {v:.3f}")
+    print(f"-> {path} (+ root BENCH_spmd.json)")
+    return payload
+
+
+def run(quick: bool = True):
+    """benchmarks/run.py harness contract: (name, us_per_call, derived).
+
+    Executed in a fresh subprocess: the forced host device count must be
+    set before jax initializes, which the harness process already did.
+    """
+    import json
+    cmd = [sys.executable, os.path.abspath(__file__)]
+    if quick:
+        cmd.append("--quick")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)        # let the module force its own devices
+    subprocess.run(cmd, check=True, env=env,
+                   cwd=os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench", "BENCH_spmd.json")) as f:
+        payload = json.load(f)
+    rows = [(f"spmd.{r['backend']}_w{r['workers']}_chunk{r['chunk_size']}",
+             1e6 / r["steps_per_s"], f"{r['steps_per_s']:.1f}steps/s")
+            for r in payload["results"]]
+    rows += [(f"spmd.{k}", 0.0, f"{v:.3f}x")
+             for k, v in payload.items() if k.startswith("spmd_vs_sim")]
+    return rows
+
+
+if __name__ == "__main__":
+    main()

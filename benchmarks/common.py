@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+ROOT_DIR = os.path.join(os.path.dirname(__file__), "..")
 
 
 def save_json(name: str, payload: Dict) -> str:
@@ -18,6 +19,20 @@ def save_json(name: str, payload: Dict) -> str:
     path = os.path.join(OUT_DIR, name + ".json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, default=float)
+    return path
+
+
+def write_bench(name: str, payload: Dict,
+                mirror: Optional[Dict] = None) -> str:
+    """The one writer for benchmark artifacts: the full ``payload`` goes
+    to ``experiments/bench/<name>.json`` and ``mirror`` (the headline
+    summary the perf-trajectory tooling tracks; defaults to the full
+    payload) to the repo-root ``<name>.json``. Returns the
+    experiments/bench path."""
+    path = save_json(name, payload)
+    with open(os.path.join(ROOT_DIR, name + ".json"), "w") as f:
+        json.dump(mirror if mirror is not None else payload, f, indent=2,
+                  default=float)
     return path
 
 

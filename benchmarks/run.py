@@ -12,6 +12,7 @@ EXPERIMENTS.md.
   bench_lr_sweep         — Table 2 / Fig. 7 (speed vs final-metric tradeoff)
   bench_sync_vs_async    — Figs. 8/9 (the headline comparison)
   bench_event_loop       — fused event engine vs per-arrival loop
+  bench_spmd             — SPMD mesh engine vs simulated backend
   bench_step_time        — host step-time microbenchmark per arch
   roofline               — §Roofline terms from the dry-run artifacts
 """
@@ -28,7 +29,7 @@ def main() -> None:
     quick = common.quick_mode()
     from benchmarks import (bench_event_loop, bench_iterations_vs_n,
                             bench_layer_staleness, bench_lr_sweep,
-                            bench_staleness, bench_step_time,
+                            bench_spmd, bench_staleness, bench_step_time,
                             bench_straggler, bench_sync_vs_async,
                             bench_time_to_converge, roofline)
     modules = [
@@ -40,6 +41,7 @@ def main() -> None:
         ("lr_sweep", bench_lr_sweep),
         ("sync_vs_async", bench_sync_vs_async),
         ("event_loop", bench_event_loop),
+        ("spmd", bench_spmd),                  # re-execs itself (forced devices)
         ("step_time", bench_step_time),
         ("roofline", roofline),
     ]

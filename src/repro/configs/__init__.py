@@ -4,8 +4,9 @@ from __future__ import annotations
 import importlib
 from typing import Dict, List
 
-from repro.configs.base import (AggregationConfig, CheckpointConfig, MeshConfig,
-                                MLAConfig, ModelConfig, MoEConfig, MULTI_POD_MESH,
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                ExecutionConfig, MeshConfig, MLAConfig,
+                                ModelConfig, MoEConfig, MULTI_POD_MESH,
                                 OptimizerConfig, ShapeConfig, SHAPES,
                                 SHAPES_BY_NAME, SINGLE_POD_MESH, SSMConfig,
                                 TrainConfig, replace)

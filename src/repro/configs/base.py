@@ -278,6 +278,36 @@ class OptimizerConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """How the W coordination workers are executed.
+
+    'sim'  — single-device simulation: workers are contiguous row blocks
+             of one global batch on one device (every PR-1/PR-3 path).
+    'spmd' — the SPMD execution engine (repro.distributed.spmd_engine):
+             workers are laid out over a real mesh 'data' axis via
+             shard_map, per-worker gradients live on their shard, and
+             masked aggregation is a collective (in-shard backup_reduce
+             + psum) — no stacked [W, ...] gradient tree ever exists on
+             one device. Strategies advertise support via
+             ``registry.supports_spmd``; unsupported strategies fall
+             back to 'sim' with a warning.
+    """
+
+    backend: str = "sim"              # 'sim' | 'spmd'
+    mesh_data: int = 1                # 'data' axis size (devices); W % it == 0
+    mesh_model: int = 1               # 'model' axis size (reserved for TP)
+    # in-shard reduce: the kernels/backup_reduce Pallas kernel (True) or
+    # the jnp reference reduction (False)
+    use_kernel: bool = True
+    # Pallas interpret mode: None = auto (interpret off TPU), or forced
+    interpret: Optional[bool] = None
+
+    @property
+    def num_devices(self) -> int:
+        return self.mesh_data * self.mesh_model
+
+
+@dataclasses.dataclass(frozen=True)
 class CheckpointConfig:
     directory: str = "checkpoints"
     every_steps: int = 100
@@ -293,6 +323,7 @@ class TrainConfig:
     aggregation: AggregationConfig = AggregationConfig()
     optimizer: OptimizerConfig = OptimizerConfig()
     checkpoint: CheckpointConfig = CheckpointConfig()
+    execution: ExecutionConfig = ExecutionConfig()
     seed: int = 0
     total_steps: int = 1000
     log_every: int = 10
@@ -308,6 +339,11 @@ class TrainConfig:
     # 'device' — jax.random sampling + select_jax inside the scan body
     #            (distribution-equivalent, zero host work per step)
     straggler_backend: str = "host"
+    # ChunkPrefetcher look-ahead: how many upcoming chunks are built on
+    # the background thread while the device runs the current dispatch
+    # (1 = classic double buffering; generation is pure in (cfg, step),
+    # so deeper speculation never changes the batches)
+    prefetch_depth: int = 1
 
 
 def replace(cfg, **kw):

@@ -96,9 +96,17 @@ class CoordinationStrategy:
 
 
 class MaskStrategy(CoordinationStrategy):
-    """Synchronous regimes: arrival times -> (worker mask, step time)."""
+    """Synchronous regimes: arrival times -> (worker mask, step time).
+
+    ``spmd_supported`` — True (the default) when the strategy's masks are
+    pure per-step data, so the SPMD execution engine can run it over a
+    real device mesh unchanged (``registry.supports_spmd``). Plugins
+    whose selection assumes single-device execution opt out by setting
+    it False; the Trainer then falls back to the simulated backend.
+    """
 
     kind = "mask"
+    spmd_supported = True
 
     def select(self, arrivals: np.ndarray) -> Tuple[np.ndarray, float]:
         """arrivals: [W] seconds -> (mask bool [W], iteration_time)."""

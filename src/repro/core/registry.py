@@ -40,6 +40,21 @@ def available() -> List[str]:
     return sorted(_BUILDERS)
 
 
+def supports_spmd(strategy: coordination.CoordinationStrategy) -> bool:
+    """True when the strategy can run on the SPMD execution engine
+    (``repro.distributed.spmd_engine`` — workers over a real mesh axis).
+    Any mask strategy qualifies by default: the engine consumes the same
+    host-planned masks as the simulated backend, so ``select`` /
+    ``select_batch`` are all it needs. Plugins that bake single-device
+    assumptions into their selection can opt out with a class attribute
+    ``spmd_supported = False``; event strategies (host-scheduled
+    per-arrival control flow) are never SPMD-executable. The Trainer
+    falls back to the simulated backend (with a warning) when this
+    returns False — it never errors."""
+    return (getattr(strategy, "kind", "") == "mask"
+            and bool(getattr(strategy, "spmd_supported", True)))
+
+
 def supports_event_scan(strategy: coordination.CoordinationStrategy) -> bool:
     """True when an event strategy implements the chunked plan/scan
     protocol (``plan_arrival`` host half + ``on_arrival_scan`` device

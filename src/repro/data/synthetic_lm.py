@@ -158,22 +158,25 @@ class SyntheticLMPipeline:
 
 
 class ChunkPrefetcher:
-    """Double-buffered chunk generation for the fused trainer.
+    """Look-ahead chunk generation for the fused trainer.
 
-    After serving chunk [step, step+k) it speculatively builds the next
-    chunk [step+k, step+2k) on a background thread, overlapping host batch
-    generation with device compute. Generation is pure in (cfg, step), so a
-    mispredicted boundary (checkpoint / kill-injection / final ragged
-    chunk) just falls back to synchronous generation — determinism and
-    checkpoint state are owned by the caller's PipelineState, never by the
-    prefetch thread.
+    After serving chunk [step, step+k) it speculatively builds up to
+    ``depth`` upcoming chunks on background threads (depth=1 is classic
+    double buffering), overlapping host batch generation with device
+    compute. Generation is pure in (cfg, step), so a mispredicted
+    boundary (checkpoint / kill-injection / final ragged chunk) just
+    falls back to synchronous generation — determinism and checkpoint
+    state are owned by the caller's PipelineState, never by the prefetch
+    threads, and the served batches are identical at every depth.
     """
 
-    def __init__(self, cfg: SyntheticLMConfig):
+    def __init__(self, cfg: SyntheticLMConfig, depth: int = 1):
+        if depth < 0:
+            raise ValueError(f"prefetch depth must be >= 0 (got {depth})")
         self.cfg = cfg
-        self._thread: Optional[threading.Thread] = None
-        self._spec: Optional[tuple] = None
-        self._holder: Dict = {}
+        self.depth = depth
+        # in-flight speculations, oldest first: [(spec, thread, holder)]
+        self._pending: list = []
 
     def _launch(self, step: int, k: int) -> None:
         holder: Dict = {}
@@ -184,26 +187,43 @@ class ChunkPrefetcher:
         th = threading.Thread(target=work, daemon=True,
                               name="repro-chunk-prefetch")
         th.start()
-        self._thread, self._spec, self._holder = th, (step, k), holder
+        self._pending.append(((step, k), th, holder))
 
-    def get(self, step: int, k: int, next_k: Optional[int] = None
-            ) -> Dict[str, np.ndarray]:
+    def _take(self, step: int, k: int) -> Optional[Dict[str, np.ndarray]]:
+        """Pop the speculation matching (step, k); reap stale ones."""
+        chunk = None
+        keep = []
+        for spec, th, holder in self._pending:
+            if spec == (step, k) and chunk is None:
+                th.join()
+                chunk = holder.get("chunk")
+            elif spec[0] > step:
+                keep.append((spec, th, holder))   # still ahead: may hit later
+            else:
+                th.join()                         # stale: reap and drop
+        self._pending = keep
+        return chunk
+
+    def get(self, step: int, k: int, next_k: Optional[int] = None,
+            next_specs: Optional[list] = None) -> Dict[str, np.ndarray]:
         """The stacked chunk for [step, step+k).
 
-        ``next_k`` is the caller's prediction of the FOLLOWING chunk's
-        length (the Trainer knows it from its boundary rules): when given,
-        [step+k, step+k+next_k) is built on the background thread while
-        the device runs this chunk. None means no speculation — e.g. the
-        last chunk of a run, where a prefetched chunk would be wasted."""
-        if self._thread is not None:
-            self._thread.join()
-            hit = self._spec == (step, k)
-            chunk = self._holder.get("chunk") if hit else None
-            self._thread, self._spec, self._holder = None, None, {}
-        else:
-            chunk = None
+        ``next_specs`` is the caller's prediction of the FOLLOWING chunks
+        as (step, k) pairs (the Trainer computes them from its boundary
+        rules): the first ``depth`` not-yet-inflight ones are built on
+        background threads while the device runs this chunk. ``next_k``
+        is the depth-1 shorthand (equivalent to
+        ``next_specs=[(step + k, next_k)]``). Empty/None means no
+        speculation — e.g. the last chunk of a run."""
+        if next_specs is None:
+            next_specs = [(step + k, next_k)] if next_k else []
+        chunk = self._take(step, k)
         if chunk is None:
             chunk = chunk_batches(self.cfg, step, k)
-        if next_k:
-            self._launch(step + k, next_k)
+        inflight = {spec for spec, _, _ in self._pending}
+        for spec in next_specs[:max(self.depth, 0)]:
+            if len(self._pending) >= self.depth:
+                break
+            if tuple(spec) not in inflight:
+                self._launch(*spec)
         return chunk

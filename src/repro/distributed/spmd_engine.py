@@ -1,0 +1,310 @@
+"""SPMD execution engine: coordination strategies over a real device mesh.
+
+Every path built in PRs 1–3 executes the paper's W workers as a *loop
+index* on one device: the global batch is one array, per-worker gradients
+are either implicit (the mask-weighted loss trick) or a stacked
+``[W, ...]`` pytree. This module is the execution substrate the paper
+actually describes — N workers computing gradients **in parallel on
+distinct devices**:
+
+* the W coordination workers are laid out over the mesh's ``'data'``
+  axis (``W % mesh_data == 0``; each shard owns ``W / mesh_data``
+  contiguous workers and only *their* rows of the global batch);
+* each shard computes its local workers' mean gradients sequentially
+  (``lax.map`` — one worker's activation memory at a time, exactly the
+  per-machine footprint of the paper's setup);
+* the paper's Alg. 4 line 7 ``(1/N) * sum_{selected} G_w`` is realized
+  as a **collective**: the in-shard masked reduce is the
+  ``kernels.backup_reduce`` Pallas kernel (or the jnp reference) over
+  the local ``[W_local, P]`` stack, followed by one ``psum`` over
+  ``'data'`` — at no point does a stacked ``[W, ...]`` gradient tree
+  exist on any single device;
+* the optimizer + EMA apply to the (replicated) aggregated gradient
+  outside the shard_map, so checkpoints keep the exact on-disk format
+  of the simulated backend.
+
+The mask itself stays host-planned (the ``StragglerSimulator`` /
+``CoordinationStrategy.select`` contract is unchanged — masks are *data*
+to the engine), so the mesh run is comparable step-for-step with the
+single-device simulated run: parity is allclose, not bit-exact, because
+the sim backend differentiates the mask-weighted global loss while the
+engine sums explicit per-worker gradients (the same value in different
+floating-point association). The ``'model'`` mesh axis is carried
+(replicated) so tensor-parallel sharding can land inside the worker
+gradient later without changing the engine's collective structure.
+
+Chunking composes: ``build_spmd_chunk_step`` wraps the step in the same
+``lax.scan`` as the single-device chunked loop, so one dispatch covers K
+steps across the whole mesh. See docs/spmd.md.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import ema as ema_lib
+from repro.core import sync_backup
+from repro.kernels.backup_reduce import backup_reduce
+from repro.launch.mesh import make_host_mesh
+from repro.optim import optimizers as opt_lib
+
+WORKER_AXIS = "data"
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions: jax.shard_map (>= 0.6, check_vma)
+    where it exists, else jax.experimental.shard_map (check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction / layout validation
+# ---------------------------------------------------------------------------
+
+
+def build_mesh(exec_cfg) -> Mesh:
+    """The engine's ('data', 'model') worker mesh from an ExecutionConfig."""
+    need = exec_cfg.num_devices
+    have = len(jax.devices())
+    if need > have:
+        raise ValueError(
+            f"execution backend 'spmd' needs mesh_data*mesh_model = {need} "
+            f"devices but only {have} present; on CPU hosts force devices "
+            f"with XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    return make_host_mesh(exec_cfg.mesh_data, exec_cfg.mesh_model)
+
+
+def validate_layout(num_workers: int, global_batch: int,
+                    mesh_data: int) -> int:
+    """Checks W/B divisibility over the data axis; returns W_local."""
+    if mesh_data < 1:
+        raise ValueError(f"mesh_data must be >= 1 (got {mesh_data})")
+    if num_workers % mesh_data:
+        raise ValueError(
+            f"spmd engine maps workers onto the '{WORKER_AXIS}' axis: "
+            f"total_workers ({num_workers}) must be divisible by "
+            f"mesh_data ({mesh_data})")
+    if global_batch % num_workers:
+        raise ValueError(
+            f"global_batch ({global_batch}) must be divisible by "
+            f"total_workers ({num_workers})")
+    return num_workers // mesh_data
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    """Pallas runs natively on TPU only; anywhere else use interpret mode."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Stacked-gradient flatten/unflatten (the kernel's [W_local, P] view)
+# ---------------------------------------------------------------------------
+
+
+def flatten_stacked(tree: Any) -> Tuple[jnp.ndarray, Tuple]:
+    """[W, ...] pytree -> ([W, P] f32, spec) with P = total param count."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(l.shape[1:] for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    flat = jnp.concatenate(
+        [l.reshape((l.shape[0], -1)).astype(jnp.float32) for l in leaves],
+        axis=1)
+    return flat, (treedef, shapes, dtypes)
+
+
+def unflatten_vector(vec: jnp.ndarray, spec: Tuple) -> Any:
+    """[P] f32 -> pytree with the original shapes/dtypes."""
+    treedef, shapes, dtypes = spec
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    offsets = np.cumsum([0] + sizes)
+    leaves = [
+        vec[offsets[i]:offsets[i + 1]].reshape(shapes[i]).astype(dtypes[i])
+        for i in range(len(shapes))]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Per-worker loss (paper semantics: each worker's own mini-batch mean)
+# ---------------------------------------------------------------------------
+
+
+def make_worker_loss(model) -> Callable:
+    """loss(params, worker_batch) -> (scalar, (mean_loss, aux)).
+
+    Mirrors ``train_step.make_loss_fn``'s per-example loss (token-validity
+    masking, vlm prefix padding) but at single-worker granularity: the
+    worker's gradient is the gradient of ITS mini-batch mean — including
+    its own aux loss, as a real worker machine would compute it. (The sim
+    backend instead adds one global-batch aux term; the two agree
+    whenever aux == 0, i.e. all non-MoE models.)
+    """
+
+    def loss_fn(params, batch):
+        per_tok, aux = model.per_token_loss(params, batch)
+        labels = batch["labels"]
+        if per_tok.shape[1] != labels.shape[1]:       # vlm prefix positions
+            pad = per_tok.shape[1] - labels.shape[1]
+            labels = jnp.concatenate(
+                [jnp.full((labels.shape[0], pad), -1, labels.dtype), labels],
+                1)
+        valid = (labels >= 0).astype(jnp.float32)
+        per_ex = (jnp.sum(per_tok * valid, axis=-1)
+                  / jnp.maximum(jnp.sum(valid, axis=-1), 1.0))
+        mean_loss = jnp.mean(per_ex)
+        return mean_loss + aux, (mean_loss, aux)
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# The engine step
+# ---------------------------------------------------------------------------
+
+
+def build_spmd_step(model, optimizer: opt_lib.Optimizer, mesh: Mesh, *,
+                    num_workers: int, n_aggregate: int,
+                    ema_decay: float = 0.0, clip_norm: float = 0.0,
+                    use_kernel: bool = True, interpret: Optional[bool] = None,
+                    block: int = 4096) -> Callable:
+    """Mesh twin of ``train_step.build_train_step`` — same signature:
+
+        step(params, opt_state, ema, step, batch, mask)
+            -> (params, opt_state, ema, metrics)
+
+    ``batch`` rows are worker-contiguous (the data-pipeline layout), so
+    sharding axis 0 over ``'data'`` gives each shard exactly its local
+    workers' rows; ``mask`` is the host-planned [W] selection, sharded to
+    [W_local] per shard. Aggregation is in-shard masked reduce (Pallas
+    ``backup_reduce`` over the local [W_local, P] stack, or the jnp
+    reference) + one ``psum`` over ``'data'``; optimizer/EMA run on the
+    replicated result outside the shard_map.
+    """
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    mesh_data = names[WORKER_AXIS]
+    if num_workers % mesh_data:
+        raise ValueError(
+            f"total_workers ({num_workers}) must be divisible by the "
+            f"'{WORKER_AXIS}' axis size ({mesh_data})")
+    w_local = num_workers // mesh_data
+    interp = _auto_interpret(interpret)
+    worker_loss = make_worker_loss(model)
+
+    def shard_grads(batch, mask, params):
+        # batch: local rows [b_local, ...]; mask: [W_local]; params: full
+        def reshape(x):
+            return x.reshape((w_local, x.shape[0] // w_local) + x.shape[1:])
+
+        shards = jax.tree_util.tree_map(reshape, batch)
+
+        def one_worker(worker_batch):
+            (_, (mean_loss, aux)), g = jax.value_and_grad(
+                worker_loss, has_aux=True)(params, worker_batch)
+            return g, mean_loss, aux
+
+        # sequential over local workers: one worker's activations at a
+        # time — the per-machine memory footprint of the paper's setup
+        grads, losses, auxes = jax.lax.map(one_worker, shards)
+        mf = mask.astype(jnp.float32)
+        if use_kernel:
+            flat, spec = flatten_stacked(grads)         # [W_local, P] f32
+            red = backup_reduce(flat, mask, n_aggregate, block=block,
+                                interpret=interp)       # [P] local sum / N
+            agg = unflatten_vector(jax.lax.psum(red, WORKER_AXIS), spec)
+        else:
+            agg = sync_backup.aggregate_masked(grads, mask, n_aggregate)
+            agg = jax.lax.psum(agg, WORKER_AXIS)
+        # masked mean of per-worker losses, matching the sim backend's
+        # monitoring metric: sel = (1/N) sum_w mask_w * mean_loss_w
+        sel = jax.lax.psum(jnp.sum(losses * mf), WORKER_AXIS) / n_aggregate
+        aux = jax.lax.psum(jnp.sum(auxes), WORKER_AXIS) / num_workers
+        return agg, sel, aux
+
+    mapped = _shard_map(
+        shard_grads, mesh,
+        in_specs=(P(WORKER_AXIS), P(WORKER_AXIS), P()),
+        out_specs=(P(), P(), P()))
+
+    def step_fn(params, opt_state, ema_state, step, batch, mask):
+        grads, sel, aux = mapped(batch, mask, params)
+        frac = jnp.sum(mask.astype(jnp.float32)) / n_aggregate
+        metrics = {"loss": sel / jnp.maximum(frac, 1e-6), "aux_loss": aux}
+        if clip_norm > 0:
+            grads, gnorm = opt_lib.clip_by_global_norm(grads, clip_norm)
+            metrics["grad_norm"] = gnorm
+        new_params, new_opt, stats = optimizer.apply(params, grads,
+                                                     opt_state, step)
+        metrics.update(stats)
+        if ema_decay > 0:
+            ema_state = ema_lib.update(ema_state, new_params, ema_decay)
+        return new_params, new_opt, ema_state, metrics
+
+    return step_fn
+
+
+def build_spmd_chunk_step(model, optimizer: opt_lib.Optimizer, mesh: Mesh,
+                          **step_kwargs) -> Callable:
+    """Mesh twin of the host-mask ``build_chunk_step``: one ``lax.scan``
+    dispatch covers K steps across the whole mesh.
+
+        chunk(params, opt, ema, step0, batches [K, B, ...], masks [K, W])
+            -> (params, opt, ema, metrics {k: [K]})
+
+    The scan body is the unmodified ``build_spmd_step`` function, so
+    chunking never changes the mesh semantics — only the dispatch count.
+    """
+    step_fn = build_spmd_step(model, optimizer, mesh, **step_kwargs)
+
+    def scan_steps(params, opt_state, ema_state, step0, batches, masks):
+        def body(carry, xs):
+            p, o, e, step = carry
+            batch, mask = xs
+            p, o, e, m = step_fn(p, o, e, step, batch, mask)
+            return (p, o, e, step + 1), m
+
+        (p, o, e, _), ms = jax.lax.scan(
+            body, (params, opt_state, ema_state, step0), (batches, masks))
+        return p, o, e, ms
+
+    return scan_steps
+
+
+# ---------------------------------------------------------------------------
+# Jitted entry points (what the Trainer installs)
+# ---------------------------------------------------------------------------
+
+
+def _replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def make_train_step(model, optimizer, mesh: Mesh, **step_kwargs) -> Callable:
+    """Jitted per-step engine, drop-in for the Trainer's ``train_step``:
+    params/opt/ema/step/mask replicated, batch rows sharded over 'data'."""
+    rep = _replicated(mesh)
+    bsh = NamedSharding(mesh, P(WORKER_AXIS))
+    return jax.jit(build_spmd_step(model, optimizer, mesh, **step_kwargs),
+                   in_shardings=(rep, rep, rep, rep, bsh, rep),
+                   donate_argnums=(0, 1, 2))
+
+
+def make_chunk_step(model, optimizer, mesh: Mesh, **step_kwargs) -> Callable:
+    """Jitted K-step engine, drop-in for the Trainer's ``chunk_step``:
+    stacked batches [K, B, ...] shard axis 1 (the batch rows) over 'data'."""
+    rep = _replicated(mesh)
+    bsh = NamedSharding(mesh, P(None, WORKER_AXIS))
+    return jax.jit(
+        build_spmd_chunk_step(model, optimizer, mesh, **step_kwargs),
+        in_shardings=(rep, rep, rep, rep, bsh, rep),
+        donate_argnums=(0, 1, 2))

@@ -6,6 +6,10 @@
         --strategy async --workers 6
     python -m repro.launch.train --arch qwen3-0.6b --smoke --steps 50 \
         --strategy softsync --workers 6 --softsync-c 2
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.train --arch qwen3-0.6b --smoke --steps 50 \
+        --strategy backup --workers 6 --backups 2 \
+        --execution spmd --mesh-data 8 --chunk-size 8
 
 --smoke uses the reduced per-arch config (CPU-runnable); without it the
 full published config is built (TPU-scale — on this host use the dry-run
@@ -22,7 +26,8 @@ import os
 
 from repro import configs
 from repro.configs.base import (AggregationConfig, CheckpointConfig,
-                                OptimizerConfig, ShapeConfig, TrainConfig)
+                                ExecutionConfig, OptimizerConfig, ShapeConfig,
+                                TrainConfig)
 from repro.core.straggler import PaperCalibrated
 from repro.train.loop import run_experiment
 
@@ -30,15 +35,22 @@ MASK_STRATEGIES = ("backup", "full_sync", "timeout")
 EVENT_STRATEGIES = ("async", "softsync")
 
 
+def _resolved_workers(args):
+    """(backups, total launched) after defaults — the ONE definition both
+    build_config and the arg validation use."""
+    backups = args.backups if args.backups is not None else (
+        2 if args.strategy == "backup" else 0)
+    total = args.workers + (backups if args.strategy == "backup" else 0)
+    return backups, total
+
+
 def build_config(args) -> TrainConfig:
     """args -> TrainConfig, with strategy-specific arg validation."""
     model_cfg = (configs.get_smoke_config(args.arch) if args.smoke
                  else configs.get_config(args.arch))
-    backups = args.backups if args.backups is not None else (
-        2 if args.strategy == "backup" else 0)
+    backups, total = _resolved_workers(args)
     deadline = args.deadline if args.deadline is not None else 2.0
     softsync_c = args.softsync_c if args.softsync_c is not None else 2
-    total = args.workers + (backups if args.strategy == "backup" else 0)
     return TrainConfig(
         model=model_cfg,
         shape=ShapeConfig("cli", args.seq, args.batch_per_worker * total,
@@ -54,9 +66,13 @@ def build_config(args) -> TrainConfig:
                                   ema_decay=0.999),
         checkpoint=CheckpointConfig(directory=args.ckpt,
                                     every_steps=args.ckpt_every),
+        execution=ExecutionConfig(backend=args.execution,
+                                  mesh_data=args.mesh_data or 1,
+                                  mesh_model=args.mesh_model or 1),
         seed=args.seed, total_steps=args.steps, log_every=10,
         chunk_size=args.chunk_size,
-        straggler_backend=args.straggler_backend)
+        straggler_backend=args.straggler_backend,
+        prefetch_depth=args.prefetch_depth)
 
 
 def _validate(ap: argparse.ArgumentParser, args) -> None:
@@ -73,6 +89,21 @@ def _validate(ap: argparse.ArgumentParser, args) -> None:
     if args.strategy in EVENT_STRATEGIES and args.straggler_backend != "host":
         ap.error(f"--straggler-backend device only applies to mask "
                  f"strategies (got --strategy {args.strategy})")
+    for flag, value in (("--mesh-data", args.mesh_data),
+                        ("--mesh-model", args.mesh_model)):
+        if value is not None and args.execution != "spmd":
+            ap.error(f"{flag} only applies to --execution spmd")
+    if args.execution == "spmd":
+        if args.strategy in EVENT_STRATEGIES:
+            ap.error(f"--execution spmd only applies to mask strategies "
+                     f"(got --strategy {args.strategy})")
+        if args.straggler_backend != "host":
+            ap.error("--execution spmd consumes host-planned masks: "
+                     "--straggler-backend must be host")
+        _, total = _resolved_workers(args)
+        if total % (args.mesh_data or 1):
+            ap.error(f"total workers ({total}) must be divisible by "
+                     f"--mesh-data ({args.mesh_data})")
 
 
 def main(argv=None) -> None:
@@ -109,6 +140,19 @@ def main(argv=None) -> None:
     ap.add_argument("--straggler-backend", choices=["host", "device"],
                     default="host",
                     help="'device' samples arrivals/batches inside the scan")
+    ap.add_argument("--execution", choices=["sim", "spmd"], default="sim",
+                    help="'spmd' runs the workers over a real device mesh "
+                         "(repro.distributed.spmd_engine, docs/spmd.md); "
+                         "'sim' is the single-device simulated backend")
+    ap.add_argument("--mesh-data", type=int, default=None,
+                    help="devices on the mesh 'data' (worker) axis "
+                         "(spmd only; total workers must divide evenly)")
+    ap.add_argument("--mesh-model", type=int, default=None,
+                    help="devices on the mesh 'model' axis (spmd only; "
+                         "reserved for tensor parallelism — replicated)")
+    ap.add_argument("--prefetch-depth", type=int, default=1,
+                    help="chunks speculatively built ahead of the device "
+                         "dispatch (chunked loop; 1 = double buffering)")
     args = ap.parse_args(argv)
     _validate(ap, args)
 

@@ -17,6 +17,14 @@ single ``lax.scan`` dispatch (see docs/perf.md); chunk boundaries are
 forced at checkpoint / kill-injection / rescale steps so resume semantics
 are unchanged.
 
+With ``cfg.execution.backend == 'spmd'`` mask strategies execute on the
+SPMD engine (``repro.distributed.spmd_engine``, docs/spmd.md): the W
+workers map onto a real mesh 'data' axis, per-worker gradients live on
+their shard, and masked aggregation is a collective — with the same
+host-planned masks, checkpoint format, and chunking rules as the
+simulated backend. Strategies without SPMD support
+(``registry.supports_spmd``) fall back to 'sim' with a warning.
+
 **Event mode** (async / softsync / staleness) — the discrete-event
 parameter-server loop: the scheduler pops gradient arrivals per the
 latency model, the strategy decides apply-or-buffer per arrival
@@ -52,6 +60,7 @@ CLI, the examples, and the benchmarks.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -68,6 +77,7 @@ from repro.core.straggler import LatencyModel, PaperCalibrated
 from repro.data.synthetic_lm import (ChunkPrefetcher, PipelineState,
                                      SyntheticLMConfig, SyntheticLMPipeline,
                                      device_batch_fn, worker_batch)
+from repro.distributed import spmd_engine
 from repro.models import get_model
 from repro.optim import make_optimizer, schedules
 from repro.train import checkpoint as ckpt_lib
@@ -124,6 +134,19 @@ class Trainer:
     def _build(self) -> None:
         # the registry is the ONLY config->strategy construction path
         self.strategy = registry.get_strategy(self.cfg.aggregation)
+        backend = self.cfg.execution.backend
+        if backend not in ("sim", "spmd"):
+            raise ValueError(f"unknown execution backend {backend!r} "
+                             f"(valid: sim, spmd)")
+        # the supports_spmd gate: strategies without SPMD support (event
+        # regimes, opted-out plugins) fall back to the simulated backend
+        self._spmd = backend == "spmd"
+        if self._spmd and not registry.supports_spmd(self.strategy):
+            warnings.warn(
+                f"strategy {self.cfg.aggregation.strategy!r} has no SPMD "
+                "support (registry.supports_spmd); falling back to the "
+                "single-device simulated backend", stacklevel=2)
+            self._spmd = False
         if self.strategy.kind == "mask":
             self._build_mask()
         elif self.strategy.kind == "event":
@@ -149,14 +172,40 @@ class Trainer:
             n_aggregate=cfg.aggregation.num_workers,
             ema_decay=cfg.optimizer.ema_decay,
             clip_norm=cfg.optimizer.clip_global_norm)
+        if cfg.straggler_backend not in ("host", "device"):
+            raise ValueError(f"unknown straggler_backend "
+                             f"{cfg.straggler_backend!r} (host|device)")
+        if self._spmd:
+            # SPMD execution engine: workers over the mesh 'data' axis,
+            # masked aggregation as a collective (docs/spmd.md). Masks
+            # stay host-planned, so the straggler simulator/prefetcher
+            # plumbing is shared with the simulated backend.
+            if cfg.straggler_backend == "device":
+                raise ValueError(
+                    "straggler_backend='device' applies to the simulated "
+                    "backend only: the spmd engine consumes host-planned "
+                    "masks (use straggler_backend='host')")
+            self.mesh = spmd_engine.build_mesh(cfg.execution)
+            spmd_engine.validate_layout(cfg.aggregation.total_workers,
+                                        cfg.shape.global_batch,
+                                        cfg.execution.mesh_data)
+            engine_kwargs = dict(step_kwargs,
+                                 use_kernel=cfg.execution.use_kernel,
+                                 interpret=cfg.execution.interpret)
+            self.train_step = spmd_engine.make_train_step(
+                self.model, self.optimizer, self.mesh, **engine_kwargs)
+            if cfg.chunk_size > 1:
+                self.chunk_step = spmd_engine.make_chunk_step(
+                    self.model, self.optimizer, self.mesh, **engine_kwargs)
+                self.prefetcher = ChunkPrefetcher(
+                    self.pipeline.cfg, depth=cfg.prefetch_depth)
+            self.step = 0
+            return
         step_fn = build_train_step(self.model, self.optimizer, **step_kwargs)
         self.train_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
         # fused chunked path: K steps per dispatch via lax.scan (see
         # docs/perf.md). 'host' backend replays the numpy straggler streams
         # bit-exactly; 'device' samples arrivals inside the scan body.
-        if cfg.straggler_backend not in ("host", "device"):
-            raise ValueError(f"unknown straggler_backend "
-                             f"{cfg.straggler_backend!r} (host|device)")
         if cfg.chunk_size > 1:
             self.chunk_step = jax.jit(
                 build_chunk_step(self.model, self.optimizer, **step_kwargs),
@@ -169,7 +218,8 @@ class Trainer:
                         select_fn=self.strategy.select_jax,
                         data_fn=device_batch_fn(self.pipeline.cfg)),
                     static_argnums=(4,), donate_argnums=(0, 1, 2))
-            self.prefetcher = ChunkPrefetcher(self.pipeline.cfg)
+            self.prefetcher = ChunkPrefetcher(self.pipeline.cfg,
+                                              depth=cfg.prefetch_depth)
             # domain-separated from device_batch_fn's data key stream
             self._chunk_key = jax.random.fold_in(
                 jax.random.PRNGKey(cfg.seed), 0x57A6)
@@ -187,10 +237,14 @@ class Trainer:
                 "arrivals on the host: straggler_backend must be 'host'")
         self._event_fused = cfg.chunk_size > 1
         if self._event_fused and not registry.supports_event_scan(self.strategy):
-            raise ValueError(
+            # plugins that only implement on_arrival still run — on the
+            # legacy per-arrival path, with a warning instead of an error
+            warnings.warn(
                 f"strategy {cfg.aggregation.strategy!r} does not implement "
                 "the chunked plan/scan protocol (plan_arrival + "
-                "on_arrival_scan); use chunk_size=1")
+                "on_arrival_scan); falling back to the legacy per-arrival "
+                "path (chunk_size=1 semantics)", stacklevel=2)
+            self._event_fused = False
         self.model = self._model_override or get_model(cfg.model)
         sched = schedules.from_config(cfg.optimizer, cfg.aggregation.num_workers)
         self.optimizer = make_optimizer(cfg.optimizer, sched)
@@ -451,6 +505,17 @@ class Trainer:
         prev_restarts = self.restarts
         plan = elastic.plan_rescale(self.cfg, w)
         self.cfg = elastic.apply_rescale(self.cfg, plan)
+        if self._spmd:
+            # shrink the worker axis to the largest size the new worker
+            # count still divides over — the freed devices idle rather
+            # than crash the run (they rejoin on the next scale-up)
+            md = self.cfg.execution.mesh_data
+            while w % md:
+                md -= 1
+            if md != self.cfg.execution.mesh_data:
+                self.cfg = dataclasses.replace(
+                    self.cfg, execution=dataclasses.replace(
+                        self.cfg.execution, mesh_data=md))
         self._build()
         self.restore_checkpoint()
         self.restarts = prev_restarts + 1
@@ -470,7 +535,10 @@ class Trainer:
             return self._result()
         while self.step < target:
             if self.step in kill_worker_at:
-                self.sim.kill_worker(kill_worker_at[self.step])
+                # pop on application (as the event loop does): a rescale
+                # renumbers the workers, so the entry must not re-apply
+                # to the rebuilt, smaller simulator on the next pass
+                self.sim.kill_worker(kill_worker_at.pop(self.step))
             if self.sim.alive < self.cfg.aggregation.num_workers:
                 if min_alive_behavior == "rescale":
                     self.rescale(self.sim.alive)
@@ -510,6 +578,27 @@ class Trainer:
                 k = s - step
         return max(k, 1)
 
+    def _next_chunk_specs(self, k: int, target: int,
+                          kill_worker_at: Dict[int, int]) -> List:
+        """Predicted (data_step, length) of the next ``prefetch_depth``
+        chunks after the current one — what the prefetcher speculates on
+        while the device runs this dispatch. Positions are data-pipeline
+        steps; lengths follow the same boundary rules as the dispatch
+        itself (``_chunk_len_at``), so speculation normally hits even at
+        ragged checkpoint/kill boundaries — and a miss only costs the
+        speculated work (generation is pure in (cfg, step))."""
+        specs = []
+        s = self.step + k
+        d = self.pipeline.state.step + k
+        for _ in range(max(self.cfg.prefetch_depth, 0)):
+            if s >= target:
+                break
+            kk = self._chunk_len_at(s, target, kill_worker_at)
+            specs.append((d, kk))
+            s += kk
+            d += kk
+        return specs
+
     def _run_one_step(self, target: int) -> None:
         """Legacy per-step path: one dispatch + one metrics sync per step."""
         ev = self.sim.next_event()
@@ -548,10 +637,9 @@ class Trainer:
             self._sel_sum += float(jnp.sum(masks_dev))
             self.sim.reset_to_step(self.sim.step + k)
         else:
-            next_k = (self._chunk_len_at(self.step + k, target, kill_worker_at)
-                      if self.step + k < target else None)
-            chunk_np = self.prefetcher.get(self.pipeline.state.step, k,
-                                           next_k=next_k)
+            chunk_np = self.prefetcher.get(
+                self.pipeline.state.step, k,
+                next_specs=self._next_chunk_specs(k, target, kill_worker_at))
             self.pipeline.state.step += k
             batches = {key: jnp.asarray(v) for key, v in chunk_np.items()}
             events = self.sim.next_events(k)

@@ -89,3 +89,121 @@ def test_trainer_constructs_only_via_registry(tmp_path, monkeypatch):
         checkpoint=CheckpointConfig(directory=str(tmp_path), every_steps=0))
     tr = Trainer(cfg)
     assert calls and tr.strategy is calls[-1]
+
+
+# ---------------------------------------------------------------------------
+# Plugin capability gates: strategies without event-scan / SPMD support
+# must fall back to the legacy paths, never error (docs/api.md contract)
+# ---------------------------------------------------------------------------
+
+
+def _plugin_train_cfg(tmp_path, strategy, *, chunk_size=1, execution=None,
+                      workers=3, backups=1, steps=4):
+    from repro import configs
+    from repro.configs.base import (CheckpointConfig, ExecutionConfig,
+                                    OptimizerConfig, ShapeConfig, TrainConfig,
+                                    replace)
+    model = replace(configs.get_smoke_config("qwen3-0.6b"), num_layers=1,
+                    d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                    d_ff=64, vocab_size=64, vocab_pad_multiple=16)
+    return TrainConfig(
+        model=model,
+        shape=ShapeConfig("t", 16, 2 * (workers + backups), "train"),
+        aggregation=AggregationConfig(strategy=strategy, num_workers=workers,
+                                      backup_workers=backups),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.05,
+                                  scale_lr_with_workers=False, ema_decay=0.0),
+        checkpoint=CheckpointConfig(directory=str(tmp_path), every_steps=0),
+        execution=execution or ExecutionConfig(),
+        total_steps=steps, log_every=2, chunk_size=chunk_size)
+
+
+@pytest.fixture
+def plugin_registry():
+    """Register test-local plugins; always unregister afterwards."""
+    added = []
+
+    def add(name, builder):
+        registry.register(name)(builder)
+        added.append(name)
+
+    yield add
+    for name in added:
+        registry._BUILDERS.pop(name, None)
+
+
+def test_mask_plugin_without_spmd_support_falls_back(tmp_path,
+                                                     plugin_registry):
+    """A mask plugin with spmd_supported=False under backend='spmd' runs
+    on the simulated backend (with a warning) instead of erroring — the
+    requested mesh (64 devices, far more than exist) is never built."""
+    from repro.configs.base import ExecutionConfig
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    class PinnedFullSync(coordination.FullSync):
+        spmd_supported = False
+
+    plugin_registry("pinned_full_sync",
+                    lambda cfg: PinnedFullSync(cfg.total_workers))
+    cfg = _plugin_train_cfg(
+        tmp_path, "pinned_full_sync",
+        execution=ExecutionConfig(backend="spmd", mesh_data=64))
+    with pytest.warns(UserWarning, match="no SPMD support"):
+        tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    assert not tr._spmd
+    assert not registry.supports_spmd(tr.strategy)
+    tr.init_state()
+    res = tr.run(4)
+    assert res.steps == 4
+    assert all(m["selected"] == 4 for m in res.metrics)
+
+
+def test_event_plugin_without_scan_falls_back(tmp_path, plugin_registry):
+    """An event plugin without the plan/scan protocol at chunk_size>1
+    runs the legacy per-arrival path (with a warning) and produces the
+    exact same result as the built-in strategy at chunk_size=1."""
+    import jax
+    import numpy as np
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    class NoScanAsync(coordination.Async):
+        scan_supported = False
+
+    plugin_registry("noscan_async", lambda cfg: NoScanAsync(cfg.num_workers))
+    assert not registry.supports_event_scan(NoScanAsync(3))
+    cfg = _plugin_train_cfg(tmp_path / "plug", "noscan_async", chunk_size=4,
+                            workers=3, backups=0)
+    with pytest.warns(UserWarning, match="plan/scan"):
+        tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    assert not tr._event_fused
+    tr.init_state()
+    res = tr.run(4)
+    # bit-exact with the built-in async on the per-arrival path
+    ref_cfg = _plugin_train_cfg(tmp_path / "ref", "async", chunk_size=1,
+                                workers=3, backups=0)
+    ref = Trainer(ref_cfg, latency=Uniform(1.0, 2.0))
+    ref.init_state()
+    rr = ref.run(4)
+    for a, b in zip(jax.tree_util.tree_leaves(res.params),
+                    jax.tree_util.tree_leaves(rr.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert res.sim_time == rr.sim_time
+
+
+def test_spmd_event_strategy_falls_back_to_event_loop(tmp_path):
+    """backend='spmd' with a built-in event regime warns and runs the
+    normal event loop — supports_spmd is False for every event strategy."""
+    from repro.configs.base import ExecutionConfig
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    cfg = _plugin_train_cfg(
+        tmp_path, "async", workers=3, backups=0,
+        execution=ExecutionConfig(backend="spmd", mesh_data=64))
+    with pytest.warns(UserWarning, match="no SPMD support"):
+        tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    assert not tr._spmd
+    tr.init_state()
+    assert tr.run(3).steps == 3

@@ -1,0 +1,305 @@
+"""SPMD execution engine: mesh parity with the simulated backend.
+
+Mesh semantics run in subprocesses with xla_force_host_platform_device_count
+(the main test process keeps 1 device per the dry-run contract — see
+tests/conftest.py); the engine's degenerate mesh_data=1 case and the pure
+helpers run in process so tier-1 covers the engine on every change.
+"""
+import numpy as np
+import pytest
+
+from test_spmd_subprocess import run_py as _run_py
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 600) -> str:
+    return _run_py(code, devices=devices, timeout=timeout)
+
+
+# ---------------------------------------------------------------------------
+# In-process: pure helpers + the degenerate single-device mesh
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_unflatten_roundtrip():
+    import jax
+    import jax.numpy as jnp
+    from repro.distributed import spmd_engine
+
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(2, 3, 2),
+            "b": {"w": jnp.ones((2, 5), jnp.float32),
+                  "s": jnp.asarray([2.0, 3.0])}}
+    flat, spec = spmd_engine.flatten_stacked(tree)
+    assert flat.shape == (2, 6 + 5 + 1)
+    rec = spmd_engine.unflatten_vector(flat[1], spec)
+    for a, b in zip(jax.tree_util.tree_leaves(rec),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b)[1])
+
+
+def test_layout_validation_errors():
+    from repro.configs.base import ExecutionConfig
+    from repro.distributed import spmd_engine
+
+    with pytest.raises(ValueError, match="divisible by"):
+        spmd_engine.validate_layout(6, 24, 4)         # 6 workers on 4 shards
+    with pytest.raises(ValueError, match="global_batch"):
+        spmd_engine.validate_layout(4, 22, 4)
+    assert spmd_engine.validate_layout(8, 16, 4) == 2
+    # asking for more devices than exist names the XLA_FLAGS escape hatch
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        spmd_engine.build_mesh(ExecutionConfig(backend="spmd", mesh_data=64))
+
+
+def test_unknown_execution_backend_rejected(tmp_path):
+    from repro import configs
+    from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                    ExecutionConfig, ShapeConfig, TrainConfig)
+    from repro.train.loop import Trainer
+
+    cfg = TrainConfig(model=configs.get_smoke_config("qwen3-0.6b"),
+                      shape=ShapeConfig("t", 16, 8, "train"),
+                      aggregation=AggregationConfig(strategy="backup",
+                                                    num_workers=3,
+                                                    backup_workers=1),
+                      checkpoint=CheckpointConfig(directory=str(tmp_path)),
+                      execution=ExecutionConfig(backend="tpu_pod"))
+    with pytest.raises(ValueError, match="unknown execution backend"):
+        Trainer(cfg)
+
+
+def _tiny_model_cfg():
+    from repro import configs
+    from repro.configs.base import replace
+    return replace(configs.get_smoke_config("qwen3-0.6b"), num_layers=1,
+                   d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                   d_ff=64, vocab_size=64, vocab_pad_multiple=16)
+
+
+def _train_cfg(backend, tmp_path, *, strategy="backup", workers=6, backups=2,
+               deadline=0.5, mesh_data=1, mesh_model=1, chunk=1, every=0,
+               use_kernel=True):
+    from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                    ExecutionConfig, OptimizerConfig,
+                                    ShapeConfig, TrainConfig)
+    total = workers + backups
+    return TrainConfig(
+        model=_tiny_model_cfg(),
+        shape=ShapeConfig("t", 16, 2 * total, "train"),
+        aggregation=AggregationConfig(strategy=strategy, num_workers=workers,
+                                      backup_workers=backups,
+                                      deadline_s=deadline),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.05,
+                                  scale_lr_with_workers=False,
+                                  ema_decay=0.99),
+        checkpoint=CheckpointConfig(directory=str(tmp_path), every_steps=every),
+        execution=ExecutionConfig(backend=backend, mesh_data=mesh_data,
+                                  mesh_model=mesh_model,
+                                  use_kernel=use_kernel),
+        seed=0, total_steps=6, log_every=1, chunk_size=chunk)
+
+
+def _assert_close_trees(a, b, rtol=2e-4, atol=2e-5):
+    import jax
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("chunk", [1, 3])
+def test_spmd_single_device_mesh_matches_sim(tmp_path, chunk):
+    """mesh_data=1 runs the full engine (shard_map + kernel reduce + psum)
+    on the real single device — in-process tier-1 coverage of the code
+    path the multi-device subprocess tests exercise at scale."""
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    lat = Uniform(1.0, 2.0)
+    ta = Trainer(_train_cfg("sim", tmp_path / "a", chunk=chunk), latency=lat)
+    ta.init_state()
+    ra = ta.run(6)
+    tb = Trainer(_train_cfg("spmd", tmp_path / "b", chunk=chunk), latency=lat)
+    tb.init_state()
+    rb = tb.run(6)
+    _assert_close_trees(ra.params, rb.params)
+    _assert_close_trees(ra.ema, rb.ema)
+    np.testing.assert_allclose([m["loss"] for m in ra.metrics],
+                               [m["loss"] for m in rb.metrics],
+                               rtol=2e-4, atol=2e-5)
+    assert ra.sim_time == rb.sim_time
+    assert [m["selected"] for m in ra.metrics] == \
+        [m["selected"] for m in rb.metrics]
+
+
+def test_spmd_kernel_and_jnp_reduce_agree(tmp_path):
+    """The Pallas backup_reduce in-shard reduction == the jnp reference."""
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    lat = Uniform(1.0, 2.0)
+    tk = Trainer(_train_cfg("spmd", tmp_path / "k", chunk=2, use_kernel=True),
+                 latency=lat)
+    tk.init_state()
+    rk = tk.run(4)
+    tj = Trainer(_train_cfg("spmd", tmp_path / "j", chunk=2, use_kernel=False),
+                 latency=lat)
+    tj.init_state()
+    rj = tj.run(4)
+    _assert_close_trees(rk.params, rj.params, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: real multi-device meshes (the acceptance parity matrix)
+# ---------------------------------------------------------------------------
+
+# Parity + checkpoint/resume for one mesh, all three mask strategies.
+# The mesh run must match the single-device simulated Trainer's loss and
+# param trajectory (allclose — the engine sums explicit per-worker
+# gradients where the sim backend differentiates one weighted loss), and
+# resume from a checkpoint taken mid-run must land on the same state.
+_PARITY_CODE = r"""
+import numpy as np, jax
+from repro import configs
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                ExecutionConfig, OptimizerConfig, ShapeConfig,
+                                TrainConfig, replace)
+from repro.core.straggler import Uniform
+from repro.train.loop import Trainer
+
+MESH_DATA, MESH_MODEL = __MESH__
+model_cfg = replace(configs.get_smoke_config("qwen3-0.6b"), num_layers=1,
+                    d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                    d_ff=64, vocab_size=64, vocab_pad_multiple=16)
+
+def cfg(backend, strategy, ck, workers, backups, every=0, chunk=3):
+    return TrainConfig(
+        model=model_cfg,
+        shape=ShapeConfig("t", 16, 16, "train"),
+        aggregation=AggregationConfig(strategy=strategy, num_workers=workers,
+                                      backup_workers=backups, deadline_s=0.5),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.05,
+                                  scale_lr_with_workers=False, ema_decay=0.99),
+        checkpoint=CheckpointConfig(directory=ck, every_steps=every),
+        execution=ExecutionConfig(backend=backend, mesh_data=MESH_DATA,
+                                  mesh_model=MESH_MODEL),
+        seed=0, total_steps=8, log_every=1, chunk_size=chunk)
+
+def close(a, b, rtol=2e-4, atol=2e-5):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=rtol,
+                                   atol=atol)
+
+lat = Uniform(1.0, 2.0)
+for strategy, workers, backups in (("full_sync", 8, 0), ("backup", 6, 2),
+                                   ("timeout", 8, 0)):
+    ta = Trainer(cfg("sim", strategy, f"/tmp/spmd_sim_{strategy}", workers,
+                     backups), latency=lat)
+    ta.init_state(); ra = ta.run(8)
+    tb = Trainer(cfg("spmd", strategy, f"/tmp/spmd_mesh_{strategy}", workers,
+                     backups), latency=lat)
+    tb.init_state(); rb = tb.run(8)
+    close(ra.params, rb.params)
+    close(ra.ema, rb.ema)
+    np.testing.assert_allclose([m["loss"] for m in ra.metrics],
+                               [m["loss"] for m in rb.metrics],
+                               rtol=2e-4, atol=2e-5)
+    assert ra.sim_time == rb.sim_time
+    assert [m["selected"] for m in ra.metrics] == \
+        [m["selected"] for m in rb.metrics]
+    print(strategy, "parity OK")
+
+# checkpoint/resume THROUGH a mesh-executed chunk: every_steps=3 with
+# chunk_size=2 puts a forced chunk boundary inside the scan cadence; the
+# resumed mesh trainer must rejoin the uninterrupted sim trajectory.
+ck = "/tmp/spmd_resume"
+t1 = Trainer(cfg("spmd", "backup", ck, 6, 2, every=3, chunk=2), latency=lat)
+t1.init_state(); t1.run(3)                       # checkpoints at step 3
+t2 = Trainer(cfg("spmd", "backup", ck, 6, 2, every=3, chunk=2), latency=lat)
+t2.restore_checkpoint()
+assert t2.step == 3
+r2 = t2.run(5)                                   # -> step 8
+ref = Trainer(cfg("sim", "backup", "/tmp/spmd_resume_ref", 6, 2), latency=lat)
+ref.init_state(); rr = ref.run(8)
+close(rr.params, r2.params)
+close(rr.ema, r2.ema)
+assert rr.sim_time == r2.sim_time
+print("resume-through-chunk parity OK")
+"""
+
+
+def test_spmd_parity_mesh_4x2():
+    out = run_py(_PARITY_CODE.replace("__MESH__", "(4, 2)"))
+    assert "resume-through-chunk parity OK" in out
+
+
+def test_spmd_parity_mesh_8x1():
+    out = run_py(_PARITY_CODE.replace("__MESH__", "(8, 1)"))
+    assert "resume-through-chunk parity OK" in out
+
+
+def test_spmd_rescale_shrinks_worker_axis():
+    """When failures push alive below N, the elastic rescale shrinks the
+    mesh 'data' axis to the largest size the new worker count divides —
+    the run continues instead of crashing in layout validation."""
+    run_py(r"""
+import numpy as np
+from repro import configs
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                ExecutionConfig, OptimizerConfig, ShapeConfig,
+                                TrainConfig, replace)
+from repro.core.straggler import Uniform
+from repro.train.loop import Trainer
+
+model_cfg = replace(configs.get_smoke_config("qwen3-0.6b"), num_layers=1,
+                    d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                    d_ff=64, vocab_size=64, vocab_pad_multiple=16)
+cfg = TrainConfig(
+    model=model_cfg,
+    shape=ShapeConfig("t", 16, 16, "train"),
+    aggregation=AggregationConfig(strategy="full_sync", num_workers=8),
+    optimizer=OptimizerConfig(name="momentum", learning_rate=0.05,
+                              scale_lr_with_workers=False, ema_decay=0.0),
+    checkpoint=CheckpointConfig(directory="/tmp/spmd_rescale", every_steps=0),
+    execution=ExecutionConfig(backend="spmd", mesh_data=8),
+    seed=0, total_steps=6, log_every=1, chunk_size=2)
+tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+tr.init_state()
+res = tr.run(6, kill_worker_at={2: 3})
+assert res.restarts == 1
+# 7 alive -> rounded to 4 (divisor of batch 16); mesh axis follows
+assert tr.cfg.aggregation.total_workers == 4
+assert tr.cfg.execution.mesh_data == 4
+assert res.steps == 6
+assert all(np.isfinite([m["loss"] for m in res.metrics]))
+print("spmd rescale OK")
+""")
+
+
+def test_spmd_cli_smoke():
+    """--execution spmd --mesh-data N end to end through the launcher."""
+    run_py(r"""
+from repro.launch import train as train_cli
+train_cli.main(["--arch", "qwen3-0.6b", "--smoke", "--steps", "4",
+                "--workers", "3", "--backups", "1", "--batch-per-worker", "2",
+                "--seq", "16", "--ckpt", "/tmp/spmd_cli_ck",
+                "--optimizer", "momentum", "--lr", "0.05",
+                "--execution", "spmd", "--mesh-data", "4",
+                "--chunk-size", "2"])
+import os
+assert os.path.exists(os.path.join("/tmp/spmd_cli_ck", "LATEST"))
+print("spmd cli OK")
+""", devices=4)
+
+
+@pytest.mark.parametrize("argv", [
+    ["--strategy", "backup", "--mesh-data", "2"],              # no spmd
+    ["--strategy", "backup", "--mesh-model", "2"],             # no spmd
+    ["--strategy", "async", "--execution", "spmd"],            # event regime
+    ["--strategy", "backup", "--execution", "spmd",
+     "--straggler-backend", "device"],                         # device masks
+    ["--strategy", "backup", "--workers", "3", "--backups", "0",
+     "--execution", "spmd", "--mesh-data", "2"],               # 3 % 2 != 0
+])
+def test_spmd_cli_rejects_mismatched_args(argv):
+    from repro.launch import train as train_cli
+    with pytest.raises(SystemExit):
+        train_cli.main(argv + ["--smoke", "--steps", "1"])
