@@ -1,20 +1,26 @@
 """SPMD execution engine vs the single-device simulated backend.
 
 Measures wall-clock steps/s of the tiny-LM backup-worker rig for
-W in {4, 8} workers and chunk_size in {1, 32}, on both execution
-backends: 'sim' (one device, workers as loop index) and 'spmd' (the
-repro.distributed.spmd_engine — workers over a real mesh 'data' axis
-with mesh_data = W, masked aggregation as an in-shard backup_reduce +
-psum collective; docs/spmd.md).
+W in {4, 8} workers, chunk_size in {1, 32}, and mesh_model in {1, 2},
+on both execution backends: 'sim' (one device, workers as loop index)
+and 'spmd' (the repro.distributed.spmd_engine — workers over a real
+mesh 'data' axis with mesh_data = W, masked aggregation as an in-shard
+backup_reduce + psum collective; docs/spmd.md). mesh_model = 2
+additionally shards params / optimizer state / EMA over the mesh
+'model' axis and computes each worker's gradient tensor-parallel
+(explicit psums at the contracted dims) — the TP overhead relative to
+the replicated mesh_model = 1 engine is the new quantity this benchmark
+tracks.
 
-The process forces 8 host platform devices, so on CPU hosts every
-"device" is a slice of the same machine and the ratio reported here
-measures the ENGINE'S overhead (shard_map partitioning, the collective,
-the interpret-mode Pallas reduce), not a speedup — the win appears on
-real accelerators where the per-worker gradients genuinely parallelize.
-Tracking the overhead ratio per commit is the point: it is the price of
-mesh execution at a given (W, K), and regressions here are regressions
-on real hardware too.
+The process forces 16 host platform devices (the (W=8, M=2) cell), so
+on CPU hosts every "device" is a slice of the same machine and the
+ratios reported here measure the ENGINE'S overhead (shard_map
+partitioning, the collectives, the interpret-mode Pallas reduce), not a
+speedup — the win appears on real accelerators where the per-worker
+gradients (and, under TP, each gradient's matmuls) genuinely
+parallelize. Tracking the overhead ratio per commit is the point: it is
+the price of mesh execution at a given (W, K, M), and regressions here
+are regressions on real hardware too.
 
 Writes experiments/bench/BENCH_spmd.json and mirrors the headline
 summary to the repo-root BENCH_spmd.json.
@@ -23,11 +29,19 @@ from __future__ import annotations
 
 import os
 
-# must precede ANY jax import in this process (common.py imports jax)
+# must precede ANY jax import in this process (common.py imports jax).
+# The (W=8, mesh_model=2) cell needs 16 devices: raise any pre-existing
+# forced count below that (e.g. the 8 every doc example exports) instead
+# of inheriting it and crashing mid-run at the m=2 cells.
+import re as _re
+
 _FORCED = "--xla_force_host_platform_device_count"
-if _FORCED not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                               + f" {_FORCED}=8").strip()
+_flags = os.environ.get("XLA_FLAGS", "")
+_m = _re.search(_re.escape(_FORCED) + r"=(\d+)", _flags)
+if _m is None:
+    os.environ["XLA_FLAGS"] = (_flags + f" {_FORCED}=16").strip()
+elif int(_m.group(1)) < 16:
+    os.environ["XLA_FLAGS"] = _flags.replace(_m.group(0), f"{_FORCED}=16")
 
 import argparse
 import subprocess
@@ -41,9 +55,11 @@ from common import write_bench
 
 WORKER_COUNTS = (4, 8)
 CHUNK_SIZES = (1, 32)
+MESH_MODELS = (1, 2)
 
 
-def build_trainer(backend: str, workers: int, chunk_size: int):
+def build_trainer(backend: str, workers: int, chunk_size: int,
+                  mesh_model: int = 1):
     from repro import configs
     from repro.configs.base import (AggregationConfig, CheckpointConfig,
                                     ExecutionConfig, OptimizerConfig,
@@ -52,7 +68,8 @@ def build_trainer(backend: str, workers: int, chunk_size: int):
     from repro.train.loop import Trainer
 
     # tiny model, small shape: the measurement isolates the execution
-    # machinery (dispatch, partitioning, collectives), not model FLOPs
+    # machinery (dispatch, partitioning, collectives), not model FLOPs.
+    # Dims are chosen divisible by mesh_model=2 so the TP cells shard.
     model = replace(configs.get_smoke_config("qwen3-0.6b"), num_layers=1,
                     d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
                     d_ff=64, vocab_size=64, vocab_pad_multiple=16)
@@ -66,7 +83,8 @@ def build_trainer(backend: str, workers: int, chunk_size: int):
                                   scale_lr_with_workers=False,
                                   ema_decay=0.999),
         checkpoint=CheckpointConfig(every_steps=0),
-        execution=ExecutionConfig(backend=backend, mesh_data=workers),
+        execution=ExecutionConfig(backend=backend, mesh_data=workers,
+                                  mesh_model=mesh_model),
         log_every=1, chunk_size=chunk_size)
     tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
     tr.init_state()
@@ -78,8 +96,8 @@ def measure_all(specs, steps: int, reps: int = 3):
     so CPU thermal drift doesn't systematically penalize whichever
     config is measured last."""
     trainers = []
-    for backend, workers, chunk in specs:
-        tr = build_trainer(backend, workers, chunk)
+    for backend, workers, chunk, mesh_model in specs:
+        tr = build_trainer(backend, workers, chunk, mesh_model)
         tr.run(max(chunk, 8))                      # compile + warm caches
         trainers.append(tr)
     best = [None] * len(specs)
@@ -89,9 +107,9 @@ def measure_all(specs, steps: int, reps: int = 3):
             tr.run(steps)
             dt = time.perf_counter() - t0
             best[i] = dt if best[i] is None or dt < best[i] else best[i]
-    return [{"backend": b, "workers": w, "chunk_size": c, "steps": steps,
-             "wall_s": wall, "steps_per_s": steps / wall}
-            for (b, w, c), wall in zip(specs, best)]
+    return [{"backend": b, "workers": w, "chunk_size": c, "mesh_model": m,
+             "steps": steps, "wall_s": wall, "steps_per_s": steps / wall}
+            for (b, w, c, m), wall in zip(specs, best)]
 
 
 def main(argv=None) -> dict:
@@ -101,24 +119,29 @@ def main(argv=None) -> dict:
     args = ap.parse_args(argv)
 
     steps = 32 if args.quick else 96
-    specs = [(b, w, c) for w in WORKER_COUNTS for c in CHUNK_SIZES
-             for b in ("sim", "spmd")]
+    specs = [("sim", w, c, 1) for w in WORKER_COUNTS for c in CHUNK_SIZES]
+    specs += [("spmd", w, c, m) for w in WORKER_COUNTS for c in CHUNK_SIZES
+              for m in MESH_MODELS]
     results = measure_all(specs, steps)
 
-    def rate(backend, workers, chunk):
+    def rate(backend, workers, chunk, mesh_model):
         return next(r["steps_per_s"] for r in results
                     if r["backend"] == backend and r["workers"] == workers
-                    and r["chunk_size"] == chunk)
+                    and r["chunk_size"] == chunk
+                    and r["mesh_model"] == mesh_model)
 
     # spmd/sim per cell: < 1 on forced CPU devices (engine overhead),
-    # the quantity to keep from regressing
-    ratios = {f"spmd_vs_sim_w{w}_chunk{c}":
-              rate("spmd", w, c) / rate("sim", w, c)
-              for w in WORKER_COUNTS for c in CHUNK_SIZES}
+    # the quantity to keep from regressing; the m2 cells price the
+    # tensor-parallel collectives on top of the worker-mesh machinery
+    ratios = {f"spmd_vs_sim_w{w}_chunk{c}_m{m}":
+              rate("spmd", w, c, m) / rate("sim", w, c, 1)
+              for w in WORKER_COUNTS for c in CHUNK_SIZES
+              for m in MESH_MODELS}
     payload = {
         "bench": "spmd",
         "model": "qwen3-0.6b tiny (1L, d32)",
-        "devices_forced": 8,
+        "devices_forced": 16,
+        "mesh_models": list(MESH_MODELS),
         "steps": steps,
         "results": results,
         **ratios,
@@ -127,7 +150,8 @@ def main(argv=None) -> dict:
                        mirror={"bench": "spmd", **ratios})
     for r in results:
         print(f"backend={r['backend']:<5} W={r['workers']} "
-              f"chunk={r['chunk_size']:>3} {r['steps_per_s']:8.1f} steps/s")
+              f"chunk={r['chunk_size']:>3} m={r['mesh_model']} "
+              f"{r['steps_per_s']:8.1f} steps/s")
     for k, v in ratios.items():
         print(f"{k}: {v:.3f}")
     print(f"-> {path} (+ root BENCH_spmd.json)")
@@ -151,7 +175,8 @@ def run(quick: bool = True):
     with open(os.path.join(os.path.dirname(__file__), "..", "experiments",
                            "bench", "BENCH_spmd.json")) as f:
         payload = json.load(f)
-    rows = [(f"spmd.{r['backend']}_w{r['workers']}_chunk{r['chunk_size']}",
+    rows = [(f"spmd.{r['backend']}_w{r['workers']}_chunk{r['chunk_size']}"
+             f"_m{r['mesh_model']}",
              1e6 / r["steps_per_s"], f"{r['steps_per_s']:.1f}steps/s")
             for r in payload["results"]]
     rows += [(f"spmd.{k}", 0.0, f"{v:.3f}x")

@@ -288,14 +288,21 @@ class ExecutionConfig:
              shard_map, per-worker gradients live on their shard, and
              masked aggregation is a collective (in-shard backup_reduce
              + psum) — no stacked [W, ...] gradient tree ever exists on
-             one device. Strategies advertise support via
-             ``registry.supports_spmd``; unsupported strategies fall
+             one device. With mesh_model > 1 params, optimizer state and
+             EMA are additionally SHARDED over the mesh 'model' axis and
+             each worker's gradient is computed tensor-parallel inside
+             its 'data' shard (explicit psums over 'model' at the
+             contracted dims — sharding.tp_plan decides which groups
+             shard; indivisible configs fall back to a carried,
+             replicated axis with a warning). Strategies advertise
+             support via ``registry.supports_spmd`` (TP opt-out:
+             ``spmd_tp_supported = False``); unsupported strategies fall
              back to 'sim' with a warning.
     """
 
     backend: str = "sim"              # 'sim' | 'spmd'
     mesh_data: int = 1                # 'data' axis size (devices); W % it == 0
-    mesh_model: int = 1               # 'model' axis size (reserved for TP)
+    mesh_model: int = 1               # 'model' (tensor-parallel) axis size
     # in-shard reduce: the kernels/backup_reduce Pallas kernel (True) or
     # the jnp reference reduction (False)
     use_kernel: bool = True

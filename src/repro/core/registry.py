@@ -40,7 +40,8 @@ def available() -> List[str]:
     return sorted(_BUILDERS)
 
 
-def supports_spmd(strategy: coordination.CoordinationStrategy) -> bool:
+def supports_spmd(strategy: coordination.CoordinationStrategy,
+                  exec_cfg=None) -> bool:
     """True when the strategy can run on the SPMD execution engine
     (``repro.distributed.spmd_engine`` — workers over a real mesh axis).
     Any mask strategy qualifies by default: the engine consumes the same
@@ -48,11 +49,22 @@ def supports_spmd(strategy: coordination.CoordinationStrategy) -> bool:
     ``select_batch`` are all it needs. Plugins that bake single-device
     assumptions into their selection can opt out with a class attribute
     ``spmd_supported = False``; event strategies (host-scheduled
-    per-arrival control flow) are never SPMD-executable. The Trainer
-    falls back to the simulated backend (with a warning) when this
-    returns False — it never errors."""
-    return (getattr(strategy, "kind", "") == "mask"
-            and bool(getattr(strategy, "spmd_supported", True)))
+    per-arrival control flow) are never SPMD-executable.
+
+    When an ``ExecutionConfig`` with ``mesh_model > 1`` is passed, the
+    strategy must additionally allow tensor-parallel execution (params /
+    opt state / EMA sharded over the mesh 'model' axis — docs/spmd.md).
+    Every built-in mask strategy does: masks are per-worker *data*, so
+    the parameter layout is invisible to selection. Plugins whose
+    selection inspects parameter values can opt out of just the sharded
+    path with ``spmd_tp_supported = False`` while keeping plain
+    (replicated) SPMD support. The Trainer falls back to the simulated
+    backend (with a warning) when this returns False — it never errors."""
+    ok = (getattr(strategy, "kind", "") == "mask"
+          and bool(getattr(strategy, "spmd_supported", True)))
+    if ok and exec_cfg is not None and getattr(exec_cfg, "mesh_model", 1) > 1:
+        ok = bool(getattr(strategy, "spmd_tp_supported", True))
+    return ok
 
 
 def supports_event_scan(strategy: coordination.CoordinationStrategy) -> bool:

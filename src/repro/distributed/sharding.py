@@ -13,6 +13,7 @@ Conventions (single pod mesh ('data','model'); multi-pod adds 'pod'):
 """
 from __future__ import annotations
 
+import dataclasses
 import re
 from typing import Any, Optional, Tuple
 
@@ -215,6 +216,154 @@ def batch_shardings(mesh: Mesh, batch_tree: Any, *,
         return NamedSharding(mesh, P())
 
     return jax.tree_util.tree_map(leaf, batch_tree)
+
+
+# ---------------------------------------------------------------------------
+# Manual tensor parallelism for the SPMD engine (repro.distributed.tp)
+# ---------------------------------------------------------------------------
+
+# optimizer-state trees prefix their leaves (ms/mom/m/v/acc); strip the
+# prefix so state leaves inherit the matching parameter's spec
+_OPT_PREFIX = re.compile(r"^(ms|mom|m|v|acc)/")
+
+
+@dataclasses.dataclass(frozen=True)
+class TPPlan:
+    """Which parameter groups shard over the engine's manual 'model' axis.
+
+    Unlike the per-leaf GSPMD rules above (where a non-divisible leaf can
+    be replicated independently), manual TP must be **group-consistent**:
+    the model runs with a locally-reshaped config, so either every leaf
+    of a group shards or none does (wq sharded with wk replicated would
+    change ``q_per_kv`` on the shard). :func:`tp_plan` encodes those
+    rules; the booleans mirror :class:`repro.distributed.tp.TPContext`.
+    """
+
+    size: int = 1
+    attn: bool = False                # wq/wk/wv out-dim, wo in-dim (heads)
+    ffn: bool = False                 # w_up/w_gate out-dim, w_down in-dim
+    vocab: bool = False               # embed rows, lm_head/head columns
+
+    @property
+    def any(self) -> bool:
+        return self.attn or self.ffn or self.vocab
+
+
+def tp_plan(model_cfg, model_size: int) -> TPPlan:
+    """Group-consistency + divisibility rules for manual TP.
+
+    * only the TransformerLM families carry the f/g psum hooks
+      (``repro.models.transformer.block_apply``); other families run with
+      the model axis replicated;
+    * the attention group needs BOTH head counts divisible (contiguous
+      q-head slices must align with their kv groups) and no biases (the
+      row-parallel ``wo`` bias would be added ``size`` times before the
+      psum);
+    * the ffn group needs the dense-segment hidden width divisible and no
+      biases (same row-parallel ``w_down`` argument);
+    * the vocab group needs the padded vocab divisible (embedding rows /
+      head columns are sliced contiguously);
+    * MoE expert / router / ssm / rwkv leaves never shard here — the
+      engine replicates them (their forward has no manual psum points).
+    """
+    m = model_size
+    if m <= 1 or model_cfg is None or \
+            model_cfg.family not in ("dense", "moe", "vlm"):
+        return TPPlan(max(m, 1))
+    attn = (model_cfg.attention_kind == "gqa" and not model_cfg.use_bias
+            and model_cfg.num_heads % m == 0
+            and model_cfg.num_kv_heads % m == 0)
+    d_ff = (model_cfg.moe.dense_d_ff
+            if (model_cfg.moe.enabled and model_cfg.moe.dense_d_ff)
+            else model_cfg.d_ff)
+    ffn = (not model_cfg.use_bias) and d_ff % m == 0 and d_ff >= m
+    vocab = model_cfg.padded_vocab % m == 0 and model_cfg.padded_vocab >= m
+    return TPPlan(m, attn, ffn, vocab)
+
+
+def tp_local_model_cfg(model_cfg, plan: TPPlan):
+    """The per-shard model config: head counts / hidden width divided by
+    the axis size for the groups that shard. ``head_dim`` is pinned first
+    so the derived ``resolved_head_dim`` cannot drift when ``num_heads``
+    shrinks; vocab fields stay GLOBAL — the vocab group is handled by
+    ``tp.sharded_embed`` / ``tp.sharded_cross_entropy``, which read the
+    local slice size off the parameter itself."""
+    if not plan.any:
+        return model_cfg
+    kw = {}
+    if plan.attn:
+        kw.update(head_dim=model_cfg.resolved_head_dim,
+                  num_heads=model_cfg.num_heads // plan.size,
+                  num_kv_heads=model_cfg.num_kv_heads // plan.size)
+    if plan.ffn:
+        kw["d_ff"] = model_cfg.d_ff // plan.size
+        if model_cfg.moe.enabled and model_cfg.moe.dense_d_ff:
+            kw["moe"] = dataclasses.replace(
+                model_cfg.moe,
+                dense_d_ff=model_cfg.moe.dense_d_ff // plan.size)
+    return dataclasses.replace(model_cfg, **kw)
+
+
+def tp_param_spec(path: str, shape: Tuple[int, ...], plan: TPPlan) -> P:
+    """PartitionSpec of one leaf under the engine's manual TP plan.
+
+    Narrower than :func:`param_spec` by design: only the three
+    group-consistent TransformerLM groups shard; scalars, 1-D leaves
+    (biases, norm scales) and every unmatched path are replicated. The
+    leading layer-stack dimension of scanned segments is never sharded.
+    """
+    nd = len(shape)
+    none = (None,) * nd
+
+    def at(axis_idx: int) -> P:
+        if not _div(shape[axis_idx], plan.size):
+            return P(*none)
+        spec = list(none)
+        spec[axis_idx] = "model"
+        return P(*spec)
+
+    if plan.vocab and nd >= 2:
+        if path.endswith("embed/embedding"):
+            return at(0)
+        if re.search(r"(lm_head|head)/w$", path):
+            return at(nd - 1)
+    if plan.attn and nd >= 2:
+        if re.search(r"attn/(wq|wk|wv)/w$", path):
+            return at(nd - 1)
+        if re.search(r"attn/wo/w$", path):
+            return at(nd - 2)
+    if plan.ffn and nd >= 2:
+        if re.search(r"mlp/(w_up|w_gate)/w$", path):
+            return at(nd - 1)
+        if re.search(r"mlp/w_down/w$", path):
+            return at(nd - 2)
+    return P(*none)
+
+
+def tp_param_specs(plan: TPPlan, shape_tree: Any) -> Any:
+    """Pytree of PartitionSpecs for a parameter (shape) tree."""
+
+    def leaf(path, x):
+        return tp_param_spec(_path_str(path), tuple(x.shape), plan)
+
+    return jax.tree_util.tree_map_with_path(leaf, shape_tree)
+
+
+def tp_state_specs(plan: TPPlan, state_shape_tree: Any) -> Any:
+    """Specs for optimizer-state / EMA trees.
+
+    The tree STRUCTURE may differ from params (rmsprop wraps the params
+    tree under ``ms``/``mom``, adam under ``m``/``v``, sgd has no state
+    at all); leaves are matched to their parameter by path suffix after
+    stripping the optimizer prefix, so any params-shaped subtree inherits
+    the parameter specs leaf-for-leaf.
+    """
+
+    def leaf(path, x):
+        pstr = _OPT_PREFIX.sub("", _path_str(path))
+        return tp_param_spec(pstr, tuple(x.shape), plan)
+
+    return jax.tree_util.tree_map_with_path(leaf, state_shape_tree)
 
 
 def cache_shardings(cfg, mesh: Mesh, cache_tree: Any) -> Any:

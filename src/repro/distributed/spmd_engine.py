@@ -29,17 +29,37 @@ to the engine), so the mesh run is comparable step-for-step with the
 single-device simulated run: parity is allclose, not bit-exact, because
 the sim backend differentiates the mask-weighted global loss while the
 engine sums explicit per-worker gradients (the same value in different
-floating-point association). The ``'model'`` mesh axis is carried
-(replicated) so tensor-parallel sharding can land inside the worker
-gradient later without changing the engine's collective structure.
+floating-point association).
+
+**Tensor parallelism over the ``'model'`` axis**: with ``mesh_model > 1``
+the engine shards model parameters, optimizer state and EMA over the
+mesh's second axis (PartitionSpecs from ``distributed.sharding.tp_plan``
+/ ``tp_param_specs`` / ``tp_state_specs``), and each worker's gradient
+is computed **tensor-parallel inside its 'data' shard**: the model runs
+with a per-shard config (heads / hidden width divided by ``mesh_model``)
+and the Megatron f/g collectives of ``repro.distributed.tp`` supply the
+explicit psums over ``'model'`` at the contracted dims (attention out,
+FFN down-projection, vocab-sharded embedding/cross-entropy). The masked
+aggregation then runs ON the sharded trees: each ``(data, model)`` shard
+kernel-reduces its local ``[W_local, P_local]`` flatten and one psum
+over ``'data'`` completes Alg. 4 line 7 — params, opt state, gradients
+and EMA never leave their shard during a step (gather/scatter happens
+only at checkpoint save/restore, which keeps checkpoints interchangeable
+with replicated and simulated runs). Groups that cannot shard (config
+indivisible by ``mesh_model``, biased row-parallel layers, non-
+transformer families) stay replicated per the plan; when nothing shards
+the axis is carried exactly as in the pre-TP engine.
 
 Chunking composes: ``build_spmd_chunk_step`` wraps the step in the same
-``lax.scan`` as the single-device chunked loop, so one dispatch covers K
-steps across the whole mesh. See docs/spmd.md.
+``lax.scan`` as the single-device chunked loop — the scan carries the
+*sharded* param/opt/EMA trees, so one dispatch covers K steps across the
+whole mesh. See docs/spmd.md.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -49,11 +69,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import ema as ema_lib
 from repro.core import sync_backup
+from repro.distributed import sharding as sharding_lib
+from repro.distributed import tp
 from repro.kernels.backup_reduce import backup_reduce
 from repro.launch.mesh import make_host_mesh
 from repro.optim import optimizers as opt_lib
 
 WORKER_AXIS = "data"
+MODEL_AXIS = "model"
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -173,11 +196,34 @@ def make_worker_loss(model) -> Callable:
 # ---------------------------------------------------------------------------
 
 
+def resolve_tp(model_cfg, mesh: Mesh) -> sharding_lib.TPPlan:
+    """The TP plan for a mesh ('model' axis size) + model config pair.
+
+    Warns when ``mesh_model > 1`` was requested but no parameter group can
+    shard (indivisible config, biased layers, non-transformer family, or
+    a config-less model override) — the axis is then carried (replicated),
+    the pre-TP engine semantics."""
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    mesh_model = names.get(MODEL_AXIS, 1)
+    plan = sharding_lib.tp_plan(model_cfg, mesh_model)
+    if mesh_model > 1 and not plan.any:
+        warnings.warn(
+            f"mesh_model={mesh_model} but no parameter group is shardable "
+            f"for this model (see sharding.tp_plan: divisibility, biases, "
+            f"family); the '{MODEL_AXIS}' axis will be carried (replicated)",
+            stacklevel=2)
+    return plan
+
+
+def _params_template(model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
 def build_spmd_step(model, optimizer: opt_lib.Optimizer, mesh: Mesh, *,
                     num_workers: int, n_aggregate: int,
                     ema_decay: float = 0.0, clip_norm: float = 0.0,
                     use_kernel: bool = True, interpret: Optional[bool] = None,
-                    block: int = 4096) -> Callable:
+                    block: int = 4096, model_cfg=None) -> Callable:
     """Mesh twin of ``train_step.build_train_step`` — same signature:
 
         step(params, opt_state, ema, step, batch, mask)
@@ -187,9 +233,19 @@ def build_spmd_step(model, optimizer: opt_lib.Optimizer, mesh: Mesh, *,
     sharding axis 0 over ``'data'`` gives each shard exactly its local
     workers' rows; ``mask`` is the host-planned [W] selection, sharded to
     [W_local] per shard. Aggregation is in-shard masked reduce (Pallas
-    ``backup_reduce`` over the local [W_local, P] stack, or the jnp
-    reference) + one ``psum`` over ``'data'``; optimizer/EMA run on the
-    replicated result outside the shard_map.
+    ``backup_reduce`` over the local [W_local, P_local] stack, or the jnp
+    reference) + one ``psum`` over ``'data'``; optimizer/EMA run outside
+    the shard_map.
+
+    With ``model_cfg`` given and a non-trivial TP plan (mesh 'model' axis
+    > 1, shardable groups), params/opt/EMA enter SHARDED over 'model':
+    the shard_map body sees local parameter slices, the per-worker loss
+    runs the per-shard model (heads / d_ff divided) under the
+    ``repro.distributed.tp`` context that inserts the f/g psums, and the
+    aggregated gradient leaves the shard_map still sharded — the
+    optimizer and EMA then apply shard-wise under GSPMD (elementwise ops
+    preserve the sharding), so no resharding round-trip exists anywhere
+    in the step.
     """
     names = dict(zip(mesh.axis_names, mesh.devices.shape))
     mesh_data = names[WORKER_AXIS]
@@ -199,10 +255,21 @@ def build_spmd_step(model, optimizer: opt_lib.Optimizer, mesh: Mesh, *,
             f"'{WORKER_AXIS}' axis size ({mesh_data})")
     w_local = num_workers // mesh_data
     interp = _auto_interpret(interpret)
-    worker_loss = make_worker_loss(model)
+    plan = resolve_tp(model_cfg, mesh)
+    if plan.any:
+        from repro.models import get_model
+        local_model = get_model(sharding_lib.tp_local_model_cfg(model_cfg, plan))
+        worker_loss = make_worker_loss(local_model)
+        param_specs = sharding_lib.tp_param_specs(plan, _params_template(model))
+        tp_ctx = tp.TPContext(MODEL_AXIS, plan.attn, plan.ffn, plan.vocab)
+    else:
+        worker_loss = make_worker_loss(model)
+        param_specs = P()                       # replicated (pytree prefix)
+        tp_ctx = None
 
     def shard_grads(batch, mask, params):
         # batch: local rows [b_local, ...]; mask: [W_local]; params: full
+        # when replicated, the local 'model'-axis slices under a TP plan
         def reshape(x):
             return x.reshape((w_local, x.shape[0] // w_local) + x.shape[1:])
 
@@ -214,33 +281,41 @@ def build_spmd_step(model, optimizer: opt_lib.Optimizer, mesh: Mesh, *,
             return g, mean_loss, aux
 
         # sequential over local workers: one worker's activations at a
-        # time — the per-machine memory footprint of the paper's setup
-        grads, losses, auxes = jax.lax.map(one_worker, shards)
+        # time — the per-machine memory footprint of the paper's setup.
+        # The tp context is entered here (inside the traced body) so the
+        # f/g psum hooks fire exactly for engine-built computations.
+        with tp.tensor_parallel(tp_ctx) if tp_ctx else contextlib.nullcontext():
+            grads, losses, auxes = jax.lax.map(one_worker, shards)
         mf = mask.astype(jnp.float32)
         if use_kernel:
-            flat, spec = flatten_stacked(grads)         # [W_local, P] f32
+            flat, spec = flatten_stacked(grads)     # [W_local, P_local] f32
             red = backup_reduce(flat, mask, n_aggregate, block=block,
-                                interpret=interp)       # [P] local sum / N
+                                interpret=interp)   # [P_local] local sum / N
             agg = unflatten_vector(jax.lax.psum(red, WORKER_AXIS), spec)
         else:
             agg = sync_backup.aggregate_masked(grads, mask, n_aggregate)
-            agg = jax.lax.psum(agg, WORKER_AXIS)
+            agg = jax.tree_util.tree_map(
+                lambda g: jax.lax.psum(g, WORKER_AXIS), agg)
         # masked mean of per-worker losses, matching the sim backend's
-        # monitoring metric: sel = (1/N) sum_w mask_w * mean_loss_w
+        # monitoring metric: sel = (1/N) sum_w mask_w * mean_loss_w.
+        # Losses are replicated over 'model' (the CE ends in psums), so
+        # only the 'data' reduction is collective.
         sel = jax.lax.psum(jnp.sum(losses * mf), WORKER_AXIS) / n_aggregate
         aux = jax.lax.psum(jnp.sum(auxes), WORKER_AXIS) / num_workers
         return agg, sel, aux
 
     mapped = _shard_map(
         shard_grads, mesh,
-        in_specs=(P(WORKER_AXIS), P(WORKER_AXIS), P()),
-        out_specs=(P(), P(), P()))
+        in_specs=(P(WORKER_AXIS), P(WORKER_AXIS), param_specs),
+        out_specs=(param_specs, P(), P()))
 
     def step_fn(params, opt_state, ema_state, step, batch, mask):
         grads, sel, aux = mapped(batch, mask, params)
         frac = jnp.sum(mask.astype(jnp.float32)) / n_aggregate
         metrics = {"loss": sel / jnp.maximum(frac, 1e-6), "aux_loss": aux}
         if clip_norm > 0:
+            # global_norm sums over all leaves; on sharded trees GSPMD
+            # lowers the per-leaf reductions to one small all-reduce
             grads, gnorm = opt_lib.clip_by_global_norm(grads, clip_norm)
             metrics["grad_norm"] = gnorm
         new_params, new_opt, stats = optimizer.apply(params, grads,
@@ -289,22 +364,71 @@ def _replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def state_shardings(model, optimizer, mesh: Mesh, *, ema_decay: float = 0.0,
+                    model_cfg=None) -> Tuple[Any, Any, Any]:
+    """(params, opt_state, ema) NamedSharding trees for the engine's jit.
+
+    Replicated trees without a TP plan (the pre-TP engine contract);
+    under a plan, params shard per ``sharding.tp_param_specs`` and the
+    optimizer/EMA state — whatever its tree structure — inherits the
+    matching parameter's spec by path suffix (``sharding.tp_state_specs``).
+    (The plan/templates are also derived inside ``build_spmd_step``; both
+    are cheap eval_shape/spec walks that run once per Trainer build.)
+    """
+    plan = sharding_lib.tp_plan(
+        model_cfg,
+        dict(zip(mesh.axis_names, mesh.devices.shape)).get(MODEL_AXIS, 1))
+    rep = _replicated(mesh)
+    if not plan.any:
+        return rep, rep, rep
+    params_t = _params_template(model)
+    opt_t = jax.eval_shape(optimizer.init, params_t)
+
+    def named(spec_tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    psh = named(sharding_lib.tp_param_specs(plan, params_t))
+    osh = named(sharding_lib.tp_state_specs(plan, opt_t))
+    if ema_decay > 0:
+        ema_t = jax.eval_shape(ema_lib.init, params_t)
+        esh = named(sharding_lib.tp_state_specs(plan, ema_t))
+    else:
+        esh = rep                               # ema arg is None
+    return psh, osh, esh
+
+
 def make_train_step(model, optimizer, mesh: Mesh, **step_kwargs) -> Callable:
     """Jitted per-step engine, drop-in for the Trainer's ``train_step``:
-    params/opt/ema/step/mask replicated, batch rows sharded over 'data'."""
+    step/mask replicated, batch rows sharded over 'data', and params/
+    opt/ema replicated — or sharded over 'model' under a TP plan. The
+    state out_shardings are pinned to the in_shardings, so the sharded
+    carry round-trips the Trainer loop without resharding."""
+    psh, osh, esh = state_shardings(
+        model, optimizer, mesh,
+        ema_decay=step_kwargs.get("ema_decay", 0.0),
+        model_cfg=step_kwargs.get("model_cfg"))
     rep = _replicated(mesh)
     bsh = NamedSharding(mesh, P(WORKER_AXIS))
     return jax.jit(build_spmd_step(model, optimizer, mesh, **step_kwargs),
-                   in_shardings=(rep, rep, rep, rep, bsh, rep),
+                   in_shardings=(psh, osh, esh, rep, bsh, rep),
+                   out_shardings=(psh, osh, esh, rep),
                    donate_argnums=(0, 1, 2))
 
 
 def make_chunk_step(model, optimizer, mesh: Mesh, **step_kwargs) -> Callable:
     """Jitted K-step engine, drop-in for the Trainer's ``chunk_step``:
-    stacked batches [K, B, ...] shard axis 1 (the batch rows) over 'data'."""
+    stacked batches [K, B, ...] shard axis 1 (the batch rows) over 'data';
+    the scan carries the (possibly 'model'-sharded) state trees."""
+    psh, osh, esh = state_shardings(
+        model, optimizer, mesh,
+        ema_decay=step_kwargs.get("ema_decay", 0.0),
+        model_cfg=step_kwargs.get("model_cfg"))
     rep = _replicated(mesh)
     bsh = NamedSharding(mesh, P(None, WORKER_AXIS))
     return jax.jit(
         build_spmd_chunk_step(model, optimizer, mesh, **step_kwargs),
-        in_shardings=(rep, rep, rep, rep, bsh, rep),
+        in_shardings=(psh, osh, esh, rep, bsh, rep),
+        out_shardings=(psh, osh, esh, rep),
         donate_argnums=(0, 1, 2))

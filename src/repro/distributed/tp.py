@@ -1,0 +1,210 @@
+"""Manual tensor parallelism: the Megatron f/g collectives + ambient plan.
+
+The SPMD execution engine (``repro.distributed.spmd_engine``) runs the
+model *inside* a fully-manual ``shard_map`` over the ``('data','model')``
+mesh, so GSPMD never sees the model axis — every cross-shard reduction
+must be written explicitly. This module supplies the two collective
+primitives and the trace-time context that tells model code which
+parameter groups are actually sharded.
+
+The discipline (Megatron-LM's f/g operators, Shoeybi et al. 2019):
+
+* ``psum_fwd`` — psum on the forward pass, **identity** on the backward
+  pass. Placed after a row-parallel matmul (``wo``, ``w_down``, the
+  vocab-sharded embedding lookup, the cross-entropy partial sums), where
+  each shard holds a partial sum and the *cotangent* of the summed
+  result is replicated.
+* ``psum_bwd`` — identity on the forward pass, **psum** on the backward
+  pass. Placed on a replicated activation entering a column-parallel
+  matmul (``wq/wk/wv``, ``w_up/w_gate``, the LM head), where the forward
+  value is already replicated but each shard only produces its local
+  slice of the cotangent.
+
+Together they maintain the invariant that *the cotangent of every
+replicated activation is fully assembled on every shard*: gradients of
+sharded leaves come out exact-and-local, gradients of replicated leaves
+(norm scales, biases) come out exact-and-replicated — no post-hoc
+correction psums, no double counting. (A plain ``lax.psum`` cannot be
+used: under ``shard_map(check_rep=False)`` its transpose is ``psum``,
+which over-counts replicated cotangents by the axis size.)
+
+Model code opts in through three hooks — all identity unless a
+:class:`TPContext` is ambient *at trace time* (the engine enters it
+inside the traced step, so only engine-built computations see it):
+
+    ``col_in(x, group)``   -> psum_bwd when ``group`` is sharded
+    ``row_out(x, group)``  -> psum_fwd when ``group`` is sharded
+    ``sharded_embed`` / ``sharded_cross_entropy``  (vocab group)
+
+Groups are ``'attn'`` (head-sharded projections), ``'ffn'`` (hidden-dim
+sharded MLP), ``'vocab'`` (embedding/LM-head rows). Which groups shard —
+and the matching PartitionSpecs — is decided by
+``repro.distributed.sharding.tp_plan`` (divisibility + group-consistency
+rules).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# f/g collectives
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def psum_fwd(x, axis: str):
+    """psum on forward, identity on backward (Megatron's ``f`` merge)."""
+    return jax.lax.psum(x, axis)
+
+
+def _psum_fwd_fwd(x, axis):
+    return jax.lax.psum(x, axis), None
+
+
+def _psum_fwd_bwd(axis, _, ct):
+    return (ct,)
+
+
+psum_fwd.defvjp(_psum_fwd_fwd, _psum_fwd_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def psum_bwd(x, axis: str):
+    """identity on forward, psum on backward (Megatron's ``g`` scatter)."""
+    return x
+
+
+def _psum_bwd_fwd(x, axis):
+    return x, None
+
+
+def _psum_bwd_bwd(axis, _, ct):
+    return (jax.lax.psum(ct, axis),)
+
+
+psum_bwd.defvjp(_psum_bwd_fwd, _psum_bwd_bwd)
+
+
+# ---------------------------------------------------------------------------
+# The ambient plan (trace-time, thread-local)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TPContext:
+    """Which parameter groups are sharded over which manual mesh axis."""
+
+    axis: str = "model"
+    attn: bool = False
+    ffn: bool = False
+    vocab: bool = False
+
+
+_state = threading.local()
+
+
+def current() -> Optional[TPContext]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def tensor_parallel(ctx: Optional[TPContext]):
+    """Install ``ctx`` for the duration of a trace (None = no-op)."""
+    old = getattr(_state, "ctx", None)
+    _state.ctx = ctx
+    try:
+        yield
+    finally:
+        _state.ctx = old
+
+
+def _group_axis(group: str) -> Optional[str]:
+    ctx = current()
+    if ctx is not None and getattr(ctx, group):
+        return ctx.axis
+    return None
+
+
+def col_in(x, group: str):
+    """Replicated activation entering a column-parallel matmul."""
+    axis = _group_axis(group)
+    return x if axis is None else psum_bwd(x, axis)
+
+
+def row_out(x, group: str):
+    """Partial sum leaving a row-parallel matmul."""
+    axis = _group_axis(group)
+    return x if axis is None else psum_fwd(x, axis)
+
+
+def shared_param(tree, group: str):
+    """A replicated parameter (sub)tree consumed INSIDE a sharded region
+    (e.g. the per-head-dim qk-norm scales applied to head-sharded q/k):
+    identity forward, psum backward per leaf, so the per-shard partial
+    cotangents assemble into the full — and replicated — gradient."""
+    axis = _group_axis(group)
+    if axis is None:
+        return tree
+    return jax.tree_util.tree_map(lambda x: psum_bwd(x, axis), tree)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded embedding + cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def vocab_active() -> Optional[str]:
+    """The manual axis name when the vocab group is sharded, else None."""
+    return _group_axis("vocab")
+
+
+def sharded_embed(table: jnp.ndarray, ids: jnp.ndarray,
+                  axis: str) -> jnp.ndarray:
+    """Lookup into a vocab-sharded ``[V_local, d]`` table.
+
+    Each shard gathers the rows it owns (out-of-slice ids contribute
+    zeros) and one psum assembles the replicated embedding — the f merge,
+    so the backward scatter stays local to the owning shard.
+    """
+    v_local = table.shape[0]
+    start = jax.lax.axis_index(axis) * v_local
+    local = ids - start
+    ok = (local >= 0) & (local < v_local)
+    rows = jnp.take(table, jnp.clip(local, 0, v_local - 1), axis=0)
+    rows = jnp.where(ok[..., None], rows, jnp.zeros((), rows.dtype))
+    return psum_fwd(rows, axis)
+
+
+def sharded_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          valid_vocab: Optional[int], axis: str) -> jnp.ndarray:
+    """``lse - label_logit`` over vocab-sharded logits ``[..., V_local]``.
+
+    The max is a (non-differentiated) pmax, the sum-exp and the label
+    gather are per-shard partials merged with ``psum_fwd`` — the exact
+    value of the replicated cross-entropy without ever materializing the
+    full ``[..., V]`` logits on one shard.
+    """
+    logits = logits.astype(jnp.float32)
+    v_local = logits.shape[-1]
+    start = jax.lax.axis_index(axis) * v_local
+    if valid_vocab is not None:
+        cols = start + jnp.arange(v_local)
+        logits = jnp.where(cols >= valid_vocab, -1e30, logits)
+    m = jax.lax.pmax(
+        jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True)), axis)
+    lse = jnp.log(psum_fwd(jnp.sum(jnp.exp(logits - m), axis=-1), axis)) \
+        + m[..., 0]
+    local = labels - start
+    ok = (local >= 0) & (local < v_local)
+    lab = jnp.take_along_axis(
+        logits, jnp.clip(local, 0, v_local - 1)[..., None], axis=-1)[..., 0]
+    label_logit = psum_fwd(jnp.where(ok, lab, 0.0), axis)
+    return lse - label_logit

@@ -148,8 +148,11 @@ def main(argv=None) -> None:
                     help="devices on the mesh 'data' (worker) axis "
                          "(spmd only; total workers must divide evenly)")
     ap.add_argument("--mesh-model", type=int, default=None,
-                    help="devices on the mesh 'model' axis (spmd only; "
-                         "reserved for tensor parallelism — replicated)")
+                    help="devices on the mesh 'model' axis (spmd only): "
+                         "shards params/opt state/EMA and computes each "
+                         "worker's gradient tensor-parallel (docs/spmd.md); "
+                         "model dims must divide or the axis is carried "
+                         "replicated")
     ap.add_argument("--prefetch-depth", type=int, default=1,
                     help="chunks speculatively built ahead of the device "
                          "dispatch (chunked loop; 1 = double buffering)")

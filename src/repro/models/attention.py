@@ -51,8 +51,14 @@ def _project_qkv(params: Params, cfg, x: jnp.ndarray, positions: jnp.ndarray):
     k = common.dense(params["wk"], x).reshape(b, s, kv, hd)
     v = common.dense(params["wv"], x).reshape(b, s, kv, hd)
     if cfg.qk_norm:
-        q = common.rmsnorm(params["q_norm"], q, cfg.norm_eps)
-        k = common.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+        # qk-norm scales are replicated but applied to head-SHARDED q/k
+        # under manual TP: tp.shared_param assembles their full gradient
+        # from the per-shard (local-heads-only) partial cotangents
+        from repro.distributed import tp
+        q = common.rmsnorm(tp.shared_param(params["q_norm"], "attn"), q,
+                           cfg.norm_eps)
+        k = common.rmsnorm(tp.shared_param(params["k_norm"], "attn"), k,
+                           cfg.norm_eps)
     q = common.apply_rope(q, positions, cfg.rope_theta)
     k = common.apply_rope(k, positions, cfg.rope_theta)
     return q, k, v

@@ -50,6 +50,10 @@ def embed_init(key, vocab: int, d: int, dtype=jnp.float32, std: float = 0.02) ->
 
 
 def embed(params: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    from repro.distributed import tp
+    axis = tp.vocab_active()
+    if axis is not None:              # manual-TP vocab-sharded table
+        return tp.sharded_embed(params["embedding"], ids, axis)
     return jnp.take(params["embedding"], ids, axis=0)
 
 
@@ -135,8 +139,15 @@ def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
 
     Written as ``lse - label_logit`` with explicit reductions over the vocab
     axis so that GSPMD keeps vocab-sharded logits sharded (the reductions
-    lower to small psums instead of an all-gather of the logits).
+    lower to small psums instead of an all-gather of the logits). Under the
+    SPMD engine's manual TP context the logits arrive as the LOCAL vocab
+    slice and the reductions are explicit collectives
+    (``tp.sharded_cross_entropy``).
     """
+    from repro.distributed import tp
+    axis = tp.vocab_active()
+    if axis is not None:
+        return tp.sharded_cross_entropy(logits, labels, valid_vocab, axis)
     logits = logits.astype(jnp.float32)
     if valid_vocab is not None and valid_vocab < logits.shape[-1]:
         pad_mask = jnp.arange(logits.shape[-1]) >= valid_vocab

@@ -87,7 +87,13 @@ def block_init(key, cfg, kind: str, dtype) -> Params:
 
 def block_apply(p: Params, cfg, kind: str, x: jnp.ndarray, positions: jnp.ndarray,
                 window) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    # tp.col_in / tp.row_out are identity unless the SPMD engine's manual
+    # tensor-parallel context is ambient (docs/spmd.md): then the qkv
+    # projections consume head-sharded weights (psum on the backward pass)
+    # and wo / w_down produce partial sums merged by a forward psum.
+    from repro.distributed import tp
     h = common.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    h = tp.col_in(h, "attn")
     if cfg.attention_kind == "mla":
         attn_out = attention.mla_attend(p["attn"], cfg, h, positions)
     elif x.shape[1] > CHUNKED_ATTN_THRESHOLD:
@@ -95,7 +101,7 @@ def block_apply(p: Params, cfg, kind: str, x: jnp.ndarray, positions: jnp.ndarra
                                                 window=window)
     else:
         attn_out = attention.gqa_attend(p["attn"], cfg, h, positions, window=window)
-    x = x + attn_out
+    x = x + tp.row_out(attn_out, "attn")
     h = common.rmsnorm(p["ln2"], x, cfg.norm_eps)
     if kind == "moe":
         b, s, d = h.shape
@@ -103,7 +109,9 @@ def block_apply(p: Params, cfg, kind: str, x: jnp.ndarray, positions: jnp.ndarra
                                  cfg.moe.capacity_factor)
         out = out.reshape(b, s, d)
     else:
-        out, aux = mlp.mlp_apply(p["mlp"], h, cfg.hidden_act), jnp.zeros((), jnp.float32)
+        h = tp.col_in(h, "ffn")
+        out = tp.row_out(mlp.mlp_apply(p["mlp"], h, cfg.hidden_act), "ffn")
+        aux = jnp.zeros((), jnp.float32)
     return x + out, aux
 
 
@@ -184,14 +192,16 @@ class TransformerLM:
         return x, aux_total
 
     def forward(self, params, tokens, prefix_embeds=None) -> jnp.ndarray:
-        """tokens: [B, S_text] -> logits [B, S_total, V_padded]."""
+        """tokens: [B, S_text] -> logits [B, S_total, V_padded]
+        (the LOCAL vocab slice under the engine's manual TP context)."""
+        from repro.distributed import tp
         cfg = self.cfg
         x = self._embed_inputs(params, tokens, prefix_embeds)
         positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
         x, aux = self._run_segments(params, x, positions)
         x = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
         out_w = self._output_weights(params)
-        return x @ out_w
+        return tp.col_in(x, "vocab") @ out_w
 
     def _output_weights(self, params):
         if self.cfg.tie_embeddings:
@@ -218,9 +228,11 @@ class TransformerLM:
             p = prefix.shape[1]
             pad_labels = jnp.full((labels.shape[0], p), -1, labels.dtype)
             labels = jnp.concatenate([pad_labels, labels], axis=1)
+        from repro.distributed import tp
         b, s, d = x.shape
         out_w = self._output_weights(params)
         safe_labels = jnp.maximum(labels, 0)
+        x = tp.col_in(x, "vocab")               # manual-TP head: local logits
         if cfg.padded_vocab * s > 32_000_000:   # big logits: chunk over tokens
             loss = common.chunked_cross_entropy(
                 x.reshape(b * s, d), out_w, safe_labels.reshape(b * s),

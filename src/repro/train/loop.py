@@ -22,8 +22,13 @@ SPMD engine (``repro.distributed.spmd_engine``, docs/spmd.md): the W
 workers map onto a real mesh 'data' axis, per-worker gradients live on
 their shard, and masked aggregation is a collective — with the same
 host-planned masks, checkpoint format, and chunking rules as the
-simulated backend. Strategies without SPMD support
-(``registry.supports_spmd``) fall back to 'sim' with a warning.
+simulated backend. ``mesh_model > 1`` additionally shards params/opt
+state/EMA over the mesh 'model' axis and computes each worker's
+gradient tensor-parallel (``sharding.tp_plan`` decides which groups
+shard; checkpoints stay interchangeable — state is gathered at save
+and re-sharded on restore). Strategies without SPMD support
+(``registry.supports_spmd``; TP opt-out ``spmd_tp_supported``) fall
+back to 'sim' with a warning.
 
 **Event mode** (async / softsync / staleness) — the discrete-event
 parameter-server loop: the scheduler pops gradient arrivals per the
@@ -139,9 +144,11 @@ class Trainer:
             raise ValueError(f"unknown execution backend {backend!r} "
                              f"(valid: sim, spmd)")
         # the supports_spmd gate: strategies without SPMD support (event
-        # regimes, opted-out plugins) fall back to the simulated backend
+        # regimes, opted-out plugins — incl. TP-specific opt-outs when
+        # mesh_model > 1) fall back to the simulated backend
         self._spmd = backend == "spmd"
-        if self._spmd and not registry.supports_spmd(self.strategy):
+        if self._spmd and not registry.supports_spmd(self.strategy,
+                                                     self.cfg.execution):
             warnings.warn(
                 f"strategy {self.cfg.aggregation.strategy!r} has no SPMD "
                 "support (registry.supports_spmd); falling back to the "
@@ -189,9 +196,15 @@ class Trainer:
             spmd_engine.validate_layout(cfg.aggregation.total_workers,
                                         cfg.shape.global_batch,
                                         cfg.execution.mesh_data)
+            # mesh_model > 1 shards params/opt/EMA over the 'model' axis
+            # (tensor parallelism inside the per-worker gradient) when the
+            # model config permits — sharding.tp_plan decides; a model
+            # override has no config, so the axis stays replicated there
             engine_kwargs = dict(step_kwargs,
                                  use_kernel=cfg.execution.use_kernel,
-                                 interpret=cfg.execution.interpret)
+                                 interpret=cfg.execution.interpret,
+                                 model_cfg=(None if self._model_override
+                                            else cfg.model))
             self.train_step = spmd_engine.make_train_step(
                 self.model, self.optimizer, self.mesh, **engine_kwargs)
             if cfg.chunk_size > 1:

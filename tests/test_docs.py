@@ -1,0 +1,148 @@
+"""Doc-drift guards: the documentation system is tested like code.
+
+Three contracts, enforced at tier-1 so a PR cannot silently break them:
+
+* every coordination strategy in ``core/registry`` is documented in
+  docs/api.md (the protocol/migration/metrics home);
+* every top-level key of every ``BENCH_*.json`` artifact (repo-root
+  mirrors AND the full ``experiments/bench`` payloads) is documented in
+  the "Bench JSON schema" section of docs/perf.md — numeric suffixes are
+  normalized (``speedup_32_vs_1`` matches the documented
+  ``speedup_32_vs_1`` literal or a ``speedup_N_vs_N`` pattern), so
+  adding a matrix cell doesn't require a doc edit but adding a new KIND
+  of key does;
+* every relative markdown link (and ``#anchor``) in the repo's *.md
+  files resolves — README, docs/, and the repo root are checked with a
+  GitHub-style slugifier.
+"""
+import json
+import os
+import re
+import string
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ---------------------------------------------------------------------------
+# Registry <-> docs/api.md
+# ---------------------------------------------------------------------------
+
+
+def _read(*parts: str) -> str:
+    with open(os.path.join(ROOT, *parts)) as f:
+        return f.read()
+
+
+def test_every_strategy_documented_in_api_md():
+    from repro.core import registry
+
+    api = _read("docs", "api.md")
+    missing = [s for s in registry.available() if s not in api]
+    assert not missing, (
+        f"strategies {missing} are registered in repro.core.registry but "
+        f"never mentioned in docs/api.md — document them in the protocol/"
+        f"migration/metrics tables")
+
+
+# ---------------------------------------------------------------------------
+# BENCH_*.json <-> docs/perf.md schema section
+# ---------------------------------------------------------------------------
+
+
+def _bench_files():
+    out = []
+    for d in (ROOT, os.path.join(ROOT, "experiments", "bench")):
+        if not os.path.isdir(d):
+            continue
+        for name in sorted(os.listdir(d)):
+            if name.startswith("BENCH_") and name.endswith(".json"):
+                out.append(os.path.join(d, name))
+    return out
+
+
+def _normalize(key: str) -> str:
+    return re.sub(r"\d+", "N", key)
+
+
+def test_bench_files_exist():
+    names = {os.path.basename(p) for p in _bench_files()}
+    assert {"BENCH_loop.json", "BENCH_events.json",
+            "BENCH_spmd.json"} <= names
+
+
+@pytest.mark.parametrize("path", _bench_files(),
+                         ids=lambda p: os.path.relpath(p, ROOT))
+def test_every_bench_key_documented_in_perf_md(path):
+    perf = _read("docs", "perf.md")
+    with open(path) as f:
+        payload = json.load(f)
+    missing = [k for k in payload
+               if k not in perf and _normalize(k) not in perf]
+    assert not missing, (
+        f"{os.path.relpath(path, ROOT)} keys {missing} are not documented "
+        f"in docs/perf.md (Bench JSON schema section); add the key or its "
+        f"digit-normalized pattern ({[_normalize(k) for k in missing]})")
+
+
+# ---------------------------------------------------------------------------
+# Markdown link + anchor checker
+# ---------------------------------------------------------------------------
+
+
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_FENCE = re.compile(r"```.*?```", re.S)
+
+
+def _md_files():
+    files = [os.path.join(ROOT, n) for n in sorted(os.listdir(ROOT))
+             if n.endswith(".md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        files += [os.path.join(docs, n) for n in sorted(os.listdir(docs))
+                  if n.endswith(".md")]
+    return files
+
+
+def _slugify(header: str) -> str:
+    """GitHub anchor slug: strip markdown/punctuation, lowercase,
+    spaces -> hyphens."""
+    h = re.sub(r"[`*_]", "", header.strip())
+    h = h.lower()
+    h = "".join(c for c in h if c in string.ascii_lowercase + string.digits
+                + " -")
+    return h.replace(" ", "-")
+
+
+def _anchors(md_text: str):
+    return {_slugify(m.group(1))
+            for m in re.finditer(r"^#+\s+(.+)$", md_text, re.M)}
+
+
+@pytest.mark.parametrize("path", _md_files(),
+                         ids=lambda p: os.path.relpath(p, ROOT))
+def test_markdown_links_resolve(path):
+    text = _CODE_FENCE.sub("", _read(os.path.relpath(path, ROOT)))
+    problems = []
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target, _, anchor = target.partition("#")
+        if target:
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(resolved):
+                problems.append(f"broken link: {m.group(1)}")
+                continue
+        else:
+            resolved = path
+        if anchor:
+            if not resolved.endswith(".md"):
+                continue
+            with open(resolved) as f:
+                if anchor not in _anchors(f.read()):
+                    problems.append(f"broken anchor: {m.group(1)}")
+    assert not problems, "\n".join(
+        [f"in {os.path.relpath(path, ROOT)}:"] + problems)

@@ -159,6 +159,37 @@ def test_mask_plugin_without_spmd_support_falls_back(tmp_path,
     assert all(m["selected"] == 4 for m in res.metrics)
 
 
+def test_mask_plugin_tp_opt_out_falls_back(tmp_path, plugin_registry):
+    """spmd_tp_supported=False only bites when mesh_model > 1: the plugin
+    keeps plain (replicated) SPMD support but falls back to the simulated
+    backend when the sharded tensor-parallel path is requested."""
+    from repro.configs.base import ExecutionConfig
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    class ParamPeekingFullSync(coordination.FullSync):
+        spmd_tp_supported = False
+
+    plugin_registry("param_peeking_full_sync",
+                    lambda cfg: ParamPeekingFullSync(cfg.total_workers))
+    strat = registry.get_strategy(_plugin_train_cfg(
+        tmp_path, "param_peeking_full_sync").aggregation)
+    # plain SPMD stays available; only the TP path is gated
+    assert registry.supports_spmd(strat)
+    assert registry.supports_spmd(
+        strat, ExecutionConfig(backend="spmd", mesh_data=4))
+    assert not registry.supports_spmd(
+        strat, ExecutionConfig(backend="spmd", mesh_data=4, mesh_model=2))
+    cfg = _plugin_train_cfg(
+        tmp_path, "param_peeking_full_sync",
+        execution=ExecutionConfig(backend="spmd", mesh_data=64, mesh_model=2))
+    with pytest.warns(UserWarning, match="no SPMD support"):
+        tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    assert not tr._spmd
+    tr.init_state()
+    assert tr.run(4).steps == 4
+
+
 def test_event_plugin_without_scan_falls_back(tmp_path, plugin_registry):
     """An event plugin without the plan/scan protocol at chunk_size>1
     runs the legacy per-arrival path (with a warning) and produces the

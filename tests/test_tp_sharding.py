@@ -1,0 +1,197 @@
+"""Manual-TP spec logic (distributed/sharding.py): pure host-side rules.
+
+Edge cases exposed by the tensor-parallel SPMD engine: group-consistency
+(all-or-nothing sharding per parameter group), params not divisible by
+mesh_model, scalar/1-D leaves (biases, norm scales), and optimizer-state
+pytrees whose structure differs from params.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import replace
+from repro.distributed.sharding import (TPPlan, tp_local_model_cfg, tp_param_spec,
+                                        tp_param_specs, tp_plan, tp_state_specs)
+
+
+def _tiny(**kw):
+    base = dict(num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+                head_dim=16, d_ff=64, vocab_size=64, vocab_pad_multiple=16)
+    base.update(kw)
+    return replace(configs.get_smoke_config("qwen3-0.6b"), **base)
+
+
+# ---------------------------------------------------------------------------
+# tp_plan: divisibility + group consistency
+# ---------------------------------------------------------------------------
+
+
+def test_plan_all_groups_shard_when_divisible():
+    plan = tp_plan(_tiny(), 2)
+    assert plan == TPPlan(2, attn=True, ffn=True, vocab=True)
+    assert plan.any
+
+
+def test_plan_trivial_for_size_one_or_no_cfg():
+    assert not tp_plan(_tiny(), 1).any
+    assert not tp_plan(None, 4).any
+
+
+def test_plan_attn_group_is_all_or_nothing():
+    # q heads divide but kv heads do NOT: sharding wq while replicating
+    # wk/wv would change q_per_kv on the shard — the whole group opts out
+    plan = tp_plan(_tiny(num_heads=4, num_kv_heads=1), 2)
+    assert not plan.attn
+    assert plan.ffn and plan.vocab          # other groups unaffected
+    # odd q heads: out too
+    assert not tp_plan(_tiny(num_heads=3, num_kv_heads=3), 2).attn
+
+
+def test_plan_bias_blocks_row_parallel_groups():
+    # a biased wo/w_down would add its bias mesh_model times before the
+    # psum — biased configs keep attention and FFN replicated
+    plan = tp_plan(_tiny(use_bias=True), 2)
+    assert not plan.attn and not plan.ffn
+    assert plan.vocab                       # embed/head carry no bias
+
+
+def test_plan_indivisible_ffn_and_vocab():
+    assert not tp_plan(_tiny(d_ff=66), 4).ffn
+    assert not tp_plan(_tiny(vocab_size=60, vocab_pad_multiple=4), 16).vocab
+
+
+def test_plan_non_transformer_families_replicate():
+    rwkv = configs.get_smoke_config("rwkv6-1.6b")
+    assert not tp_plan(rwkv, 2).any
+    whisper = configs.get_smoke_config("whisper-tiny")
+    assert not tp_plan(whisper, 2).any
+
+
+def test_plan_mla_attention_replicates():
+    dsv2 = configs.get_smoke_config("deepseek-v2-lite-16b")
+    assert dsv2.attention_kind == "mla"
+    assert not tp_plan(dsv2, 2).attn
+
+
+# ---------------------------------------------------------------------------
+# tp_param_spec(s): leaf rules on a REAL parameter tree
+# ---------------------------------------------------------------------------
+
+
+def _param_shapes(cfg):
+    from repro.models import get_model
+    return jax.eval_shape(get_model(cfg).init, jax.random.PRNGKey(0))
+
+
+def test_param_specs_on_real_tree():
+    cfg = _tiny()
+    specs = tp_param_specs(tp_plan(cfg, 2), _param_shapes(cfg))
+    seg = specs["seg_dense"]
+    # stacked [L, ...] leaves: the layer dim is never sharded
+    assert seg["attn"]["wq"]["w"] == P(None, None, "model")
+    assert seg["attn"]["wo"]["w"] == P(None, "model", None)
+    assert seg["mlp"]["w_up"]["w"] == P(None, None, "model")
+    assert seg["mlp"]["w_down"]["w"] == P(None, "model", None)
+    assert specs["embed"]["embedding"] == P("model", None)
+    # 1-D leaves (norm scales) replicated
+    assert seg["ln1"]["scale"] == P(None, None)
+    assert seg["attn"]["q_norm"]["scale"] == P(None, None)
+    assert specs["final_norm"]["scale"] == P(None)
+
+
+def test_param_spec_divisibility_guard_per_leaf():
+    # plan says shard, but THIS leaf's dim doesn't divide -> replicated
+    plan = TPPlan(4, attn=True, ffn=False, vocab=False)
+    assert tp_param_spec("seg_dense/attn/wq/w", (1, 32, 30), plan) == \
+        P(None, None, None)
+    # scalars / 0-d never touched
+    assert tp_param_spec("whatever/scalar", (), plan) == P()
+
+
+def test_param_spec_untied_head_sharded():
+    cfg = _tiny(tie_embeddings=False)
+    specs = tp_param_specs(tp_plan(cfg, 2), _param_shapes(cfg))
+    assert specs["lm_head"]["w"] == P(None, "model")
+
+
+# ---------------------------------------------------------------------------
+# tp_state_specs: opt-state trees whose STRUCTURE differs from params
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,keys", [
+    ("momentum", ["m"]),
+    ("rmsprop_momentum", ["ms", "mom"]),
+    ("adam", ["m", "v"]),
+])
+def test_state_specs_inherit_param_specs(name, keys):
+    from repro.optim import optimizers as opt_lib, schedules
+
+    cfg = _tiny()
+    plan = tp_plan(cfg, 2)
+    params_t = _param_shapes(cfg)
+    opt = getattr(opt_lib, name)(schedules.constant(0.1))
+    opt_t = jax.eval_shape(opt.init, params_t)
+    specs = tp_state_specs(plan, opt_t)
+    pspecs = tp_param_specs(plan, params_t)
+    for k in keys:
+        assert k in specs
+        # every state leaf mirrors its parameter's spec, leaf-for-leaf
+        assert jax.tree_util.tree_structure(specs[k], is_leaf=lambda x: isinstance(x, P)) == \
+            jax.tree_util.tree_structure(pspecs, is_leaf=lambda x: isinstance(x, P))
+        assert jax.tree_util.tree_leaves(specs[k], is_leaf=lambda x: isinstance(x, P)) == \
+            jax.tree_util.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_state_specs_empty_sgd_state():
+    from repro.optim import optimizers as opt_lib, schedules
+
+    cfg = _tiny()
+    opt = opt_lib.sgd(schedules.constant(0.1))
+    opt_t = jax.eval_shape(opt.init, _param_shapes(cfg))
+    assert tp_state_specs(tp_plan(cfg, 2), opt_t) == {}
+
+
+def test_state_specs_ema_tree():
+    from repro.core import ema as ema_lib
+
+    cfg = _tiny()
+    plan = tp_plan(cfg, 2)
+    params_t = _param_shapes(cfg)
+    ema_t = jax.eval_shape(ema_lib.init, params_t)
+    specs = tp_state_specs(plan, ema_t)
+    assert specs["embed"]["embedding"] == P("model", None)
+    assert specs["seg_dense"]["ln1"]["scale"] == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# tp_local_model_cfg: the per-shard model config
+# ---------------------------------------------------------------------------
+
+
+def test_local_cfg_divides_sharded_groups_and_pins_head_dim():
+    cfg = _tiny(head_dim=0)                 # derived head_dim = d_model/heads
+    plan = tp_plan(cfg, 2)
+    local = tp_local_model_cfg(cfg, plan)
+    assert local.num_heads == 1 and local.num_kv_heads == 1
+    assert local.d_ff == 32
+    # derived head dim would change with num_heads; it must be pinned
+    assert local.resolved_head_dim == cfg.resolved_head_dim
+    # vocab fields stay GLOBAL (handled by tp.sharded_embed / CE)
+    assert local.vocab_size == cfg.vocab_size
+    assert local.padded_vocab == cfg.padded_vocab
+
+
+def test_local_cfg_identity_without_plan():
+    cfg = _tiny()
+    assert tp_local_model_cfg(cfg, TPPlan(2)) is cfg
+
+
+def test_local_cfg_respects_partial_plans():
+    cfg = _tiny(num_heads=3, num_kv_heads=3)    # attn can't shard
+    plan = tp_plan(cfg, 2)
+    local = tp_local_model_cfg(cfg, plan)
+    assert local.num_heads == 3                 # untouched
+    assert local.d_ff == 32                     # ffn still shards
