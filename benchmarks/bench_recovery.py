@@ -1,0 +1,128 @@
+"""Recovery drill: MTTR and chaos overhead of the fault-tolerance layer.
+
+Runs the qwen3-0.6b smoke config clean and under a seeded chaos plan
+(crash + slowdown + ckpt-write failures + preemption,
+docs/robustness.md) with the recovery supervisor, and measures what the
+paper's robustness argument actually costs:
+
+* **MTTR** — wall-clock seconds from the crash to the restored Trainer
+  resuming (``run_supervised``'s ``recover_times``, which includes the
+  rebuild, the checkpoint walk-back/restore, and the injector resync);
+* **chaos overhead** — supervised-chaos wall time over the fault-free
+  wall time (recomputed steps + recovery machinery);
+* **loss delta** — final loss under chaos minus fault-free (the
+  acceptance bar: recovery must not change what is learned).
+
+Writes experiments/bench/BENCH_recovery.json and mirrors the headline
+summary (mttr_s, chaos_overhead_x, loss_delta) to the repo-root
+BENCH_recovery.json for the perf-trajectory tooling.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import tiny_lm_config, write_bench
+
+SPEC = "crash@5:w1,slow@3:w0,ckpt_io@7,preempt@10"
+
+
+def _cfg(ckpt_dir: str, steps: int, spec: str = ""):
+    from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                    FaultConfig, OptimizerConfig,
+                                    ShapeConfig, TrainConfig)
+    return TrainConfig(
+        model=tiny_lm_config(),
+        shape=ShapeConfig("bench", 8, 12, "train"),
+        aggregation=AggregationConfig(strategy="backup", num_workers=4,
+                                      backup_workers=2),
+        optimizer=OptimizerConfig(name="sgd", learning_rate=0.1,
+                                  scale_lr_with_workers=False),
+        checkpoint=CheckpointConfig(directory=ckpt_dir, every_steps=4),
+        seed=0, total_steps=steps, chunk_size=4, log_every=4,
+        faults=FaultConfig(spec=spec, seed=7))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="short run (CI canary settings)")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args(argv)
+    steps = args.steps or (16 if args.quick else 48)
+
+    import tempfile
+
+    from repro.core.straggler import Uniform
+    from repro.train.loop import run_experiment
+    from repro.train.supervisor import run_supervised
+
+    lat = Uniform(1.0, 2.0)
+    with tempfile.TemporaryDirectory() as td:
+        # warm the jit caches so neither arm pays first-compile
+        run_experiment(_cfg(os.path.join(td, "w"), min(steps, 8)),
+                       latency=lat)
+
+        t0 = time.perf_counter()
+        clean = run_experiment(_cfg(os.path.join(td, "clean"), steps),
+                               latency=lat)
+        clean_s = time.perf_counter() - t0
+
+        recover_times = []
+        t0 = time.perf_counter()
+        chaos = run_supervised(_cfg(os.path.join(td, "chaos"), steps, SPEC),
+                               latency=lat, recover_times=recover_times)
+        chaos_s = time.perf_counter() - t0
+
+    loss_delta = chaos.metrics[-1]["loss"] - clean.metrics[-1]["loss"]
+    mttr = (sum(recover_times) / len(recover_times)) if recover_times else 0.0
+    events = [e["event"] for e in chaos.recovery_log]
+    results = [{"arm": "clean", "steps": clean.steps, "wall_s": clean_s,
+                "final_loss": clean.metrics[-1]["loss"]},
+               {"arm": "chaos", "steps": chaos.steps, "wall_s": chaos_s,
+                "final_loss": chaos.metrics[-1]["loss"],
+                "restores": events.count("restore"),
+                "recovery_events": len(chaos.recovery_log)}]
+    payload = {
+        "bench": "recovery",
+        "model": "qwen3-0.6b smoke",
+        "steps": steps,
+        "fault_spec": SPEC,
+        "results": results,
+        "mttr_s": mttr,
+        "chaos_overhead_x": chaos_s / clean_s,
+        "loss_delta": loss_delta,
+    }
+    mirror = {"bench": "recovery", "fault_spec": SPEC,
+              "mttr_s": mttr, "chaos_overhead_x": payload["chaos_overhead_x"],
+              "loss_delta": loss_delta}
+    path = write_bench("BENCH_recovery", payload, mirror=mirror)
+
+    for r in results:
+        print(f"arm={r['arm']:<6} steps={r['steps']:>3} "
+              f"wall {r['wall_s']:6.2f}s final_loss {r['final_loss']:.4f}")
+    print(f"MTTR {mttr:.2f}s, chaos overhead "
+          f"{payload['chaos_overhead_x']:.2f}x, loss delta "
+          f"{loss_delta:+.4f} -> {path} (+ root BENCH_recovery.json)")
+    return payload
+
+
+def run(quick: bool = True):
+    """benchmarks/run.py harness contract: (name, us_per_call, derived)."""
+    payload = main(["--quick"] if quick else [])
+    return [
+        ("recovery.mttr", payload["mttr_s"] * 1e6,
+         f"{payload['mttr_s']:.2f}s"),
+        ("recovery.chaos_overhead", 0.0,
+         f"{payload['chaos_overhead_x']:.2f}x"),
+        ("recovery.loss_delta", 0.0, f"{payload['loss_delta']:+.4f}"),
+    ]
+
+
+if __name__ == "__main__":
+    main()

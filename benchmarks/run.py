@@ -13,6 +13,7 @@ EXPERIMENTS.md.
   bench_sync_vs_async    — Figs. 8/9 (the headline comparison)
   bench_event_loop       — fused event engine vs per-arrival loop
   bench_spmd             — SPMD mesh engine vs simulated backend
+  bench_recovery         — MTTR + chaos overhead of the recovery supervisor
   bench_step_time        — host step-time microbenchmark per arch
   roofline               — §Roofline terms from the dry-run artifacts
 """
@@ -29,9 +30,10 @@ def main() -> None:
     quick = common.quick_mode()
     from benchmarks import (bench_event_loop, bench_iterations_vs_n,
                             bench_layer_staleness, bench_lr_sweep,
-                            bench_spmd, bench_staleness, bench_step_time,
-                            bench_straggler, bench_sync_vs_async,
-                            bench_time_to_converge, roofline)
+                            bench_recovery, bench_spmd, bench_staleness,
+                            bench_step_time, bench_straggler,
+                            bench_sync_vs_async, bench_time_to_converge,
+                            roofline)
     modules = [
         ("straggler", bench_straggler),
         ("layer_staleness", bench_layer_staleness),
@@ -42,6 +44,7 @@ def main() -> None:
         ("sync_vs_async", bench_sync_vs_async),
         ("event_loop", bench_event_loop),
         ("spmd", bench_spmd),                  # re-execs itself (forced devices)
+        ("recovery", bench_recovery),
         ("step_time", bench_step_time),
         ("roofline", roofline),
     ]

@@ -233,6 +233,9 @@ class AggregationConfig:
                      every c arrivals (stale allowed) — for comparisons only
       'staleness'  — paper §2.1 controlled rig: serial SGD applying the
                      gradient from staleness_tau steps ago
+      'dynamic_backup' — Dynamic Backup Workers (arXiv:2102.06280):
+                     backup strategy whose cutoff N adapts online from
+                     the measured straggler tail (docs/robustness.md)
     """
 
     strategy: str = "backup"
@@ -240,6 +243,12 @@ class AggregationConfig:
     backup_workers: int = 0           # b  (total launched = N + b)
     deadline_s: float = 0.0           # timeout strategy
     softsync_c: int = 1
+    # dynamic_backup strategy (arXiv:2102.06280): adapt the aggregate-
+    # first-N cutoff online from the measured straggler tail. window =
+    # steps of arrival history kept; min_workers = smallest N the
+    # controller may choose (0 => max(1, num_workers // 2)).
+    dynamic_window: int = 32
+    dynamic_min_workers: int = 0
     staleness_tau: int = 0            # staleness strategy: target tau
     staleness_ramp_steps: int = 0     # ramp tau up over the first steps
     staleness_jitter: int = 0         # +- uniform jitter on tau
@@ -320,6 +329,31 @@ class CheckpointConfig:
     every_steps: int = 100
     keep: int = 3
     async_save: bool = False
+    # self-healing writes (docs/robustness.md): failed saves retry up to
+    # write_retries times with exponential backoff before the error
+    # propagates (where the recovery supervisor takes over)
+    write_retries: int = 3
+    retry_backoff_s: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Seeded fault injection + recovery supervision (docs/robustness.md).
+
+    ``spec`` is a chaos-plan string parsed by ``repro.core.faults``
+    (e.g. ``"crash@10:w1,slowdown@20:w2,ckpt_io@25,preempt@35"`` or
+    ``"crash=2,slowdown=3"`` for seeded-random placement). ``seed`` is
+    the fault stream's own seed — independent of ``TrainConfig.seed`` so
+    the same training run can be replayed under different chaos.
+    ``supervise`` routes the run through
+    ``repro.train.supervisor.run_supervised`` (crash recovery from the
+    last verified-good checkpoint, bounded by ``max_restarts``).
+    """
+
+    spec: str = ""
+    seed: int = 0
+    supervise: bool = False
+    max_restarts: int = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -331,6 +365,7 @@ class TrainConfig:
     optimizer: OptimizerConfig = OptimizerConfig()
     checkpoint: CheckpointConfig = CheckpointConfig()
     execution: ExecutionConfig = ExecutionConfig()
+    faults: FaultConfig = FaultConfig()
     seed: int = 0
     total_steps: int = 1000
     log_every: int = 10

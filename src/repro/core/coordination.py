@@ -231,6 +231,97 @@ class Timeout(MaskStrategy):
         return self.num_workers     # varies per step; N is the upper bound
 
 
+@dataclasses.dataclass
+class DynamicBackup(MaskStrategy):
+    """Adaptive backup cutoff (Dynamic Backup Workers, arXiv:2102.06280).
+
+    Runs the paper's backup-worker protocol but re-estimates the
+    aggregation cutoff n online: after every step the sorted arrival
+    vector joins a sliding window of the last ``window`` steps, and n is
+    reset to the argmax of the throughput objective
+
+        n / E[t_(n)]        (gradients aggregated per simulated second),
+
+    where E[t_(n)] is the windowed mean of the n-th order statistic of
+    the arrival times. A heavy straggler tail pushes n down (cut the
+    tail, keep throughput); a healthy cluster pushes n back up toward
+    full sync. Dead workers arrive at +inf, so every infeasible n
+    (beyond the live count) has infinite expected wait and zero
+    throughput — the estimator routes around crashes with no special
+    casing. ``min_workers`` floors n (gradient-noise guard).
+
+    Stateful across steps, so unlike the frozen built-ins it exposes
+    ``state_dict``/``load_state_dict`` (persisted in checkpoint metadata)
+    and opts out of the device straggler backend — selection must run on
+    the host where the window lives (``device_select_supported``).
+    ``min_alive`` tells the Trainer's elastic layer the true liveness
+    floor: the protocol degrades gracefully until fewer than
+    ``min_workers`` machines remain.
+    """
+
+    num_workers: int          # initial n (= paper's N)
+    backups: int              # b — total_workers = N + b
+    window: int = 32
+    min_workers: int = 0      # floor for the adapted n (0 -> 1)
+
+    name = "dynamic_backup"
+    device_select_supported = False
+
+    def __post_init__(self):
+        self.n = int(self.num_workers)
+        self.history: List[np.ndarray] = []   # sorted arrival rows [W]
+
+    @property
+    def total_workers(self) -> int:
+        return self.num_workers + self.backups
+
+    @property
+    def min_alive(self) -> int:
+        return max(self.min_workers, 1)
+
+    def select(self, arrivals):
+        # clamp to the live count: right after a crash (before the window
+        # has seen it) the adapted n may exceed the finite arrivals
+        n = max(1, min(self.n, int(np.isfinite(arrivals).sum()) or 1))
+        order = np.argsort(arrivals, kind="stable")
+        mask = np.zeros_like(arrivals, dtype=bool)
+        mask[order[:n]] = True
+        t = float(arrivals[order[n - 1]])
+        self._observe(arrivals)
+        return mask, t
+
+    # select_batch: the MaskStrategy fallback loops over select — required
+    # here, because each row must fold into the window before the next
+    # row's cutoff is chosen (the adaptation is inherently sequential).
+
+    def effective_n(self) -> int:
+        return self.n
+
+    def _observe(self, arrivals: np.ndarray) -> None:
+        self.history.append(np.sort(np.asarray(arrivals, np.float64)))
+        if len(self.history) > self.window:
+            self.history.pop(0)
+        h = np.stack(self.history)                   # [H, W] sorted rows
+        with np.errstate(invalid="ignore"):
+            mean_t = h.mean(axis=0)                  # E[t_(n)], n = 1..W
+        ns = np.arange(1, h.shape[1] + 1, dtype=np.float64)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            throughput = np.where(np.isfinite(mean_t), ns / mean_t, 0.0)
+        floor = max(self.min_workers, 1)
+        throughput[:floor - 1] = -np.inf
+        self.n = int(np.argmax(throughput)) + 1
+
+    # -- checkpointable state (saved as manifest "strategy_state") ----------
+
+    def state_dict(self) -> Dict:
+        return {"n": int(self.n),
+                "history": [[float(x) for x in row] for row in self.history]}
+
+    def load_state_dict(self, d: Dict) -> None:
+        self.n = int(d["n"])
+        self.history = [np.asarray(row, np.float64) for row in d["history"]]
+
+
 # ---------------------------------------------------------------------------
 # Event side: scheduler + strategies
 # ---------------------------------------------------------------------------
@@ -287,6 +378,10 @@ class EventScheduler:
         self.queue: List[Tuple[float, int]] = [
             (float(first[w]), w) for w in range(num_workers)]
         heapq.heapify(self.queue)
+        # chaos engine's transient straggler spikes: per-worker service-time
+        # multipliers applied AFTER sampling, so the RNG draw order (the
+        # replay contract) is untouched by fault injection
+        self.slowdown: Dict[int, float] = {}
 
     def pop(self) -> Tuple[float, int]:
         return heapq.heappop(self.queue)
@@ -294,6 +389,7 @@ class EventScheduler:
     def push(self, t: float, worker: int) -> None:
         """Reschedule `worker`'s next arrival after its current one at `t`."""
         dt = float(self.latency.sample(self.rng, (1,))[0])
+        dt *= self.slowdown.get(worker, 1.0)
         heapq.heappush(self.queue, (t + dt, worker))
 
     def drop_worker(self, worker: int) -> None:
@@ -301,16 +397,34 @@ class EventScheduler:
         self.queue = [e for e in self.queue if e[1] != worker]
         heapq.heapify(self.queue)
 
+    def set_slowdown(self, worker: int, factor: float) -> None:
+        """Transient slowdown spike (factor=1.0 restores health)."""
+        if factor == 1.0:
+            self.slowdown.pop(worker, None)
+        else:
+            self.slowdown[worker] = float(factor)
+
+    def revive_worker(self, worker: int, t: float) -> None:
+        """A restarted worker rejoins: its next arrival is scheduled one
+        freshly-sampled service time after ``t`` (the revive clock)."""
+        dt = float(self.latency.sample(self.rng, (1,))[0])
+        dt *= self.slowdown.get(worker, 1.0)
+        heapq.heappush(self.queue, (float(t) + dt, worker))
+
     # -- checkpointable state -------------------------------------------------
 
     def state_dict(self) -> Dict:
         return {"queue": [[t, int(w)] for t, w in self.queue],
-                "rng": encode_rng(self.rng)}
+                "rng": encode_rng(self.rng),
+                "slowdown": {str(w): f for w, f in self.slowdown.items()}}
 
     def load_state_dict(self, d: Dict) -> None:
         self.queue = [(float(t), int(w)) for t, w in d["queue"]]
         heapq.heapify(self.queue)
         decode_rng(self.rng, d["rng"])
+        # absent in pre-chaos checkpoints: no active spikes
+        self.slowdown = {int(w): float(f)
+                         for w, f in d.get("slowdown", {}).items()}
 
 
 class SerialScheduler:

@@ -51,6 +51,10 @@ class StragglerSimulator:
         self.latency = latency or PaperCalibrated()
         self.seed = seed
         self.dead = np.zeros(strategy.total_workers, dtype=bool)
+        # chaos engine's transient straggler spikes: per-worker latency
+        # multipliers applied AFTER sampling, so the underlying RandomState
+        # streams (the replay contract) are untouched by fault injection
+        self.slowdown = np.ones(strategy.total_workers, dtype=np.float64)
         self._step = start_step
 
     def kill_worker(self, w: int) -> None:
@@ -58,6 +62,10 @@ class StragglerSimulator:
 
     def revive_worker(self, w: int) -> None:
         self.dead[w] = False
+
+    def set_slowdown(self, w: int, factor: float) -> None:
+        """Transient slowdown spike (factor=1.0 restores health)."""
+        self.slowdown[w] = float(factor)
 
     @property
     def step(self) -> int:
@@ -86,7 +94,7 @@ class StragglerSimulator:
     def next_event(self) -> StepEvent:
         # deterministic in (seed, step): checkpoint/resume replays the
         # exact arrival sequence with no simulator state to persist
-        arrivals = self._raw_arrivals(self._step)
+        arrivals = self._raw_arrivals(self._step) * self.slowdown
         arrivals = np.where(self.dead, np.inf, arrivals)
         mask, t = self.strategy.select(arrivals)
         mask = mask & ~self.dead
@@ -105,6 +113,7 @@ class StragglerSimulator:
         for i in range(k):
             arrivals[i] = self._raw_arrivals(self._step)
             self._step += 1
+        arrivals = arrivals * self.slowdown[None, :]
         arrivals = np.where(self.dead[None, :], np.inf, arrivals)
         masks, times = self.strategy.select_batch(arrivals)
         masks = masks & ~self.dead[None, :]

@@ -1,0 +1,280 @@
+"""Seeded chaos engine: composable, deterministic fault schedules.
+
+The paper's whole argument is that synchronous SGD with backup workers
+survives stragglers and failures — this module turns the repo's ad-hoc
+``kill_worker_at={step: worker}`` dict into a real fault-injection layer
+(docs/robustness.md):
+
+* :class:`FaultEvent` — one planned fault. The taxonomy (``FAULT_KINDS``):
+
+    - ``crash``     worker dies; its gradient never arrives again (the
+                    SPMD engine masks its shard out of the
+                    ``backup_reduce`` + psum collective until the next
+                    rescale boundary).
+    - ``slowdown``  transient straggler spike: the worker's arrival
+                    latencies are multiplied by ``factor`` for
+                    ``duration`` steps (``StragglerSimulator.slowdown``
+                    in mask mode; ``EventScheduler`` service-time scaling
+                    in event mode).
+    - ``restart``   a crashed worker rejoins with the *current* params
+                    (fresh read copy, next arrival scheduled now).
+    - ``ckpt_io``   the next checkpoint save fails ``fails`` times with
+                    ``OSError`` before succeeding — exercising the
+                    retry-with-backoff path in ``train.checkpoint.save``.
+    - ``preempt``   preemption notice: an optional grace-period
+                    checkpoint is committed, then the run dies with
+                    :class:`Preemption` — the recovery supervisor's job.
+
+* :class:`FaultPlan` — an ordered, seeded schedule of events, built from
+  a spec string (:func:`plan_from_spec`) or explicit events. Same seed
+  and spec ⇒ identical plan ⇒ identical recovery log.
+
+* :class:`FaultInjector` — the runtime: tracks which events have fired
+  (faults fire at most once — a restored run does not replay already-
+  injected faults, but their persistent effects re-sync), the permanent
+  dead set, active slowdown windows, armed checkpoint failures, and the
+  structured recovery log threaded into ``TrainResult.recovery_log``.
+
+Faults are applied at chunk boundaries (the Trainer forces a boundary at
+every pending fault step, exactly as it does for kill/checkpoint steps),
+so the engine composes with all three backends: the host sim, the fused
+event scan, and the SPMD mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+FAULT_KINDS = ("crash", "slowdown", "restart", "ckpt_io", "preempt")
+
+# recovery-log event types (schema in docs/api.md); every entry also
+# carries "step" and the fields listed per type
+RECOVERY_EVENTS = ("worker_crash", "worker_slowdown", "worker_restart",
+                   "ckpt_io_fault", "ckpt_write_retry", "preempt",
+                   "restore", "rescale", "give_up")
+
+
+class Preemption(RuntimeError):
+    """An injected (or real) preemption notice: the run must die now.
+
+    ``grace_checkpointed`` records whether a grace-period checkpoint was
+    committed before raising — the supervisor restores from it."""
+
+    def __init__(self, step: int, grace_checkpointed: bool):
+        super().__init__(f"preempted at step {step} "
+                         f"(grace checkpoint: {grace_checkpointed})")
+        self.step = int(step)
+        self.grace_checkpointed = bool(grace_checkpointed)
+
+
+class InjectedIOError(OSError):
+    """The ckpt_io fault's write failure (distinguishable in tests)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One planned fault; fields beyond (kind, step) are kind-specific."""
+
+    kind: str
+    step: int
+    worker: int = -1          # crash/slowdown/restart target
+    factor: float = 4.0       # slowdown latency multiplier
+    duration: int = 8         # slowdown steps until recovery
+    fails: int = 2            # ckpt_io: failed write attempts injected
+    grace: bool = True        # preempt: grace-period checkpoint first
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS + ("slow_end",):
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(valid: {', '.join(FAULT_KINDS)})")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An ordered fault schedule; deterministic in (spec, seed)."""
+
+    events: Tuple[FaultEvent, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(
+            sorted(self.events, key=lambda e: (e.step, e.kind, e.worker))))
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+_KIND_ALIASES = {"slow": "slowdown", "kill": "crash"}
+
+
+def _parse_item(item: str) -> Tuple[str, Optional[int], Optional[int], int]:
+    """One spec item -> (kind, step|None, worker|None, count).
+
+    Grammar (docs/robustness.md):
+        kind '@' step [':w' worker]     explicit placement
+        kind ['=' count]                seeded-random placement
+    """
+    if "@" in item:
+        kind, rest = item.split("@", 1)
+        parts = rest.split(":")
+        step = int(parts[0])
+        worker = None
+        for p in parts[1:]:
+            if p.startswith("w"):
+                worker = int(p[1:])
+            else:
+                raise ValueError(f"bad fault spec field {p!r} in {item!r}")
+        return _KIND_ALIASES.get(kind.strip(), kind.strip()), step, worker, 1
+    kind, _, cnt = item.partition("=")
+    return (_KIND_ALIASES.get(kind.strip(), kind.strip()), None, None,
+            int(cnt) if cnt else 1)
+
+
+def plan_from_spec(spec: str, *, num_steps: int, num_workers: int,
+                   seed: int = 0) -> FaultPlan:
+    """Parse a chaos spec into a deterministic :class:`FaultPlan`.
+
+    Explicit items pin (step, worker); count items draw steps/workers
+    from a RandomState seeded with ``seed`` — the same (spec, seed,
+    num_steps, num_workers) always yields the identical plan.
+    """
+    rng = np.random.RandomState(seed)
+    hi = max(num_steps - 1, 2)
+    events: List[FaultEvent] = []
+    for raw in spec.split(","):
+        item = raw.strip()
+        if not item:
+            continue
+        kind, step, worker, count = _parse_item(item)
+        if kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {kind!r} in {item!r} "
+                             f"(valid: {', '.join(FAULT_KINDS)})")
+        for _ in range(count):
+            s = step if step is not None else int(rng.randint(1, hi))
+            w = worker if worker is not None else int(rng.randint(num_workers))
+            if kind in ("ckpt_io", "preempt"):
+                w = -1
+            events.append(FaultEvent(
+                kind, s, worker=w,
+                duration=max(2, min(8, num_steps // 8)) if kind == "slowdown"
+                else 8))
+    return FaultPlan(tuple(events), seed)
+
+
+class FaultInjector:
+    """Runtime state of one chaos plan across a (possibly restarted) run.
+
+    The Trainer pulls due events each step via :meth:`take_due` and asks
+    :meth:`upcoming_steps` when sizing chunks so every fault lands on a
+    dispatch boundary. The supervisor owns the injector across restarts:
+    :meth:`resync` re-applies persistent effects (dead workers, active
+    slowdowns) to a freshly rebuilt Trainer.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.log: List[Dict] = []
+        self._pending: List[FaultEvent] = list(plan.events)
+        self.dead: set = set()              # permanently-crashed workers
+        self.slow_active: Dict[int, Tuple[float, int]] = {}  # w -> (f, end)
+        self.ckpt_fails_armed = 0
+        self._ckpt_io_step = 0              # step the arming happened at
+
+    # -- schedule queries ----------------------------------------------------
+
+    def upcoming_steps(self) -> List[int]:
+        """Steps that must be chunk boundaries: every unfired fault plus
+        the end of every active slowdown window."""
+        steps = [e.step for e in self._pending]
+        steps += [end for _, end in self.slow_active.values()]
+        return steps
+
+    def take_due(self, step: int) -> List[FaultEvent]:
+        """Pop every event due at or before ``step`` (fire-at-most-once),
+        appending synthesized ``slow_end`` events for expired windows."""
+        due = [e for e in self._pending if e.step <= step]
+        self._pending = [e for e in self._pending if e.step > step]
+        for w, (factor, end) in sorted(self.slow_active.items()):
+            if end <= step:
+                due.append(FaultEvent("slow_end", end, worker=w,
+                                      factor=factor))
+        due.sort(key=lambda e: (e.step, e.kind, e.worker))
+        return due
+
+    def defer(self, event: FaultEvent, to_step: int) -> None:
+        """Push an event back (e.g. a preempt that cannot checkpoint at a
+        mid-window arrival) — deterministic, so logs stay reproducible."""
+        self._pending.append(dataclasses.replace(event, step=int(to_step)))
+        self._pending.sort(key=lambda e: (e.step, e.kind, e.worker))
+
+    # -- effect bookkeeping (the Trainer calls these as it applies) ----------
+
+    def record(self, event: str, **fields) -> None:
+        entry = {"event": event, **fields}
+        self.log.append(entry)
+
+    def note_crash(self, step: int, worker: int) -> None:
+        self.dead.add(int(worker))
+        self.slow_active.pop(int(worker), None)
+        self.record("worker_crash", step=int(step), worker=int(worker))
+
+    def note_slowdown(self, step: int, worker: int, factor: float,
+                      duration: int) -> int:
+        end = int(step + max(duration, 1))
+        self.slow_active[int(worker)] = (float(factor), end)
+        self.record("worker_slowdown", step=int(step), worker=int(worker),
+                    factor=float(factor), until=end)
+        return end
+
+    def note_slow_end(self, worker: int) -> None:
+        self.slow_active.pop(int(worker), None)
+
+    def note_restart(self, step: int, worker: int) -> None:
+        self.dead.discard(int(worker))
+        self.record("worker_restart", step=int(step), worker=int(worker))
+
+    def arm_ckpt_failures(self, step: int, fails: int) -> None:
+        self.ckpt_fails_armed += int(fails)
+        self._ckpt_io_step = int(step)
+        self.record("ckpt_io_fault", step=int(step), fails=int(fails))
+
+    def ckpt_io_check(self) -> None:
+        """``checkpoint.save``'s per-attempt hook: raise while armed."""
+        if self.ckpt_fails_armed > 0:
+            self.ckpt_fails_armed -= 1
+            raise InjectedIOError(
+                f"injected checkpoint write failure "
+                f"(armed at step {self._ckpt_io_step})")
+
+    def on_ckpt_retry(self, step: int):
+        """A ``checkpoint.save(on_retry=...)`` callback bound to ``step``."""
+        def cb(attempt: int, exc: BaseException) -> None:
+            self.record("ckpt_write_retry", step=int(step),
+                        attempt=int(attempt), error=type(exc).__name__)
+        return cb
+
+    # -- supervisor hooks -----------------------------------------------------
+
+    def resync(self, trainer) -> None:
+        """Re-apply persistent fault effects to a rebuilt Trainer (after a
+        supervisor restore): permanent deaths and still-active slowdowns.
+        Idempotent; emits no log entries."""
+        for w in sorted(self.dead):
+            trainer.fault_kill(w)
+        for w, (factor, end) in sorted(self.slow_active.items()):
+            if end > trainer.step:
+                trainer.fault_slowdown(w, factor)
+            else:
+                self.slow_active.pop(w, None)
+
+
+def build_injector(fault_cfg, *, num_steps: int,
+                   num_workers: int) -> Optional[FaultInjector]:
+    """FaultConfig -> FaultInjector (None when no chaos is configured)."""
+    if fault_cfg is None or not fault_cfg.spec:
+        return None
+    plan = plan_from_spec(fault_cfg.spec, num_steps=num_steps,
+                          num_workers=num_workers, seed=fault_cfg.seed)
+    return FaultInjector(plan)

@@ -107,6 +107,13 @@ def _timeout(cfg) -> coordination.Timeout:
     return coordination.Timeout(cfg.num_workers, cfg.deadline_s)
 
 
+@register("dynamic_backup")
+def _dynamic_backup(cfg) -> coordination.DynamicBackup:
+    return coordination.DynamicBackup(cfg.num_workers, cfg.backup_workers,
+                                      cfg.dynamic_window,
+                                      cfg.dynamic_min_workers)
+
+
 @register("async")
 def _async(cfg) -> coordination.Async:
     return coordination.Async(cfg.num_workers)

@@ -14,10 +14,19 @@
 --smoke uses the reduced per-arch config (CPU-runnable); without it the
 full published config is built (TPU-scale — on this host use the dry-run
 instead). Everything routes through ``repro.train.loop.run_experiment``:
-mask strategies (backup/full_sync/timeout) drive the straggler simulator
-and the masked SPMD step; event strategies (async/softsync) drive the
-discrete-event parameter server — both with the paper's lr rule, EMA,
-atomic checkpoints, and the unified metrics schema (docs/api.md).
+mask strategies (backup/full_sync/timeout/dynamic_backup) drive the
+straggler simulator and the masked SPMD step; event strategies
+(async/softsync) drive the discrete-event parameter server — both with
+the paper's lr rule, EMA, atomic checkpoints, and the unified metrics
+schema (docs/api.md).
+
+Chaos engineering (docs/robustness.md): ``--faults`` attaches a seeded
+fault plan, ``--supervise`` routes the run through the recovery
+supervisor so injected crashes/preemptions restore-and-continue:
+
+    python -m repro.launch.train --arch qwen3-0.6b --smoke --steps 50 \
+        --strategy backup --workers 6 --backups 2 \
+        --faults 'crash@10:w2,slow@5:w0,preempt@30' --supervise
 """
 from __future__ import annotations
 
@@ -26,21 +35,22 @@ import os
 
 from repro import configs
 from repro.configs.base import (AggregationConfig, CheckpointConfig,
-                                ExecutionConfig, OptimizerConfig, ShapeConfig,
-                                TrainConfig)
+                                ExecutionConfig, FaultConfig, OptimizerConfig,
+                                ShapeConfig, TrainConfig)
 from repro.core.straggler import PaperCalibrated
 from repro.train.loop import run_experiment
 
-MASK_STRATEGIES = ("backup", "full_sync", "timeout")
+MASK_STRATEGIES = ("backup", "full_sync", "timeout", "dynamic_backup")
 EVENT_STRATEGIES = ("async", "softsync")
 
 
 def _resolved_workers(args):
     """(backups, total launched) after defaults — the ONE definition both
     build_config and the arg validation use."""
+    with_backups = args.strategy in ("backup", "dynamic_backup")
     backups = args.backups if args.backups is not None else (
-        2 if args.strategy == "backup" else 0)
-    total = args.workers + (backups if args.strategy == "backup" else 0)
+        2 if with_backups else 0)
+    total = args.workers + (backups if with_backups else 0)
     return backups, total
 
 
@@ -59,7 +69,9 @@ def build_config(args) -> TrainConfig:
                                       num_workers=args.workers,
                                       backup_workers=backups,
                                       deadline_s=deadline,
-                                      softsync_c=softsync_c),
+                                      softsync_c=softsync_c,
+                                      dynamic_window=(args.dynamic_window
+                                                      or 32)),
         optimizer=OptimizerConfig(name=args.optimizer,
                                   learning_rate=args.lr,
                                   scale_lr_with_workers=True,
@@ -72,14 +84,27 @@ def build_config(args) -> TrainConfig:
         seed=args.seed, total_steps=args.steps, log_every=10,
         chunk_size=args.chunk_size,
         straggler_backend=args.straggler_backend,
-        prefetch_depth=args.prefetch_depth)
+        prefetch_depth=args.prefetch_depth,
+        faults=FaultConfig(spec=args.faults or "", seed=args.fault_seed,
+                           supervise=args.supervise,
+                           max_restarts=args.max_restarts))
 
 
 def _validate(ap: argparse.ArgumentParser, args) -> None:
     """Reject argument combinations that would silently do nothing."""
-    if args.backups is not None and args.strategy != "backup":
-        ap.error(f"--backups only applies to --strategy backup "
-                 f"(got --strategy {args.strategy})")
+    if args.backups is not None and args.strategy not in ("backup",
+                                                          "dynamic_backup"):
+        ap.error(f"--backups only applies to --strategy backup or "
+                 f"dynamic_backup (got --strategy {args.strategy})")
+    if args.dynamic_window is not None and args.strategy != "dynamic_backup":
+        ap.error(f"--dynamic-window only applies to --strategy "
+                 f"dynamic_backup (got --strategy {args.strategy})")
+    if args.strategy == "dynamic_backup" and args.straggler_backend != "host":
+        ap.error("--strategy dynamic_backup selects on the host (stateful "
+                 "adaptation): --straggler-backend must be host")
+    if args.faults and args.straggler_backend != "host":
+        ap.error("--faults composes with host-planned arrivals only: "
+                 "--straggler-backend must be host")
     if args.deadline is not None and args.strategy != "timeout":
         ap.error(f"--deadline only applies to --strategy timeout "
                  f"(got --strategy {args.strategy})")
@@ -156,6 +181,22 @@ def main(argv=None) -> None:
     ap.add_argument("--prefetch-depth", type=int, default=1,
                     help="chunks speculatively built ahead of the device "
                          "dispatch (chunked loop; 1 = double buffering)")
+    ap.add_argument("--dynamic-window", type=int, default=None,
+                    help="sliding window of steps the adaptive cutoff is "
+                         "estimated over (dynamic_backup only; default 32)")
+    ap.add_argument("--faults", default=None,
+                    help="chaos plan spec, e.g. 'crash@10:w2,slow@5:w0,"
+                         "ckpt_io@20,preempt@30' or 'crash=2,slow=3' for "
+                         "seeded-random placement (docs/robustness.md)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for random fault placement and the "
+                         "deterministic recovery log")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the recovery supervisor: injected/real "
+                         "crashes restore the last good checkpoint and "
+                         "continue (repro.train.supervisor)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="supervisor restart budget before giving up")
     args = ap.parse_args(argv)
     _validate(ap, args)
 
@@ -164,8 +205,15 @@ def main(argv=None) -> None:
     if resume:
         from repro.train import checkpoint as ckpt_lib
         print(f"[train] resumed at step {ckpt_lib.latest_step(args.ckpt)}")
-    res = run_experiment(cfg, latency=PaperCalibrated(), resume=resume,
-                         save_final=True)
+    if args.supervise:
+        from repro.train.supervisor import run_supervised
+        res = run_supervised(cfg, latency=PaperCalibrated())
+    else:
+        res = run_experiment(cfg, latency=PaperCalibrated(), resume=resume,
+                             save_final=True)
+    for e in res.recovery_log:
+        fields = " ".join(f"{k}={v}" for k, v in e.items() if k != "event")
+        print(f"[train] recovery: {e['event']} {fields}")
     for m in res.metrics:
         print(f"[train] step {m['step']:5d} loss {m['loss']:.4f} "
               f"sim {m['sim_time']:8.1f}s selected {m['selected']} "

@@ -75,6 +75,7 @@ import numpy as np
 from repro.configs.base import TrainConfig
 from repro.core import coordination
 from repro.core import ema as ema_lib
+from repro.core import faults as faults_lib
 from repro.core import registry
 from repro.core import straggler_jax
 from repro.core.events import StragglerSimulator
@@ -105,18 +106,41 @@ class TrainResult:
     # staleness of applied gradients (0 for synchronous strategies).
     mean_selected: float = 0.0
     mean_staleness: float = 0.0
+    # structured fault/recovery events (chaos engine + supervisor) — the
+    # schema is docs/api.md "Recovery events"; empty without fault injection.
+    # Deterministic in (fault spec, fault seed): no wall-clock fields.
+    recovery_log: List[Dict] = dataclasses.field(default_factory=list)
+
+
+def _normalize_kills(kill_worker_at: Optional[Dict[int, Any]]
+                     ) -> Dict[int, List[int]]:
+    """{step: worker | [workers]} -> {step: [workers]} (back-compat: the
+    original API took one worker id per step)."""
+    out: Dict[int, List[int]] = {}
+    for s, ws in (kill_worker_at or {}).items():
+        if isinstance(ws, (list, tuple, np.ndarray)):
+            out[int(s)] = [int(w) for w in ws]
+        else:
+            out[int(s)] = [int(ws)]
+    return out
 
 
 class Trainer:
     def __init__(self, cfg: TrainConfig, latency: Optional[LatencyModel] = None,
                  data_cfg: Optional[SyntheticLMConfig] = None,
-                 model=None, batch_fn: Optional[Callable] = None):
+                 model=None, batch_fn: Optional[Callable] = None,
+                 injector: Optional[faults_lib.FaultInjector] = None):
         """``model``/``batch_fn`` override the config-derived model and
         per-worker batch source (event mode only) — how non-LM rigs like
         the §2.1 MNIST staleness experiment route through run_experiment.
-        batch_fn(worker, draw_index) -> batch dict."""
+        batch_fn(worker, draw_index) -> batch dict.
+
+        ``injector`` attaches a chaos-engine fault plan (repro.core.faults);
+        the supervisor owns it across restarts so faults fire at most once.
+        """
         self.cfg = cfg
         self.latency = latency or PaperCalibrated()
+        self.injector = injector
         self.restarts = 0
         self.sim_time = 0.0
         self.metrics: List[Dict] = []
@@ -182,6 +206,16 @@ class Trainer:
         if cfg.straggler_backend not in ("host", "device"):
             raise ValueError(f"unknown straggler_backend "
                              f"{cfg.straggler_backend!r} (host|device)")
+        if (cfg.straggler_backend == "device"
+                and not getattr(self.strategy, "device_select_supported", True)):
+            raise ValueError(
+                f"strategy {cfg.aggregation.strategy!r} selects on the host "
+                "(stateful adaptation has no traceable select_jax); use "
+                "straggler_backend='host'")
+        if self.injector is not None and cfg.straggler_backend == "device":
+            raise ValueError(
+                "fault injection composes with host-planned arrivals only: "
+                "straggler_backend must be 'host' when cfg.faults is active")
         if self._spmd:
             # SPMD execution engine: workers over the mesh 'data' axis,
             # masked aggregation as a collective (docs/spmd.md). Masks
@@ -368,6 +402,10 @@ class Trainer:
             "restarts": self.restarts,
             "means": self._mean_meta(),
         }
+        # adaptive strategies (dynamic_backup) persist their window/cutoff
+        # so a supervisor restore resumes the adapted n, not the config's
+        if hasattr(self.strategy, "state_dict"):
+            meta["strategy_state"] = self.strategy.state_dict()
         if self.strategy.kind == "event":
             # the run loop checkpoints right after an applied update, where
             # the softsync window is empty by construction; a mid-window
@@ -396,8 +434,16 @@ class Trainer:
             }
         else:
             meta["data_state"] = self.pipeline.state.save()
-        return ckpt_lib.save(self.cfg.checkpoint.directory, self.step,
-                             self._state_tree(), meta, self.cfg.checkpoint.keep)
+            meta["dead_workers"] = [int(w) for w in
+                                    np.nonzero(self.sim.dead)[0]]
+        inj = self.injector
+        return ckpt_lib.save(
+            self.cfg.checkpoint.directory, self.step, self._state_tree(),
+            meta, self.cfg.checkpoint.keep,
+            retries=getattr(self.cfg.checkpoint, "write_retries", 3),
+            backoff_s=getattr(self.cfg.checkpoint, "retry_backoff_s", 0.01),
+            io_check=inj.ckpt_io_check if inj is not None else None,
+            on_retry=inj.on_ckpt_retry(self.step) if inj is not None else None)
 
     def restore_checkpoint(self, step: Optional[int] = None) -> None:
         # manifest first: the event-mode template depends on saved metadata
@@ -420,6 +466,9 @@ class Trainer:
         self._sel_count = int(means.get("sel_count", 0))
         self._stal_sum = float(means.get("stal_sum", 0.0))
         self._stal_count = int(means.get("stal_count", 0))
+        if (hasattr(self.strategy, "load_state_dict")
+                and manifest.get("strategy_state")):
+            self.strategy.load_state_dict(manifest["strategy_state"])
         if self.strategy.kind == "event":
             self._restore_event_state(tree, manifest["event"])
         else:
@@ -427,6 +476,15 @@ class Trainer:
             # replay-exact resume: the straggler simulator is deterministic
             # in (seed, step), so aligning its step restores the arrivals
             self.sim.reset_to_step(self.step)
+            # re-apply recorded deaths — but only while the cluster shape
+            # is unchanged: a rescale renumbers workers, and its rebuild
+            # intentionally restarts with everyone alive
+            if (manifest.get("num_workers") == self.cfg.aggregation.num_workers
+                    and manifest.get("backup_workers")
+                    == self.cfg.aggregation.backup_workers):
+                for w in manifest.get("dead_workers", []):
+                    if 0 <= int(w) < self.strategy.total_workers:
+                        self.sim.kill_worker(int(w))
 
     def _restore_event_state(self, tree, ev_meta: Dict) -> None:
         self._init_event_state()
@@ -516,6 +574,7 @@ class Trainer:
             w -= 1
         self.save_checkpoint()
         prev_restarts = self.restarts
+        prev_total = self.cfg.aggregation.total_workers
         plan = elastic.plan_rescale(self.cfg, w)
         self.cfg = elastic.apply_rescale(self.cfg, plan)
         if self._spmd:
@@ -532,13 +591,110 @@ class Trainer:
         self._build()
         self.restore_checkpoint()
         self.restarts = prev_restarts + 1
+        if self.injector is not None:
+            self.injector.record("rescale", step=self.step,
+                                 from_workers=prev_total,
+                                 to_workers=self.cfg.aggregation.total_workers)
+            # the rescaled cluster is renumbered and starts healthy: the
+            # injector's per-worker effects refer to ids that no longer exist
+            self.injector.dead.clear()
+            self.injector.slow_active.clear()
+
+    # -- fault injection (the chaos engine's Trainer-side primitives) ---------
+
+    def fault_kill(self, worker: int) -> None:
+        """Permanent worker crash, in whichever mode is running."""
+        if self.strategy.kind == "mask":
+            self.sim.kill_worker(worker)
+        else:
+            self._kill_event_worker(worker)
+
+    def fault_slowdown(self, worker: int, factor: float) -> None:
+        """Latency spike on one worker (factor=1.0 restores health)."""
+        if self.strategy.kind == "mask":
+            self.sim.set_slowdown(worker, factor)
+        else:
+            self._sched.set_slowdown(worker, factor)
+
+    def fault_revive(self, worker: int) -> None:
+        """A crashed worker rejoins with the *current* params."""
+        if self.strategy.kind == "mask":
+            self.sim.revive_worker(worker)
+            return
+        self._event_dead.discard(worker)
+        # fresh read copy at the live version; next arrival from now
+        if self._event_fused:
+            self._workers_stacked = jax.tree_util.tree_map(
+                lambda ws, p: ws.at[worker].set(p),
+                self._workers_stacked, self.params)
+        else:
+            self._read_params[worker] = self.params
+        self._read_version[worker] = self.step
+        self._sched.revive_worker(worker, self.sim_time)
+
+    def _event_window_empty(self) -> bool:
+        """True when no softsync-style window is buffering gradients — the
+        precondition for an event-mode checkpoint (see save_checkpoint)."""
+        if self.strategy.kind != "event":
+            return True
+        state = self._plan_state if self._event_fused else self._ev_state
+        return not (getattr(state, "pending", None)
+                    or getattr(state, "pending_stals", None))
+
+    def _apply_faults(self, step: int) -> None:
+        """Fire every due fault from the chaos plan (repro.core.faults).
+
+        Called at chunk boundaries in every run loop; ``_chunk_len_at``
+        forces a boundary at each pending fault step, so faults land on
+        the same step in the per-step, fused, and SPMD backends."""
+        if self.injector is None:
+            return
+        inj = self.injector
+        w_total = self.strategy.total_workers
+        for ev in inj.take_due(step):
+            w = ev.worker % w_total if ev.worker >= 0 else ev.worker
+            if (ev.kind in ("crash", "slowdown", "restart")
+                    and self.strategy.kind == "event"
+                    and not self.strategy.uses_clock):
+                raise ValueError("failure injection does not apply to serial "
+                                 "rigs (the staleness strategy has a single "
+                                 "logical worker)")
+            if ev.kind == "crash":
+                if w not in inj.dead:
+                    self.fault_kill(w)
+                    inj.note_crash(step, w)
+            elif ev.kind == "slowdown":
+                self.fault_slowdown(w, ev.factor)
+                inj.note_slowdown(step, w, ev.factor, ev.duration)
+            elif ev.kind == "slow_end":
+                inj.note_slow_end(w)
+                self.fault_slowdown(w, 1.0)
+            elif ev.kind == "restart":
+                if w in inj.dead:
+                    self.fault_revive(w)
+                    inj.note_restart(step, w)
+            elif ev.kind == "ckpt_io":
+                inj.arm_ckpt_failures(step, ev.fails)
+            elif ev.kind == "preempt":
+                if not self._event_window_empty():
+                    # an event checkpoint is only legal right after an
+                    # applied update; push the notice to the next one
+                    inj.defer(ev, step + 1)
+                    continue
+                ckpted = False
+                if ev.grace:
+                    self.save_checkpoint()
+                    ckpted = True
+                inj.record("preempt", step=step, grace=ckpted)
+                raise faults_lib.Preemption(step, ckpted)
 
     # -- the loop -------------------------------------------------------------
 
-    def run(self, num_steps: int, kill_worker_at: Optional[Dict[int, int]] = None,
+    def run(self, num_steps: int, kill_worker_at: Optional[Dict[int, Any]] = None,
             min_alive_behavior: str = "rescale") -> TrainResult:
-        """kill_worker_at: {step: worker_id} failure injections."""
-        kill_worker_at = dict(kill_worker_at or {})
+        """kill_worker_at: {step: worker_id | [worker_ids]} failure
+        injections (a correlated outage kills several workers at once)."""
+        kill_worker_at = _normalize_kills(kill_worker_at)
         target = self.step + num_steps
         if self.strategy.kind == "event":
             if self._event_fused:
@@ -547,12 +703,18 @@ class Trainer:
                 self._run_event(target, kill_worker_at)
             return self._result()
         while self.step < target:
+            self._apply_faults(self.step)
             if self.step in kill_worker_at:
                 # pop on application (as the event loop does): a rescale
                 # renumbers the workers, so the entry must not re-apply
                 # to the rebuilt, smaller simulator on the next pass
-                self.sim.kill_worker(kill_worker_at.pop(self.step))
-            if self.sim.alive < self.cfg.aggregation.num_workers:
+                for w in kill_worker_at.pop(self.step):
+                    self.sim.kill_worker(w)
+            # adaptive strategies (dynamic_backup) expose a lower liveness
+            # floor than N — the protocol itself degrades gracefully
+            min_alive = getattr(self.strategy, "min_alive",
+                                self.cfg.aggregation.num_workers)
+            if self.sim.alive < min_alive:
                 if min_alive_behavior == "rescale":
                     self.rescale(self.sim.alive)
                     continue
@@ -574,14 +736,17 @@ class Trainer:
             self.params, self.ema, self.metrics, self.sim_time, self.step,
             self.restarts,
             mean_selected=self._sel_sum / max(self._sel_count, 1),
-            mean_staleness=self._stal_sum / max(self._stal_count, 1))
+            mean_staleness=self._stal_sum / max(self._stal_count, 1),
+            recovery_log=(list(self.injector.log)
+                          if self.injector is not None else []))
 
     def _chunk_len_at(self, step: int, target: int,
                       kill_worker_at: Dict[int, int]) -> int:
         """Steps from ``step`` until the next forced boundary: run target,
-        checkpoint cadence, or kill injection — so failure handling and
-        replay-exact resume semantics are untouched by chunking. Also used
-        to predict the NEXT chunk's length for the prefetcher."""
+        checkpoint cadence, kill injection, or a pending chaos-plan fault
+        — so failure handling and replay-exact resume semantics are
+        untouched by chunking. Also used to predict the NEXT chunk's
+        length for the prefetcher."""
         k = min(self.cfg.chunk_size, target - step)
         every = self.cfg.checkpoint.every_steps
         if every > 0:
@@ -589,6 +754,10 @@ class Trainer:
         for s in kill_worker_at:
             if step < s < step + k:
                 k = s - step
+        if self.injector is not None:
+            for s in self.injector.upcoming_steps():
+                if step < s < step + k:
+                    k = s - step
         return max(k, 1)
 
     def _next_chunk_specs(self, k: int, target: int,
@@ -710,8 +879,10 @@ class Trainer:
                              "rigs (the staleness strategy has a single "
                              "logical worker)")
         while self.step < target:
+            self._apply_faults(self.step)
             if self.step in kill_worker_at:
-                self._kill_event_worker(kill_worker_at.pop(self.step))
+                for kw in kill_worker_at.pop(self.step):
+                    self._kill_event_worker(kw)
             t, w = self._sched.pop()
             batch = self._event_batch(w, int(self._draws[w]))
             self._draws[w] += 1
@@ -774,8 +945,10 @@ class Trainer:
                              "rigs (the staleness strategy has a single "
                              "logical worker)")
         while self.step < target:
+            self._apply_faults(self.step)
             if self.step in kill_worker_at:
-                self._kill_event_worker(kill_worker_at.pop(self.step))
+                for kw in kill_worker_at.pop(self.step):
+                    self._kill_event_worker(kw)
             u = self._chunk_len_at(self.step, target, kill_worker_at)
             plan = coordination.plan_events(
                 self.strategy, self._sched, self._plan_state,
@@ -826,20 +999,35 @@ def run_experiment(cfg: TrainConfig, *, latency: Optional[LatencyModel] = None,
                    data_cfg: Optional[SyntheticLMConfig] = None,
                    model=None, batch_fn: Optional[Callable] = None,
                    resume: bool = False, save_final: bool = False,
-                   kill_worker_at: Optional[Dict[int, int]] = None,
-                   min_alive_behavior: str = "rescale") -> TrainResult:
-    """Run any coordination regime — full_sync, backup, timeout, async,
-    softsync, staleness — from ``cfg.aggregation`` alone.
+                   kill_worker_at: Optional[Dict[int, Any]] = None,
+                   min_alive_behavior: str = "rescale",
+                   injector: Optional[faults_lib.FaultInjector] = None
+                   ) -> TrainResult:
+    """Run any coordination regime — full_sync, backup, timeout,
+    dynamic_backup, async, softsync, staleness — from ``cfg.aggregation``
+    alone.
 
     Builds the Trainer (strategy via the registry), initializes or resumes
     state, runs ``cfg.total_steps`` steps (PS updates in event mode), and
     returns the unified :class:`TrainResult`. ``model``/``batch_fn`` plug
     non-LM problems into event regimes (e.g. the MNIST staleness rig).
+
+    ``cfg.faults.spec`` attaches a chaos plan (an ``injector`` argument
+    overrides it — the supervisor passes its own so faults fire at most
+    once across restarts). An injected ``preempt``/crash propagates out of
+    this call; ``repro.train.supervisor.run_supervised`` is the entry
+    point that catches it, restores, and continues.
     """
+    if injector is None:
+        injector = faults_lib.build_injector(
+            getattr(cfg, "faults", None), num_steps=cfg.total_steps,
+            num_workers=cfg.aggregation.total_workers)
     tr = Trainer(cfg, latency=latency, data_cfg=data_cfg, model=model,
-                 batch_fn=batch_fn)
+                 batch_fn=batch_fn, injector=injector)
     if resume and ckpt_lib.latest_step(cfg.checkpoint.directory) is not None:
         tr.restore_checkpoint()
+        if injector is not None:
+            injector.resync(tr)
     else:
         tr.init_state()
     res = tr.run(cfg.total_steps, kill_worker_at=kill_worker_at,

@@ -1,0 +1,100 @@
+"""Recovery supervisor: drive an experiment to completion through faults.
+
+``run_supervised(cfg)`` wraps the Trainer the way a cluster scheduler
+wraps a job (docs/robustness.md): build, run, and when the run dies —
+an injected :class:`repro.core.faults.Preemption`, a worker-exhaustion
+``RuntimeError``, a checkpoint-write ``OSError`` that outlived its
+retries, or restored-state corruption — restore the last verified-good
+checkpoint (``checkpoint.find_good_step`` walks back past corrupt ones)
+and continue, up to ``cfg.faults.max_restarts`` times.
+
+The supervisor owns the :class:`~repro.core.faults.FaultInjector` across
+restarts, which is what makes recovery deterministic: faults fire at
+most once (a restored run does not replay already-injected faults), and
+``injector.resync`` re-applies their *persistent* effects — permanent
+deaths, still-active slowdown windows — to each freshly rebuilt Trainer.
+When permanent deaths push the live count below the strategy's floor,
+the Trainer's own elastic layer (``elastic.plan_rescale``) shrinks the
+cluster; the supervisor keeps the rescaled config for later restarts.
+
+Every recovery action lands in the structured log returned as
+``TrainResult.recovery_log`` (schema: docs/api.md "Recovery events").
+Log entries carry steps/workers/attempt counts only — never wall-clock —
+so the same (fault spec, fault seed) yields a bit-identical log.
+``recover_times`` collects wall-clock recovery durations out-of-band for
+MTTR benchmarking (benchmarks/bench_recovery.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional
+
+from repro.configs.base import TrainConfig
+from repro.core import faults as faults_lib
+from repro.core.straggler import LatencyModel
+from repro.data.synthetic_lm import SyntheticLMConfig
+from repro.train import checkpoint as ckpt_lib
+from repro.train.loop import Trainer, TrainResult
+
+# the failure surface a supervisor restart can actually fix: injected
+# preemptions, dead-worker exhaustion / corruption (RuntimeError covers
+# CheckpointCorruption), and write failures that outlived their retries
+RECOVERABLE = (faults_lib.Preemption, RuntimeError, OSError)
+
+
+def run_supervised(cfg: TrainConfig, *,
+                   latency: Optional[LatencyModel] = None,
+                   data_cfg: Optional[SyntheticLMConfig] = None,
+                   model=None, batch_fn: Optional[Callable] = None,
+                   injector: Optional[faults_lib.FaultInjector] = None,
+                   max_restarts: Optional[int] = None,
+                   recover_times: Optional[List[float]] = None
+                   ) -> TrainResult:
+    """Run ``cfg`` to ``cfg.total_steps``, restarting through failures.
+
+    Mirrors :func:`repro.train.loop.run_experiment`'s keyword surface;
+    ``max_restarts`` overrides ``cfg.faults.max_restarts``. Raises the
+    final error (after logging a ``give_up`` event) once the restart
+    budget is exhausted.
+    """
+    if injector is None:
+        injector = faults_lib.build_injector(
+            getattr(cfg, "faults", None), num_steps=cfg.total_steps,
+            num_workers=cfg.aggregation.total_workers)
+    budget = (getattr(cfg.faults, "max_restarts", 3)
+              if max_restarts is None else max_restarts)
+    attempts = 0
+    resume = False
+    crash_t: Optional[float] = None
+    while True:
+        tr = Trainer(cfg, latency=latency, data_cfg=data_cfg, model=model,
+                     batch_fn=batch_fn, injector=injector)
+        if resume:
+            good = ckpt_lib.find_good_step(cfg.checkpoint.directory)
+            if good is not None:
+                tr.restore_checkpoint(good)
+            else:
+                # nothing verified-good on disk: recovery = fresh start
+                tr.init_state()
+            if injector is not None:
+                injector.record("restore", step=tr.step, attempt=attempts)
+        else:
+            tr.init_state()
+        if injector is not None:
+            injector.resync(tr)
+        if crash_t is not None and recover_times is not None:
+            recover_times.append(time.monotonic() - crash_t)
+        crash_t = None
+        try:
+            return tr.run(max(cfg.total_steps - tr.step, 0))
+        except RECOVERABLE as e:
+            crash_t = time.monotonic()
+            attempts += 1
+            cfg = tr.cfg          # keep any elastic rescale the run applied
+            if attempts > budget:
+                if injector is not None:
+                    injector.record("give_up", step=tr.step,
+                                    restarts=attempts,
+                                    error=type(e).__name__)
+                raise
+            resume = True

@@ -1,5 +1,10 @@
-"""Checkpoint/restore, atomicity, keep-k, elastic resume, data-state resume."""
+"""Checkpoint/restore, atomicity, keep-k, elastic resume, data-state resume,
+and the self-healing layer: checksums, write retries, crash-mid-save
+survival, and walk-back restore past corrupt checkpoints."""
 import os
+import signal
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -99,6 +104,127 @@ def test_elastic_rescale_on_failures(tmp_path):
     assert res.restarts == 1
     assert tr.cfg.aggregation.total_workers <= 3
     assert all(np.isfinite(m["loss"]) for m in res.metrics)
+
+
+# ---------------------------------------------------------------------------
+# Self-healing layer (docs/robustness.md)
+# ---------------------------------------------------------------------------
+
+
+def test_latest_dangling_pointer_falls_back(tmp_path):
+    """A LATEST pointing at a deleted dir must not strand the good
+    checkpoints still on disk."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 3, t)
+    ckpt.save(str(tmp_path), 7, t)
+    import shutil
+    shutil.rmtree(tmp_path / "step_00000007")   # LATEST now dangles
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    template = jax.tree_util.tree_map(jnp.zeros_like, t)
+    _, manifest = ckpt.restore(str(tmp_path), template)
+    assert manifest["step"] == 3
+
+
+def test_latest_missing_falls_back_to_scan(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 5, t)
+    os.remove(tmp_path / "LATEST")
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_restore_walks_back_past_corruption(tmp_path):
+    """A truncated arrays.npz in the newest checkpoint falls back to the
+    last verified-good one instead of failing the restore."""
+    ckpt.save(str(tmp_path), 1, _tree(seed=1))
+    ckpt.save(str(tmp_path), 2, _tree(seed=2))
+    with open(tmp_path / "step_00000002" / "arrays.npz", "wb") as f:
+        f.write(b"not a zip file")
+    assert ckpt.find_good_step(str(tmp_path)) == 1
+    template = jax.tree_util.tree_map(jnp.zeros_like, _tree())
+    restored, manifest = ckpt.restore(str(tmp_path), template)
+    assert manifest["step"] == 1
+    ref = jax.tree_util.tree_leaves(_tree(seed=1))
+    for a, b in zip(ref, jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checksum_detects_silent_bitflip(tmp_path):
+    """A bit-flip that keeps the npz readable is caught by the per-array
+    CRC32, not silently loaded."""
+    t = {"a": jnp.ones((4,), jnp.float32)}
+    ckpt.save(str(tmp_path), 1, t)
+    path = tmp_path / "step_00000001" / "arrays.npz"
+    flat = dict(np.load(path))
+    flat["a"][0] = 123.0                       # corrupt, same shape/dtype
+    np.savez(path, **flat)
+    assert not ckpt.verify(str(tmp_path), 1)
+    with pytest.raises(ckpt.CheckpointCorruption):
+        ckpt.restore(str(tmp_path), {"a": jnp.zeros(4)}, 1, fallback=False)
+
+
+def test_save_retries_transient_write_failures(tmp_path):
+    """io_check failures below the retry budget back off and succeed;
+    each retry is observable via on_retry."""
+    fails = {"n": 2}
+
+    def io_check():
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient")
+
+    seen = []
+    ckpt.save(str(tmp_path), 1, _tree(), retries=3,
+              io_check=io_check, on_retry=lambda a, e: seen.append(a),
+              sleep=lambda s: None)
+    assert seen == [0, 1]
+    assert ckpt.verify(str(tmp_path), 1)
+    # no abandoned tmp dirs
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+
+
+def test_save_raises_after_retry_budget(tmp_path):
+    def io_check():
+        raise OSError("disk on fire")
+
+    with pytest.raises(OSError):
+        ckpt.save(str(tmp_path), 1, _tree(), retries=2,
+                  io_check=io_check, sleep=lambda s: None)
+    assert ckpt.latest_step(str(tmp_path)) is None
+
+
+def test_crash_mid_save_leaves_previous_checkpoint_good(tmp_path):
+    """SIGKILL during a checkpoint write (a real process death, not an
+    exception) must leave the previous checkpoint restorable."""
+    code = f"""
+import os, signal
+import jax.numpy as jnp
+from repro.train import checkpoint as ckpt
+d = {str(tmp_path)!r}
+tree = {{"a": jnp.arange(8, dtype=jnp.float32)}}
+ckpt.save(d, 1, tree)
+
+def die():
+    os.kill(os.getpid(), signal.SIGKILL)   # mid-save, tmp dir exists
+
+ckpt.save(d, 2, tree, io_check=die)
+"""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == -signal.SIGKILL
+    # the tmp dir from the killed write is on disk; step 1 is intact
+    assert [d for d in os.listdir(tmp_path) if d.startswith(".tmp_ckpt_")]
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    restored, manifest = ckpt.restore(str(tmp_path),
+                                      {"a": jnp.zeros(8)})
+    assert manifest["step"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(8.0))
+    # the next successful save sweeps the abandoned tmp dir
+    ckpt.save(str(tmp_path), 3, {"a": jnp.arange(8, dtype=jnp.float32)})
+    assert not [d for d in os.listdir(tmp_path)
+                if d.startswith(".tmp_ckpt_")]
 
 
 def test_data_pipeline_state_resumes(tmp_path):

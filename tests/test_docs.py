@@ -47,6 +47,33 @@ def test_every_strategy_documented_in_api_md():
 
 
 # ---------------------------------------------------------------------------
+# Fault taxonomy / recovery-log schema <-> docs
+# ---------------------------------------------------------------------------
+
+
+def test_every_fault_kind_documented_in_robustness_md():
+    from repro.core import faults
+
+    doc = _read("docs", "robustness.md")
+    missing = [k for k in faults.FAULT_KINDS if f"`{k}`" not in doc]
+    assert not missing, (
+        f"fault kinds {missing} exist in repro.core.faults.FAULT_KINDS but "
+        f"are not documented in docs/robustness.md (the fault taxonomy "
+        f"table)")
+
+
+def test_every_recovery_event_documented_in_api_md():
+    from repro.core import faults
+
+    api = _read("docs", "api.md")
+    missing = [e for e in faults.RECOVERY_EVENTS if f"`{e}`" not in api]
+    assert not missing, (
+        f"recovery-log events {missing} exist in "
+        f"repro.core.faults.RECOVERY_EVENTS but are not documented in "
+        f"docs/api.md (the 'Recovery events' schema table)")
+
+
+# ---------------------------------------------------------------------------
 # BENCH_*.json <-> docs/perf.md schema section
 # ---------------------------------------------------------------------------
 
@@ -69,7 +96,7 @@ def _normalize(key: str) -> str:
 def test_bench_files_exist():
     names = {os.path.basename(p) for p in _bench_files()}
     assert {"BENCH_loop.json", "BENCH_events.json",
-            "BENCH_spmd.json"} <= names
+            "BENCH_spmd.json", "BENCH_recovery.json"} <= names
 
 
 @pytest.mark.parametrize("path", _bench_files(),

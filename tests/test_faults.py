@@ -1,0 +1,249 @@
+"""Chaos engine: plan determinism, fault application across backends,
+multi-kill back-compat, and the dynamic_backup adaptive strategy."""
+import os
+
+import numpy as np
+import pytest
+
+from benchmarks.common import tiny_lm_config
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                FaultConfig, OptimizerConfig, ShapeConfig,
+                                TrainConfig, replace)
+from repro.core import faults, registry
+from repro.core.coordination import DynamicBackup
+from repro.core.straggler import Uniform
+from repro.train.loop import run_experiment
+from repro.train.supervisor import run_supervised
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / spec parsing
+# ---------------------------------------------------------------------------
+
+
+def test_plan_from_spec_explicit_and_random():
+    plan = faults.plan_from_spec("crash@5:w1,slow@3:w0,ckpt_io@7,preempt@9",
+                                 num_steps=20, num_workers=4)
+    kinds = [(e.kind, e.step, e.worker) for e in plan.events]
+    assert kinds == [("slowdown", 3, 0), ("crash", 5, 1),
+                     ("ckpt_io", 7, -1), ("preempt", 9, -1)]
+    # count form draws seeded-random placements, deterministically
+    p1 = faults.plan_from_spec("crash=2,slow=3", num_steps=50, num_workers=8,
+                               seed=11)
+    p2 = faults.plan_from_spec("crash=2,slow=3", num_steps=50, num_workers=8,
+                               seed=11)
+    assert p1 == p2
+    assert len(p1) == 5
+    p3 = faults.plan_from_spec("crash=2,slow=3", num_steps=50, num_workers=8,
+                               seed=12)
+    assert p1 != p3
+
+
+def test_plan_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        faults.plan_from_spec("meteor@3", num_steps=10, num_workers=2)
+
+
+def test_injector_fires_at_most_once():
+    plan = faults.plan_from_spec("crash@5:w1", num_steps=10, num_workers=4)
+    inj = faults.FaultInjector(plan)
+    assert [e.kind for e in inj.take_due(5)] == ["crash"]
+    assert inj.take_due(5) == []       # popped: a restart does not replay
+    assert inj.take_due(9) == []
+
+
+def test_injector_upcoming_steps_cover_slow_windows():
+    plan = faults.plan_from_spec("slow@3:w0", num_steps=20, num_workers=4)
+    inj = faults.FaultInjector(plan)
+    assert inj.upcoming_steps() == [3]
+    [ev] = inj.take_due(3)
+    inj.note_slowdown(3, ev.worker, ev.factor, ev.duration)
+    # the window's end is now a forced chunk boundary
+    assert inj.upcoming_steps() == [3 + ev.duration]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end chaos runs
+# ---------------------------------------------------------------------------
+
+
+def _cfg(tmp_path, strategy="backup", spec="", chunk=4, steps=16, seed=0,
+         fault_seed=7, every=4, **agg):
+    if strategy in ("backup", "dynamic_backup"):
+        agg.setdefault("backup_workers", 2)
+    return TrainConfig(
+        model=tiny_lm_config(),
+        shape=ShapeConfig("t", 8, 12, "train"),
+        aggregation=AggregationConfig(strategy=strategy, num_workers=4, **agg),
+        optimizer=OptimizerConfig(name="sgd", learning_rate=0.1,
+                                  scale_lr_with_workers=False),
+        checkpoint=CheckpointConfig(directory=os.path.join(str(tmp_path),
+                                                           "ck"),
+                                    every_steps=every),
+        seed=seed, total_steps=steps, chunk_size=chunk, log_every=4,
+        faults=FaultConfig(spec=spec, seed=fault_seed))
+
+
+LAT = Uniform(1.0, 2.0)
+SPEC = "crash@5:w1,slow@3:w0,ckpt_io@7,preempt@10"
+
+
+def test_chaos_mask_mode_completes_with_identical_logs(tmp_path):
+    """The acceptance run: crashes + slowdowns + ckpt-write failures +
+    preemption complete under the supervisor, the final loss lands near
+    the fault-free run, and two same-seed runs log bit-identically."""
+    clean = run_experiment(_cfg(tmp_path / "clean"), latency=LAT)
+    r1 = run_supervised(_cfg(tmp_path / "a", spec=SPEC), latency=LAT)
+    r2 = run_supervised(_cfg(tmp_path / "b", spec=SPEC), latency=LAT)
+    assert r1.steps == clean.steps == 16
+    assert r1.recovery_log and r1.recovery_log == r2.recovery_log
+    events = [e["event"] for e in r1.recovery_log]
+    for expected in ("worker_crash", "worker_slowdown", "ckpt_io_fault",
+                     "ckpt_write_retry", "preempt", "restore"):
+        assert expected in events, f"missing {expected} in {events}"
+    assert abs(r1.metrics[-1]["loss"] - clean.metrics[-1]["loss"]) < 0.5
+
+
+@pytest.mark.parametrize("chunk", [1, 4])
+def test_chaos_event_mode_fused_matches_legacy(tmp_path, chunk):
+    """Crash/slowdown/restart/preempt in event mode: the fused scan and
+    the per-arrival loop recover to the identical final loss and log."""
+    spec = "crash@5:w1,slow@3:w0,restart@9:w1,preempt@12"
+    res = run_supervised(
+        _cfg(tmp_path / f"c{chunk}", strategy="async", spec=spec,
+             chunk=chunk), latency=LAT)
+    assert res.steps == 16
+    events = [e["event"] for e in res.recovery_log]
+    assert events.count("worker_crash") == 1
+    assert events.count("worker_restart") == 1
+    assert "preempt" in events and "restore" in events
+    assert np.isfinite(res.metrics[-1]["loss"])
+
+
+def test_chaos_event_fused_vs_legacy_same_loss(tmp_path):
+    spec = "crash@5:w1,slow@3:w0"
+    r_legacy = run_experiment(_cfg(tmp_path / "l", strategy="async",
+                                   spec=spec, chunk=1), latency=LAT)
+    r_fused = run_experiment(_cfg(tmp_path / "f", strategy="async",
+                                  spec=spec, chunk=4), latency=LAT)
+    assert r_legacy.recovery_log == r_fused.recovery_log
+    np.testing.assert_allclose(r_legacy.metrics[-1]["loss"],
+                               r_fused.metrics[-1]["loss"], rtol=1e-5)
+
+
+def test_slowdown_shifts_masks_not_streams(tmp_path):
+    """A slowdown spike changes who gets selected while active, and the
+    post-window arrivals return to the fault-free stream (multiplier
+    composes after sampling — the replay contract)."""
+    r0 = run_experiment(_cfg(tmp_path / "h", spec=""), latency=LAT)
+    r1 = run_experiment(_cfg(tmp_path / "s", spec="slow@2:w0"), latency=LAT)
+    assert r1.sim_time >= r0.sim_time   # the spike can only slow the run
+    [ev] = [e for e in r1.recovery_log if e["event"] == "worker_slowdown"]
+    assert (ev["step"], ev["worker"], ev["factor"]) == (2, 0, 4.0)
+    assert ev["until"] > 2
+
+
+def test_kill_worker_at_accepts_lists(tmp_path):
+    """Satellite: correlated outages — {step: [w, w]} kills both; the
+    scalar form keeps working."""
+    cfg = _cfg(tmp_path / "m", spec="", every=0)
+    r = run_experiment(cfg, latency=LAT, kill_worker_at={3: [4, 5]})
+    assert r.steps == 16
+    cfg2 = _cfg(tmp_path / "s2", spec="", every=0)
+    r2 = run_experiment(cfg2, latency=LAT, kill_worker_at={3: 4})
+    assert r2.steps == 16
+
+
+def test_faults_require_host_backend(tmp_path):
+    cfg = replace(_cfg(tmp_path, spec="crash@3:w0"),
+                  straggler_backend="device")
+    with pytest.raises(ValueError, match="host"):
+        run_experiment(cfg, latency=LAT)
+
+
+def test_faults_reject_serial_rigs(tmp_path):
+    cfg = _cfg(tmp_path, strategy="staleness", spec="crash@3:w0", chunk=1,
+               staleness_tau=1)
+    with pytest.raises(ValueError, match="serial"):
+        run_experiment(cfg, latency=LAT)
+
+
+# ---------------------------------------------------------------------------
+# dynamic_backup
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_backup_registered():
+    cfg = AggregationConfig(strategy="dynamic_backup", num_workers=4,
+                            backup_workers=2, dynamic_window=16)
+    s = registry.get_strategy(cfg)
+    assert isinstance(s, DynamicBackup)
+    assert s.total_workers == 6 and s.n == 4
+    assert registry.supports_spmd(s)
+
+
+def test_dynamic_backup_adapts_to_straggler_tail():
+    """A heavy tail (one worker 50x slower) drives the cutoff below full
+    sync; a uniform healthy cluster drives it up to full sync."""
+    s = DynamicBackup(num_workers=6, backups=0, window=8)
+    rng = np.random.RandomState(0)
+    for _ in range(16):
+        arr = rng.uniform(1.0, 1.2, size=6)
+        arr[5] *= 50.0                       # a persistent heavy straggler
+        s.select(arr)
+    assert s.n <= 5, f"tail not cut: n={s.n}"
+    s2 = DynamicBackup(num_workers=4, backups=2, window=8)
+    for _ in range(16):
+        s2.select(rng.uniform(1.0, 1.05, size=6))
+    assert s2.n == 6, f"healthy cluster should full-sync: n={s2.n}"
+
+
+def test_dynamic_backup_routes_around_dead_workers():
+    """+inf arrivals (crashes) zero out infeasible cutoffs with no special
+    casing; selection clamps to the live count immediately."""
+    s = DynamicBackup(num_workers=4, backups=0, window=4)
+    arr = np.array([1.0, 1.1, 1.2, np.inf])
+    mask, t = s.select(arr)
+    assert mask.sum() == 3 and np.isfinite(t)
+    for _ in range(6):
+        s.select(np.array([1.0, 1.1, 1.2, np.inf]))
+    assert s.n <= 3
+
+
+def test_dynamic_backup_state_roundtrip():
+    s = DynamicBackup(num_workers=4, backups=2, window=8)
+    rng = np.random.RandomState(3)
+    for _ in range(5):
+        s.select(rng.uniform(1, 2, size=6))
+    d = s.state_dict()
+    s2 = DynamicBackup(num_workers=4, backups=2, window=8)
+    s2.load_state_dict(d)
+    arr = rng.uniform(1, 2, size=6)
+    m1, t1 = s.select(arr.copy())
+    m2, t2 = s2.select(arr.copy())
+    np.testing.assert_array_equal(m1, m2)
+    assert t1 == t2 and s.n == s2.n
+
+
+def test_dynamic_backup_checkpoint_resume_keeps_adapted_n(tmp_path):
+    """The adapted cutoff survives save/restore via manifest
+    strategy_state (a restored run does not re-learn from scratch)."""
+    from repro.train.loop import Trainer
+    cfg = _cfg(tmp_path, strategy="dynamic_backup", chunk=1, steps=12,
+               dynamic_window=6)
+    tr = Trainer(cfg, latency=Uniform(1.0, 4.0))
+    tr.init_state()
+    tr.run(8)
+    tr.save_checkpoint()
+    n_saved = tr.strategy.n
+    tr2 = Trainer(cfg, latency=Uniform(1.0, 4.0))
+    tr2.restore_checkpoint()
+    assert tr2.strategy.n == n_saved
+    assert len(tr2.strategy.history) == len(tr.strategy.history)
+
+
+def test_dynamic_backup_rejects_device_backend(tmp_path):
+    cfg = replace(_cfg(tmp_path, strategy="dynamic_backup"),
+                  straggler_backend="device")
+    with pytest.raises(ValueError, match="host"):
+        run_experiment(cfg, latency=LAT)

@@ -1,0 +1,179 @@
+"""Recovery supervisor: restart budget, restore fallback, rescale under
+permanent deaths, and SPMD-backend chaos (subprocess)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from benchmarks.common import tiny_lm_config
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                FaultConfig, OptimizerConfig, ShapeConfig,
+                                TrainConfig, replace)
+from repro.core import faults
+from repro.core.straggler import Uniform
+from repro.train import checkpoint as ckpt_lib
+from repro.train.supervisor import run_supervised
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+LAT = Uniform(1.0, 2.0)
+
+
+def _cfg(tmp_path, spec="", steps=16, chunk=4, every=4, max_restarts=3,
+         **agg):
+    agg.setdefault("backup_workers", 2)
+    return TrainConfig(
+        model=tiny_lm_config(),
+        shape=ShapeConfig("t", 8, 12, "train"),
+        aggregation=AggregationConfig(strategy="backup", num_workers=4,
+                                      **agg),
+        optimizer=OptimizerConfig(name="sgd", learning_rate=0.1,
+                                  scale_lr_with_workers=False),
+        checkpoint=CheckpointConfig(directory=os.path.join(str(tmp_path),
+                                                           "ck"),
+                                    every_steps=every),
+        seed=0, total_steps=steps, chunk_size=chunk, log_every=4,
+        faults=FaultConfig(spec=spec, seed=7, max_restarts=max_restarts))
+
+
+def test_preempt_without_grace_restores_last_cadence_checkpoint(tmp_path):
+    """grace=False dies without a checkpoint; recovery rolls back to the
+    last cadence save and recomputes the lost steps."""
+    spec = "preempt@10"
+    cfg = _cfg(tmp_path, spec=spec)
+    inj = faults.FaultInjector(faults.FaultPlan(
+        (faults.FaultEvent("preempt", 10, grace=False),), seed=7))
+    res = run_supervised(cfg, latency=LAT, injector=inj)
+    assert res.steps == 16
+    restore = [e for e in res.recovery_log if e["event"] == "restore"]
+    assert restore == [{"event": "restore", "step": 8, "attempt": 1}]
+
+
+def test_restart_budget_exhaustion_gives_up(tmp_path):
+    """More preemptions than the budget: the supervisor logs give_up and
+    re-raises the Preemption."""
+    inj = faults.FaultInjector(faults.FaultPlan(
+        tuple(faults.FaultEvent("preempt", s, grace=False)
+              for s in (3, 5, 7)), seed=0))
+    cfg = _cfg(tmp_path, max_restarts=1, every=0)   # no cadence saves
+    with pytest.raises(faults.Preemption):
+        run_supervised(cfg, latency=LAT, injector=inj)
+    assert inj.log[-1]["event"] == "give_up"
+    assert inj.log[-1]["restarts"] == 2
+
+
+def test_recovery_without_any_checkpoint_restarts_fresh(tmp_path):
+    """Preempt before the first cadence save: nothing on disk, recovery is
+    a from-scratch restart that still completes."""
+    inj = faults.FaultInjector(faults.FaultPlan(
+        (faults.FaultEvent("preempt", 2, grace=False),), seed=0))
+    cfg = _cfg(tmp_path, every=0, steps=8)
+    res = run_supervised(cfg, latency=LAT, injector=inj)
+    assert res.steps == 8
+    assert {"event": "restore", "step": 0, "attempt": 1} in res.recovery_log
+
+
+def test_ckpt_io_exhausting_retries_is_recovered(tmp_path):
+    """A write failure burst larger than the retry budget kills the run
+    (InjectedIOError propagates); the supervisor restores and finishes."""
+    cfg = replace(_cfg(tmp_path, steps=16),
+                  checkpoint=CheckpointConfig(
+                      directory=os.path.join(str(tmp_path), "ck"),
+                      every_steps=4, write_retries=1, retry_backoff_s=0.0))
+    inj = faults.FaultInjector(faults.FaultPlan(
+        (faults.FaultEvent("ckpt_io", 5, fails=5),), seed=0))
+    res = run_supervised(cfg, latency=LAT, injector=inj)
+    assert res.steps == 16
+    events = [e["event"] for e in res.recovery_log]
+    assert "ckpt_io_fault" in events and "restore" in events
+    # the good checkpoint that recovery used predates the failed save
+    assert any(e["event"] == "restore" and e["step"] <= 4
+               for e in res.recovery_log)
+
+
+def test_permanent_deaths_trigger_rescale_under_supervision(tmp_path):
+    """Crashes past the backup pool: the elastic layer shrinks the
+    cluster (paper A.3 lr rule) and the run still completes."""
+    cfg = _cfg(tmp_path, spec="crash@3:w0,crash@5:w1,crash@7:w2", steps=16)
+    res = run_supervised(cfg, latency=LAT)
+    assert res.steps == 16
+    events = [e["event"] for e in res.recovery_log]
+    assert events.count("worker_crash") == 3
+    assert "rescale" in events
+    [rs] = [e for e in res.recovery_log if e["event"] == "rescale"]
+    assert rs["to_workers"] < rs["from_workers"]
+    assert np.isfinite(res.metrics[-1]["loss"])
+
+
+def test_corrupt_latest_checkpoint_walks_back_on_recovery(tmp_path):
+    """The newest checkpoint is corrupted between crash and restore: the
+    supervisor's find_good_step walks back to the previous one."""
+    inj = faults.FaultInjector(faults.FaultPlan(
+        (faults.FaultEvent("preempt", 10, grace=True),), seed=0))
+    cfg = _cfg(tmp_path, steps=16)
+
+    # corrupt the grace checkpoint the moment it is committed (the
+    # "preempt" record fires right after the grace save, before the
+    # supervisor's find_good_step runs)
+    orig_record = inj.record
+
+    def record_and_corrupt(event, **kw):
+        if event == "preempt":
+            p = os.path.join(cfg.checkpoint.directory, "step_00000010",
+                             "arrays.npz")
+            with open(p, "wb") as f:
+                f.write(b"garbage")
+        orig_record(event, **kw)
+
+    inj.record = record_and_corrupt
+    res = run_supervised(cfg, latency=LAT, injector=inj)
+    assert res.steps == 16
+    [restore] = [e for e in res.recovery_log if e["event"] == "restore"]
+    assert restore["step"] == 8          # walked past the corrupt step 10
+
+
+def test_supervised_spmd_chaos_subprocess(tmp_path):
+    """The chaos acceptance run on the SPMD backend (8 forced host
+    devices): crash + slowdown + preempt complete under supervision with
+    the same recovery log as the simulated backend."""
+    code = f"""
+import os
+from benchmarks.common import tiny_lm_config
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                ExecutionConfig, FaultConfig,
+                                OptimizerConfig, ShapeConfig, TrainConfig)
+from repro.core.straggler import Uniform
+from repro.train.supervisor import run_supervised
+
+def cfg(sub, backend):
+    return TrainConfig(
+        model=tiny_lm_config(),
+        shape=ShapeConfig("t", 8, 12, "train"),
+        aggregation=AggregationConfig(strategy="backup", num_workers=4,
+                                      backup_workers=2),
+        optimizer=OptimizerConfig(name="sgd", learning_rate=0.1,
+                                  scale_lr_with_workers=False),
+        checkpoint=CheckpointConfig(directory={str(tmp_path)!r} + "/" + sub,
+                                    every_steps=4),
+        execution=ExecutionConfig(backend=backend, mesh_data=6),
+        seed=0, total_steps=16, chunk_size=4, log_every=4,
+        faults=FaultConfig(spec="crash@5:w1,slow@3:w0,preempt@10", seed=7))
+
+lat = Uniform(1.0, 2.0)
+r_spmd = run_supervised(cfg("spmd", "spmd"), latency=lat)
+r_sim = run_supervised(cfg("sim", "sim"), latency=lat)
+assert r_spmd.steps == r_sim.steps == 16
+assert r_spmd.recovery_log == r_sim.recovery_log
+assert any(e["event"] == "restore" for e in r_spmd.recovery_log)
+print("SPMD-CHAOS-OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (SRC + os.pathsep
+                         + os.path.join(SRC, "..") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "SPMD-CHAOS-OK" in out.stdout
