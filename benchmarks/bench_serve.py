@@ -1,0 +1,238 @@
+"""Serving engine bench: open-loop latency/throughput vs offered load.
+
+Replays a seeded synthetic arrival trace (repro.serve.trace) through the
+continuous-batching engine at three offered loads — light, near-critical
+and saturated — and reports tokens/s, p50/p99 request latency and page-
+pool occupancy per load. At the saturated load the same trace is also
+served two more ways:
+
+* ``policy="static"`` — the same paged engine, but whole-batch-at-a-time
+  admission (admit a full batch, drain it completely, repeat). This is
+  the controlled comparison: identical kernels, only the scheduler
+  differs, so the gap is pure head-of-line blocking (a finished short
+  request's slot idles until the longest request in the batch drains).
+* the toy path — the pre-serve ``launch/serve.py --toy`` discipline that
+  this subsystem replaces: token-at-a-time prefill through jitted
+  ``decode_step``, one contiguous bucketed cache, fixed whole-batch
+  decode budget. This is the headline ``continuous_vs_static_tokens_per_s``
+  baseline the acceptance bar names.
+
+Loads are expressed as target utilisation ``rho`` and converted to
+arrival rates using the *measured* decode-step time, so the bench means
+the same thing on any host speed. Writes experiments/bench/
+BENCH_serve.json + the repo-root headline mirror (docs/perf.md schema).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import write_bench
+
+RHOS = (0.25, 1.0, 4.0)            # light / near-critical / saturated
+
+
+def toy_static_run(model, params, trace, slots):
+    """Replay ``trace`` with the toy discipline this subsystem replaces.
+
+    Waves of ``slots`` requests: token-at-a-time prefill through jitted
+    ``decode_step`` on one contiguous bucketed cache (short prompts
+    right-padded to the wave max, as the toy padded its batch), then a
+    whole-wave decode budget of max(max_new) steps. Open loop: a wave
+    admits only requests that have already arrived. Timing-only baseline;
+    each request is credited with the max_new tokens it asked for and
+    finishes when its wave drains (the toy returned results per batch).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.train.serve_step import bucketed_max_len
+
+    step = jax.jit(model.decode_step)
+    reqs = sorted(trace, key=lambda r: (r.arrival, r.rid))
+    cache_len = bucketed_max_len(max(r.prompt_len for r in reqs)
+                                 + max(r.max_new for r in reqs) + 1)
+    cache = model.init_cache(slots, cache_len)          # compile warmup
+    tok = jnp.zeros((slots, 1), jnp.int32)
+    logits, cache = step(params, tok, cache)
+    jax.block_until_ready(logits)
+
+    lat, total_tokens, i = [], 0, 0
+    t0 = time.perf_counter()
+    while i < len(reqs):
+        now = time.perf_counter() - t0
+        if reqs[i].arrival > now:
+            time.sleep(reqs[i].arrival - now)
+            now = reqs[i].arrival
+        wave = [r for r in reqs[i:i + slots] if r.arrival <= now]
+        wave = wave or [reqs[i]]
+        i += len(wave)
+        plen = max(r.prompt_len for r in wave)
+        prompts = np.zeros((slots, plen), np.int32)
+        for j, r in enumerate(wave):
+            prompts[j, :r.prompt_len] = r.prompt
+        cache = model.init_cache(slots, cache_len)
+        logits = None
+        for t in range(plen):
+            logits, cache = step(params, prompts[:, t:t + 1], cache)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(max(r.max_new for r in wave) - 1):
+            logits, cache = step(params, tok, cache)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(tok)
+        end = time.perf_counter() - t0
+        for r in wave:
+            lat.append(end - r.arrival)
+            total_tokens += r.max_new
+    duration = max((time.perf_counter() - t0) - reqs[0].arrival, 1e-9)
+    return {
+        "policy": "toy", "tokens_per_s": total_tokens / duration,
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+        "completed": len(lat),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="short trace (CI canary settings)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--cache-int8", action="store_true")
+    args = ap.parse_args(argv)
+    quick = args.quick
+    requests = args.requests or (32 if quick else 64)
+    slots = 8
+    max_new = 16 if quick else 32
+
+    import jax
+    import numpy as np
+    from repro import configs
+    from repro.models import get_model
+    from repro.serve import ServeEngine, TraceConfig, make_trace
+
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, num_slots=slots, page_size=8,
+                         max_prompt_len=16, max_new_cap=max_new,
+                         cache_int8=args.cache_int8)
+
+    def trace_cfg(rate, seed=0):
+        # wide max_new spread: static batching pays E[max]/E[mean] per
+        # batch in head-of-line blocking, which is the effect under test
+        return TraceConfig(num_requests=requests, rate=rate,
+                           prompt_len_min=2, prompt_len_max=16,
+                           max_new_min=2, max_new_max=max_new,
+                           vocab=cfg.vocab_size, seed=seed)
+
+    # warm every bucket + the decode step so no arm pays first-compile
+    engine.run(make_trace(trace_cfg(1e9, seed=7)))
+
+    # calibrate: decode-step seconds at full slots -> machine-independent
+    # arrival rates.  rho = rate * E[service time] / slots
+    t0 = time.perf_counter()
+    sat = engine.run(make_trace(trace_cfg(1e9, seed=7)))
+    t_step = (time.perf_counter() - t0) / max(sat.metrics["decode_steps"], 1)
+    mean_new = (2 + max_new) / 2.0
+    crit_rate = slots / (mean_new * t_step)
+
+    results = []
+    for rho in RHOS:
+        rate = rho * crit_rate
+        rep = engine.run(make_trace(trace_cfg(rate)), policy="continuous")
+        m = rep.metrics
+        results.append({
+            "policy": "continuous", "rho": rho, "offered_rate": rate,
+            "tokens_per_s": m["tokens_per_s"],
+            "p50_latency_s": m["p50_latency"],
+            "p99_latency_s": m["p99_latency"],
+            "p50_ttft_s": m["p50_ttft"],
+            "mean_occupancy": m["mean_occupancy"],
+            "completed": m["completed"],
+            "decode_steps": m["decode_steps"],
+        })
+        print(f"continuous rho={rho:<4} rate={rate:7.1f}/s "
+              f"tok/s {m['tokens_per_s']:8.1f} p50 {m['p50_latency']:.3f}s "
+              f"p99 {m['p99_latency']:.3f}s occ {m['mean_occupancy']:.2f}")
+    peak_rate = RHOS[-1] * crit_rate
+    rep_static = engine.run(make_trace(trace_cfg(peak_rate)),
+                            policy="static")
+    ms = rep_static.metrics
+    results.append({
+        "policy": "static", "rho": RHOS[-1], "offered_rate": peak_rate,
+        "tokens_per_s": ms["tokens_per_s"],
+        "p50_latency_s": ms["p50_latency"],
+        "p99_latency_s": ms["p99_latency"],
+        "p50_ttft_s": ms["p50_ttft"],
+        "mean_occupancy": ms["mean_occupancy"],
+        "completed": ms["completed"],
+        "decode_steps": ms["decode_steps"],
+    })
+    print(f"static     rho={RHOS[-1]:<4} rate={peak_rate:7.1f}/s "
+          f"tok/s {ms['tokens_per_s']:8.1f} p50 {ms['p50_latency']:.3f}s "
+          f"p99 {ms['p99_latency']:.3f}s occ {ms['mean_occupancy']:.2f}")
+    toy = toy_static_run(model, params, make_trace(trace_cfg(peak_rate)),
+                         slots)
+    toy["rho"] = RHOS[-1]
+    toy["offered_rate"] = peak_rate
+    results.append(toy)
+    print(f"toy        rho={RHOS[-1]:<4} rate={peak_rate:7.1f}/s "
+          f"tok/s {toy['tokens_per_s']:8.1f} p50 {toy['p50_latency_s']:.3f}s "
+          f"p99 {toy['p99_latency_s']:.3f}s")
+
+    peak = results[len(RHOS) - 1]
+    ratio = peak["tokens_per_s"] / max(toy["tokens_per_s"], 1e-9)
+    ratio_engine = peak["tokens_per_s"] / max(ms["tokens_per_s"], 1e-9)
+    payload = {
+        "bench": "serve",
+        "model": "qwen3-0.6b smoke",
+        "slots": slots,
+        "page_size": engine.pool_cfg.page_size,
+        "num_pages": engine.pool_cfg.num_pages,
+        "requests": requests,
+        "cache": "int8" if args.cache_int8 else cfg.dtype,
+        "loads": [r * crit_rate for r in RHOS],
+        "results": results,
+        "continuous_vs_static_tokens_per_s": ratio,
+        "continuous_vs_engine_static_tokens_per_s": ratio_engine,
+        "tokens_per_s_peak": peak["tokens_per_s"],
+        "p99_latency_s_peak": peak["p99_latency_s"],
+        "prefill_compiles": engine.prefill_compiles,
+        "decode_compiles": engine.decode_compiles,
+    }
+    mirror = {
+        "bench": "serve", "slots": slots,
+        "loads": payload["loads"],
+        "tokens_per_s_peak": payload["tokens_per_s_peak"],
+        "p99_latency_s_peak": payload["p99_latency_s_peak"],
+        "continuous_vs_static_tokens_per_s": ratio,
+    }
+    path = write_bench("BENCH_serve", payload, mirror=mirror)
+    print(f"continuous vs toy static at peak load: {ratio:.2f}x tokens/s "
+          f"(vs engine-static: {ratio_engine:.2f}x) -> {path} "
+          f"(+ root BENCH_serve.json)")
+    return payload
+
+
+def run(quick: bool = True):
+    """benchmarks/run.py harness contract: (name, us_per_call, derived)."""
+    payload = main(["--quick"] if quick else [])
+    return [
+        ("serve.tokens_per_s_peak", 0.0,
+         f"{payload['tokens_per_s_peak']:.1f}tok/s"),
+        ("serve.p99_latency_peak",
+         payload["p99_latency_s_peak"] * 1e6,
+         f"{payload['p99_latency_s_peak']:.3f}s"),
+        ("serve.continuous_vs_static", 0.0,
+         f"{payload['continuous_vs_static_tokens_per_s']:.2f}x"),
+    ]
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ EXPERIMENTS.md.
   bench_event_loop       — fused event engine vs per-arrival loop
   bench_spmd             — SPMD mesh engine vs simulated backend
   bench_recovery         — MTTR + chaos overhead of the recovery supervisor
+  bench_serve            — continuous batching vs static at 3 offered loads
   bench_step_time        — host step-time microbenchmark per arch
   roofline               — §Roofline terms from the dry-run artifacts
 """
@@ -30,10 +31,10 @@ def main() -> None:
     quick = common.quick_mode()
     from benchmarks import (bench_event_loop, bench_iterations_vs_n,
                             bench_layer_staleness, bench_lr_sweep,
-                            bench_recovery, bench_spmd, bench_staleness,
-                            bench_step_time, bench_straggler,
-                            bench_sync_vs_async, bench_time_to_converge,
-                            roofline)
+                            bench_recovery, bench_serve, bench_spmd,
+                            bench_staleness, bench_step_time,
+                            bench_straggler, bench_sync_vs_async,
+                            bench_time_to_converge, roofline)
     modules = [
         ("straggler", bench_straggler),
         ("layer_staleness", bench_layer_staleness),
@@ -45,6 +46,7 @@ def main() -> None:
         ("event_loop", bench_event_loop),
         ("spmd", bench_spmd),                  # re-execs itself (forced devices)
         ("recovery", bench_recovery),
+        ("serve", bench_serve),
         ("step_time", bench_step_time),
         ("roofline", roofline),
     ]

@@ -1,7 +1,18 @@
-"""Serving launcher CLI: batched prefill + greedy decode on a smoke config.
+"""Serving launcher CLI: continuous batching over the paged KV cache.
 
-    python -m repro.launch.serve --arch gemma3-1b --batch 4 --tokens 16 \
-        [--cache-int8]
+    # replay a seeded open-loop trace through the serve engine
+    python -m repro.launch.serve --arch qwen3-0.6b --requests 16 --rate 8 \
+        [--policy continuous|static] [--cache-int8] [--mesh-model 2] \
+        [--restore /path/to/ckpt [--step N] [--ema]] [--faults slowdown@4]
+
+    # legacy toy path (static batch, contiguous cache)
+    python -m repro.launch.serve --arch gemma3-1b --toy --batch 4 --tokens 16
+
+The default path builds a :class:`repro.serve.ServeEngine` (docs/
+serving.md): bucketed prefill, paged decode, admission/eviction at
+decode-step granularity, optional TP-sharded decode over the mesh 'model'
+axis, optional chaos injection. ``--restore`` serves a trained checkpoint
+(replicated, TP-sharded, or sim) through the verified restore bridge.
 """
 from __future__ import annotations
 
@@ -15,25 +26,71 @@ from repro import configs
 from repro.models import get_model
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", choices=configs.list_archs(),
                     default="qwen3-0.6b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--cache-int8", action="store_true",
-                    help="int8-quantized KV cache (decode memory lever)")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    ap.add_argument("--cache-int8", action="store_true",
+                    help="int8-quantized KV (per-page scale tables)")
+    # -- engine path ---------------------------------------------------------
+    ap.add_argument("--requests", type=int, default=16,
+                    help="trace length (open-loop arrivals)")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="offered load: aggregate arrivals per second")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent decode slots")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (power of two)")
+    ap.add_argument("--max-prompt", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16,
+                    help="per-request token budget cap")
+    ap.add_argument("--policy", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="TP-shard decode over the mesh 'model' axis")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="Pallas page-gather kernel (native on TPU, "
+                    "interpret elsewhere)")
+    ap.add_argument("--faults", default="",
+                    help="chaos spec, slowdown/preempt kinds only "
+                    "(e.g. 'slowdown@4:w0,preempt@9')")
+    ap.add_argument("--restore", default="",
+                    help="checkpoint dir: serve trained weights via the "
+                    "verified restore bridge")
+    ap.add_argument("--step", type=int, default=None,
+                    help="checkpoint step (default: latest good)")
+    ap.add_argument("--ema", action="store_true",
+                    help="serve the EMA weights from the checkpoint")
+    # -- legacy toy path -----------------------------------------------------
+    ap.add_argument("--toy", action="store_true",
+                    help="legacy static-batch toy path (contiguous cache)")
+    ap.add_argument("--batch", type=int, default=4, help="[toy] batch size")
+    ap.add_argument("--prompt-len", type=int, default=8,
+                    help="[toy] prompt length")
+    ap.add_argument("--tokens", type=int, default=16,
+                    help="[toy] tokens to decode")
+    return ap
 
-    cfg = configs.get_smoke_config(args.arch)
-    model = get_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
+
+def _validate(args) -> None:
+    if args.toy and (args.restore or args.mesh_model > 1 or args.faults):
+        raise SystemExit("--toy is the legacy static path: it has no "
+                         "--restore/--mesh-model/--faults support")
+    if args.step is not None and not args.restore:
+        raise SystemExit("--step needs --restore")
+    if args.ema and not args.restore:
+        raise SystemExit("--ema needs --restore")
+
+
+def _toy_main(args, cfg, model, params) -> None:
+    from repro.train.serve_step import bucketed_max_len
     prompt = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
                                 (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
-    max_len = args.prompt_len + args.tokens + 1
+    # power-of-two cache bucket: mixed prompt lengths reuse one compile
+    max_len = bucketed_max_len(args.prompt_len + args.tokens + 1)
     cache_dtype = jnp.int8 if args.cache_int8 else None
     cache = model.init_cache(args.batch, max_len, cache_dtype)
     if cfg.family == "audio":
@@ -64,6 +121,54 @@ def main(argv=None) -> None:
           f"({args.batch * args.tokens / max(decode_s, 1e-9):.1f} tok/s host)")
     for i in range(args.batch):
         print(f"  {list(map(int, out[i]))}")
+
+
+def main(argv=None) -> None:
+    args = _build_parser().parse_args(argv)
+    _validate(args)
+    cfg = configs.get_smoke_config(args.arch)
+    model = get_model(cfg)
+    if args.restore:
+        from repro.serve import restore_params
+        params, manifest = restore_params(args.restore, cfg, step=args.step,
+                                          use_ema=args.ema)
+        print(f"[serve] restored step {manifest['step']} from {args.restore}"
+              f"{' (ema)' if args.ema else ''}")
+    else:
+        params = model.init(jax.random.PRNGKey(args.seed))
+    if args.toy:
+        _toy_main(args, cfg, model, params)
+        return
+
+    from repro.serve import ServeEngine, TraceConfig, make_trace
+    engine = ServeEngine(
+        cfg, params, num_slots=args.slots, page_size=args.page_size,
+        max_prompt_len=args.max_prompt, max_new_cap=args.max_new,
+        cache_int8=args.cache_int8, mesh_model=args.mesh_model,
+        use_kernel=args.use_kernel, faults=args.faults or None,
+        fault_seed=args.seed)
+    trace = make_trace(TraceConfig(
+        num_requests=args.requests, rate=args.rate,
+        prompt_len_min=2, prompt_len_max=args.max_prompt,
+        max_new_min=2, max_new_max=args.max_new,
+        vocab=cfg.vocab_size, seed=args.seed))
+    report = engine.run(trace, policy=args.policy)
+    m = report.metrics
+    print(f"[serve] {args.arch} policy={args.policy} slots={args.slots} "
+          f"pages={engine.pool_cfg.num_pages}x{args.page_size}"
+          f"{' int8' if args.cache_int8 else ''}"
+          f"{f' tp={args.mesh_model}' if args.mesh_model > 1 else ''}")
+    print(f"  {m['completed']} requests, {m['total_tokens']} tokens in "
+          f"{m['duration']:.2f}s -> {m['tokens_per_s']:.1f} tok/s")
+    print(f"  latency p50 {m['p50_latency']:.3f}s p99 {m['p99_latency']:.3f}s"
+          f" | ttft p50 {m['p50_ttft']:.3f}s"
+          f" | occupancy {m['mean_occupancy']:.2f}"
+          f" | compiles prefill={m['prefill_compiles']} "
+          f"decode={m['decode_compiles']}")
+    for ev in report.events:
+        print(f"  chaos: {ev}")
+    for c in report.completed[:4]:
+        print(f"  rid={c.rid} {c.tokens}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,22 @@
+"""Serving subsystem: continuous batching over a paged, TP-shardable KV
+cache (docs/serving.md).
+
+* :mod:`repro.serve.trace` — seeded open-loop arrival traces.
+* :mod:`repro.serve.pages` — the shared page pool (+ int8 scale tables).
+* :mod:`repro.serve.paged_model` — jitted paged prefill/decode, TP wrap.
+* :mod:`repro.serve.engine` — the scheduler/engine and checkpoint bridge.
+"""
+from repro.serve.engine import (CompletedRequest, ServeEngine, ServeReport,
+                                SERVE_FAULT_KINDS, SERVE_POLICIES,
+                                restore_params)
+from repro.serve.pages import PagePool, PoolConfig, pages_for
+from repro.serve.paged_model import supports_paged
+from repro.serve.trace import (Request, TraceConfig, bucket_for, make_trace,
+                               trace_buckets)
+
+__all__ = [
+    "CompletedRequest", "PagePool", "PoolConfig", "Request", "ServeEngine",
+    "ServeReport", "SERVE_FAULT_KINDS", "SERVE_POLICIES", "TraceConfig",
+    "bucket_for", "make_trace", "pages_for", "restore_params",
+    "supports_paged", "trace_buckets",
+]

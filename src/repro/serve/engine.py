@@ -1,0 +1,417 @@
+"""The serve engine: continuous batching over the paged KV cache.
+
+One engine owns two jitted functions (``paged_model``): a bucketed prefill
+(compiled once per power-of-two prompt bucket) and a single decode step
+over all ``num_slots`` decode slots (compiled once). The host loop is the
+scheduler: it admits requests from the open-loop arrival queue whenever a
+slot AND enough pool pages are free (continuous batching), or only when
+the whole batch has drained (``policy="static"``, the toy baseline), and
+evicts at decode-step granularity — on completion, and under the chaos
+engine's ``preempt`` fault, which throws every in-flight request back to
+the queue (recomputed on readmission; greedy decode makes the retry
+token-identical, so preemption costs latency, never correctness).
+
+Two clocks: ``"wall"`` (real seconds — the benchmark path; chaos
+slowdowns stretch each decode step by sleeping the residual) and
+``"virtual"`` (deterministic units per step — the test path, where p99
+assertions must not depend on host speed).
+
+``restore_params`` is the checkpoint→serve bridge: it pulls just the
+``params`` (or ``ema``) subtree of a training checkpoint through
+``train/checkpoint.py``'s verified restore — replicated, TP-sharded and
+sim checkpoints are all stored gathered, so one template fits all three.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import faults as faults_lib
+from repro.models import get_model
+from repro.serve import pages as pages_lib
+from repro.serve import trace as trace_lib
+from repro.serve.paged_model import (build_paged_decode, build_paged_prefill,
+                                     build_tp_paged_fns, supports_paged)
+
+SERVE_FAULT_KINDS = ("slowdown", "preempt")
+SERVE_POLICIES = ("continuous", "static")
+
+
+@dataclasses.dataclass
+class CompletedRequest:
+    rid: int
+    arrival: float
+    admitted: float
+    first_token: float
+    finish: float
+    prompt_len: int
+    tokens: List[int]
+    preemptions: int = 0
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.arrival
+
+
+@dataclasses.dataclass
+class ServeReport:
+    policy: str
+    completed: List[CompletedRequest]
+    metrics: Dict[str, float]
+    events: List[Dict[str, Any]]
+
+    def tokens_by_rid(self) -> Dict[int, List[int]]:
+        return {c.rid: list(c.tokens) for c in self.completed}
+
+
+class _Slot:
+    __slots__ = ("req", "admitted", "first_token", "tokens", "last_token",
+                 "length", "produced", "preemptions")
+
+    def __init__(self, req, admitted, first_token, first_tok_id, preemptions):
+        self.req = req
+        self.admitted = admitted
+        self.first_token = first_token
+        self.tokens = [first_tok_id]
+        self.last_token = first_tok_id
+        self.length = req.prompt_len      # positions with K/V written
+        self.produced = 1                 # prefill samples the first token
+        self.preemptions = preemptions
+
+
+class ServeEngine:
+    """Continuous-batching inference over a paged, optionally int8, pool."""
+
+    def __init__(self, model_cfg, params, *, num_slots: int = 4,
+                 page_size: int = 8, max_prompt_len: int = 32,
+                 max_new_cap: int = 32, num_pages: Optional[int] = None,
+                 cache_int8: bool = False, mesh_model: int = 1,
+                 use_kernel: bool = False, interpret: Optional[bool] = None,
+                 clock: str = "wall", step_time: float = 1.0,
+                 prefill_time: float = 1.0, faults: Optional[str] = None,
+                 fault_horizon: int = 256, fault_seed: int = 0,
+                 eos_id: Optional[int] = None):
+        ok, why = supports_paged(model_cfg)
+        if not ok:
+            raise ValueError(f"paged serving unsupported: {why}")
+        if clock not in ("wall", "virtual"):
+            raise ValueError(f"clock must be 'wall' or 'virtual' (got {clock})")
+        from repro.distributed.spmd_engine import _auto_interpret
+        self.cfg = model_cfg
+        self.model = get_model(model_cfg)
+        self.clock = clock
+        self.step_time = step_time
+        self.prefill_time = prefill_time
+        self.eos_id = eos_id
+        self.page_size = page_size
+        self.max_bucket = trace_lib.bucket_for(max_prompt_len,
+                                               floor=page_size, cap=1 << 30)
+        self.max_new_cap = max_new_cap
+        max_pages = pages_lib.pages_for(self.max_bucket + max_new_cap,
+                                        page_size)
+        if num_pages is None:
+            num_pages = num_slots * max_pages + 1
+        if num_pages - 1 < max_pages:
+            raise ValueError(
+                f"num_pages={num_pages} cannot hold even one request "
+                f"({max_pages} pages + the trash page)")
+        self.pool_cfg = pages_lib.PoolConfig(
+            num_layers=model_cfg.num_layers,
+            kv_heads=model_cfg.num_kv_heads,
+            head_dim=model_cfg.resolved_head_dim,
+            num_pages=num_pages, page_size=page_size, num_slots=num_slots,
+            max_pages_per_slot=max_pages, quantized=cache_int8)
+        interp = _auto_interpret(interpret)
+        self.mesh_model = mesh_model
+        if mesh_model > 1:
+            from repro.launch.mesh import make_host_mesh
+            if mesh_model > jax.device_count():
+                raise ValueError(
+                    f"mesh_model={mesh_model} needs {mesh_model} devices "
+                    f"but only {jax.device_count()} present (force host "
+                    f"devices with XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=N)")
+            self.mesh = make_host_mesh(1, mesh_model)
+            template = jax.eval_shape(self.model.init, jax.random.PRNGKey(0))
+            prefill, decode, plan, param_sh, pool_sh = build_tp_paged_fns(
+                model_cfg, self.mesh, template, quantized=cache_int8,
+                use_kernel=use_kernel, interpret=interp)
+            self.params = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(jnp.asarray(x), s),
+                params, param_sh)
+            self.tp_plan = plan
+            self._pool_shardings = pool_sh
+        else:
+            decode = build_paged_decode(self.model, quantized=cache_int8,
+                                        use_kernel=use_kernel,
+                                        interpret=interp)
+            prefill = build_paged_prefill(self.model, quantized=cache_int8)
+            self.params = jax.tree_util.tree_map(jnp.asarray, params)
+            self.tp_plan = None
+            self._pool_shardings = None
+        self._decode = jax.jit(decode)
+        self._prefill = jax.jit(prefill)
+        self.fault_plan = None
+        if faults:
+            plan_f = faults_lib.plan_from_spec(
+                faults, num_steps=fault_horizon, num_workers=num_slots,
+                seed=fault_seed)
+            bad = sorted({e.kind for e in plan_f.events
+                          if e.kind not in SERVE_FAULT_KINDS})
+            if bad:
+                raise ValueError(
+                    f"serve wires only {SERVE_FAULT_KINDS} of the fault "
+                    f"taxonomy (decode is lockstep — no per-worker crash/"
+                    f"restart/ckpt_io surface); got {bad}")
+            self.fault_plan = plan_f
+
+    # -- compile counters (the bucket contract) -------------------------------
+
+    @property
+    def prefill_compiles(self) -> int:
+        return int(self._prefill._cache_size())
+
+    @property
+    def decode_compiles(self) -> int:
+        return int(self._decode._cache_size())
+
+    # -- clock ----------------------------------------------------------------
+
+    def _now(self) -> float:
+        if self.clock == "wall":
+            return time.perf_counter() - self._t0
+        return self._vnow
+
+    def _advance_to(self, t: float) -> None:
+        if self.clock == "wall":
+            dt = t - self._now()
+            if dt > 0:
+                time.sleep(dt)
+        else:
+            self._vnow = max(self._vnow, t)
+
+    def _advance_decode(self, elapsed: float, factor: float) -> None:
+        if self.clock == "wall":
+            extra = elapsed * (factor - 1.0)
+            if extra > 0:
+                time.sleep(extra)
+        else:
+            self._vnow += self.step_time * factor
+
+    def _advance_prefill(self, elapsed: float) -> None:
+        if self.clock == "virtual":
+            self._vnow += self.prefill_time
+
+    # -- the serving loop -----------------------------------------------------
+
+    def run(self, trace: Sequence[trace_lib.Request],
+            policy: str = "continuous") -> ServeReport:
+        if policy not in SERVE_POLICIES:
+            raise ValueError(f"policy must be one of {SERVE_POLICIES}")
+        for r in trace:
+            if r.prompt_len > self.max_bucket:
+                raise ValueError(f"request {r.rid}: prompt_len "
+                                 f"{r.prompt_len} > bucket cap "
+                                 f"{self.max_bucket}")
+            if not 1 <= r.max_new <= self.max_new_cap:
+                raise ValueError(f"request {r.rid}: max_new {r.max_new} "
+                                 f"outside [1, {self.max_new_cap}]")
+        pool = pages_lib.PagePool(self.pool_cfg, dtype=self.model.dtype,
+                                  shardings=self._pool_shardings)
+        self._bufs = pool.buffers
+        pending = collections.deque(
+            sorted(trace, key=lambda r: (r.arrival, r.rid)))
+        queue: collections.deque = collections.deque()
+        active: Dict[int, _Slot] = {}
+        free_slots = list(range(self.pool_cfg.num_slots - 1, -1, -1))
+        completed: List[CompletedRequest] = []
+        events: List[Dict[str, Any]] = []
+        preempt_counts: Dict[int, int] = {}
+        self._t0 = time.perf_counter()
+        self._vnow = 0.0
+        step_idx = 0
+        slow_factor, slow_until = 1.0, -1
+
+        def complete(slot: int, st: _Slot, now: float) -> None:
+            pool.free_slot(slot)
+            free_slots.append(slot)
+            completed.append(CompletedRequest(
+                rid=st.req.rid, arrival=st.req.arrival, admitted=st.admitted,
+                first_token=st.first_token, finish=now,
+                prompt_len=st.req.prompt_len, tokens=st.tokens,
+                preemptions=st.preemptions))
+
+        while pending or queue or active:
+            now = self._now()
+            while pending and pending[0].arrival <= now:
+                queue.append(pending.popleft())
+            # -- admission ---------------------------------------------------
+            may_admit = bool(queue) and (policy == "continuous"
+                                         or not active)
+            while may_admit and queue and free_slots:
+                req = queue[0]
+                need = max(
+                    trace_lib.bucket_for(req.prompt_len,
+                                         floor=self.page_size,
+                                         cap=self.max_bucket)
+                    // self.page_size,
+                    pages_lib.pages_for(req.prompt_len + req.max_new,
+                                        self.page_size))
+                if not pool.can_alloc(need):
+                    break
+                queue.popleft()
+                slot = free_slots.pop()
+                st = self._admit(req, slot, need, pool,
+                                 preempt_counts.get(req.rid, 0))
+                if st.produced >= req.max_new or (
+                        self.eos_id is not None
+                        and st.last_token == self.eos_id):
+                    complete(slot, st, self._now())
+                else:
+                    active[slot] = st
+            if not active:
+                if pending:
+                    self._advance_to(pending[0].arrival)
+                    continue
+                if queue:          # pool can hold any valid request when idle
+                    raise RuntimeError("scheduler wedged: empty slots but "
+                                       "queue not admissible")
+                continue
+            # -- chaos at decode-step granularity ----------------------------
+            if self.fault_plan:
+                for ev in self.fault_plan.events:
+                    if ev.step != step_idx:
+                        continue
+                    if ev.kind == "slowdown":
+                        slow_factor, slow_until = ev.factor, \
+                            step_idx + ev.duration
+                        events.append({"event": "slowdown", "step": step_idx,
+                                       "factor": ev.factor,
+                                       "duration": ev.duration})
+                    elif ev.kind == "preempt":
+                        evicted = sorted(active.items())
+                        for slot, st in evicted:
+                            pool.free_slot(slot)
+                            free_slots.append(slot)
+                            preempt_counts[st.req.rid] = st.preemptions + 1
+                        active.clear()
+                        for _, st in reversed(evicted):
+                            queue.appendleft(st.req)
+                        events.append({"event": "preempt", "step": step_idx,
+                                       "evicted": len(evicted)})
+                if not active:
+                    step_idx += 1
+                    continue
+            factor = slow_factor if step_idx <= slow_until else 1.0
+            # -- one decode step over every slot -----------------------------
+            # [last_token, len, *page_table_row] per slot, one transfer:
+            # at smoke scale the loop is host-dispatch-bound, so the packed
+            # state (and the in-graph argmax) is what makes continuous
+            # batching's fewer-steps advantage show up in wall clock.
+            n_slots = self.pool_cfg.num_slots
+            state = np.zeros((n_slots, 2 + self.pool_cfg.max_pages_per_slot),
+                             np.int32)
+            for slot, st in active.items():
+                state[slot, 0] = st.last_token
+                state[slot, 1] = st.length
+            state[:, 2:] = pool.page_table
+            t_start = time.perf_counter()
+            toks_dev, self._bufs = self._decode(self.params, state,
+                                                self._bufs)
+            next_tokens = np.asarray(toks_dev)
+            self._advance_decode(time.perf_counter() - t_start, factor)
+            pool.note_occupancy()
+            now = self._now()
+            for slot in sorted(active):
+                st = active[slot]
+                st.length += 1
+                tok = int(next_tokens[slot])
+                st.tokens.append(tok)
+                st.last_token = tok
+                st.produced += 1
+                if st.produced >= st.req.max_new or (
+                        self.eos_id is not None and tok == self.eos_id):
+                    del active[slot]
+                    complete(slot, st, now)
+            step_idx += 1
+
+        return ServeReport(policy=policy, completed=completed,
+                           metrics=self._metrics(trace, completed, pool,
+                                                 step_idx, events),
+                           events=events)
+
+    def _admit(self, req, slot: int, need: int, pool: pages_lib.PagePool,
+               preemptions: int) -> _Slot:
+        pool.alloc(slot, need)
+        bucket = trace_lib.bucket_for(req.prompt_len, floor=self.page_size,
+                                      cap=self.max_bucket)
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :req.prompt_len] = req.prompt
+        meta = np.empty((1 + bucket // self.page_size,), np.int32)
+        meta[0] = req.prompt_len
+        meta[1:] = pool.page_table[slot, :bucket // self.page_size]
+        admitted = self._now()
+        t_start = time.perf_counter()
+        tok_dev, self._bufs = self._prefill(self.params, tokens, meta,
+                                            self._bufs)
+        first_tok = int(np.asarray(tok_dev))
+        self._advance_prefill(time.perf_counter() - t_start)
+        return _Slot(req, admitted, self._now(), first_tok, preemptions)
+
+    def _metrics(self, trace, completed, pool, decode_steps, events):
+        lats = np.array([c.latency for c in completed] or [0.0])
+        ttfts = np.array([c.ttft for c in completed] or [0.0])
+        total_tokens = sum(len(c.tokens) for c in completed)
+        t_end = max((c.finish for c in completed), default=0.0)
+        t_start = min((r.arrival for r in trace), default=0.0)
+        duration = max(t_end - t_start, 1e-9)
+        return {
+            "completed": len(completed),
+            "total_tokens": total_tokens,
+            "duration": duration,
+            "tokens_per_s": total_tokens / duration,
+            "p50_latency": float(np.percentile(lats, 50)),
+            "p99_latency": float(np.percentile(lats, 99)),
+            "p50_ttft": float(np.percentile(ttfts, 50)),
+            "p99_ttft": float(np.percentile(ttfts, 99)),
+            "mean_occupancy": pool.mean_occupancy(),
+            "peak_pages": pool.peak_pages,
+            "decode_steps": decode_steps,
+            "preemptions": sum(1 for e in events if e["event"] == "preempt"),
+            "prefill_compiles": self.prefill_compiles,
+            "decode_compiles": self.decode_compiles,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint -> serve bridge
+# ---------------------------------------------------------------------------
+
+
+def restore_params(directory: str, model_cfg, *, step: Optional[int] = None,
+                   use_ema: bool = False):
+    """Load just the weights of a training checkpoint for serving.
+
+    Checkpoints are stored gathered (full shapes) by every backend — sim,
+    replicated SPMD, and TP-sharded alike (PR 5's interchangeability
+    contract) — so a single eval_shape template restores all three; the
+    engine re-shards on admission when ``mesh_model > 1``. Goes through
+    ``checkpoint.restore``'s CRC-verified, walk-back path. Returns
+    ``(params, manifest)``.
+    """
+    from repro.train import checkpoint as ckpt_lib
+    model = get_model(model_cfg)
+    template = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    key = "ema" if use_ema else "params"
+    tree, manifest = ckpt_lib.restore(directory, {key: template}, step)
+    return tree[key], manifest

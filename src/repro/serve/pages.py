@@ -1,0 +1,133 @@
+"""Paged KV cache: fixed-size pages allocated per request from a shared pool.
+
+The device side is one stacked buffer per tensor — ``k``/``v`` of shape
+``[L, num_pages, page_size, kv_heads, head_dim]`` (plus per-page f16 scale
+tables ``[L, num_pages, page_size, kv_heads]`` when quantized) — shared by
+every layer through a single host-side page table: a request's logical page
+``i`` lives at the same physical page id across all layers, so one
+``[num_slots, max_pages]`` int32 table drives every layer's gather.
+
+Physical page 0 is the **trash page**: it is never handed out by the
+allocator, and idle decode slots (zeroed page-table rows) scatter their
+dead writes there. Allocation/free is pure host bookkeeping (a free list);
+the device buffers are only ever touched by the jitted prefill/decode
+functions in :mod:`repro.serve.paged_model`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Static geometry of a page pool (one per ServeEngine)."""
+
+    num_layers: int
+    kv_heads: int
+    head_dim: int
+    num_pages: int                 # total physical pages incl. the trash page
+    page_size: int                 # tokens per page (power of two)
+    num_slots: int                 # concurrent decode slots
+    max_pages_per_slot: int        # page-table width (static decode shape)
+    quantized: bool = False        # int8 payload + per-(pos, head) f16 scales
+
+    def __post_init__(self):
+        if self.page_size & (self.page_size - 1):
+            raise ValueError(f"page_size must be a power of two "
+                             f"(got {self.page_size})")
+        if self.num_pages < 2:
+            raise ValueError("num_pages must be >= 2 (page 0 is reserved)")
+
+    @property
+    def tokens_per_slot(self) -> int:
+        return self.max_pages_per_slot * self.page_size
+
+
+class PagePool:
+    """Host allocator + device buffers for the paged KV cache."""
+
+    def __init__(self, pool_cfg: PoolConfig, dtype=jnp.float32,
+                 shardings: Optional[Dict[str, jax.sharding.Sharding]] = None):
+        self.cfg = pool_cfg
+        c = pool_cfg
+        shape = (c.num_layers, c.num_pages, c.page_size, c.kv_heads, c.head_dim)
+        payload_dtype = jnp.int8 if c.quantized else dtype
+        bufs: Dict[str, jnp.ndarray] = {
+            "k": jnp.zeros(shape, payload_dtype),
+            "v": jnp.zeros(shape, payload_dtype),
+        }
+        if c.quantized:
+            sshape = shape[:-1]
+            bufs["k_scale"] = jnp.zeros(sshape, jnp.float16)
+            bufs["v_scale"] = jnp.zeros(sshape, jnp.float16)
+        if shardings:
+            bufs = {k: jax.device_put(v, shardings[k])
+                    for k, v in bufs.items()}
+        self.buffers = bufs
+        # -- host bookkeeping: page 0 reserved as the trash page ------------
+        self._free: List[int] = list(range(c.num_pages - 1, 0, -1))
+        self._owned: Dict[int, List[int]] = {}
+        self.page_table = np.zeros((c.num_slots, c.max_pages_per_slot),
+                                   np.int32)
+        self.peak_pages = 0
+        self._occupancy_sum = 0.0
+        self._occupancy_n = 0
+
+    # -- allocation -----------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.cfg.num_pages - 1) - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, slot: int, n: int) -> np.ndarray:
+        """Reserve ``n`` pages for ``slot``; returns their physical ids."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already holds pages")
+        if n > self.cfg.max_pages_per_slot:
+            raise ValueError(
+                f"request needs {n} pages but the page table is only "
+                f"{self.cfg.max_pages_per_slot} wide")
+        if n > len(self._free):
+            raise MemoryError(
+                f"pool exhausted: need {n} pages, {len(self._free)} free")
+        ids = np.array([self._free.pop() for _ in range(n)], np.int32)
+        self._owned[slot] = list(ids)
+        self.page_table[slot, :n] = ids
+        self.page_table[slot, n:] = 0
+        self.peak_pages = max(self.peak_pages, self.used_pages)
+        return ids
+
+    def free_slot(self, slot: int) -> None:
+        """Return ``slot``'s pages to the pool (evict/complete)."""
+        for pid in self._owned.pop(slot, []):
+            self._free.append(pid)
+        self.page_table[slot] = 0
+
+    # -- occupancy telemetry --------------------------------------------------
+
+    def occupancy(self) -> float:
+        return self.used_pages / (self.cfg.num_pages - 1)
+
+    def note_occupancy(self) -> None:
+        self._occupancy_sum += self.occupancy()
+        self._occupancy_n += 1
+
+    def mean_occupancy(self) -> float:
+        return self._occupancy_sum / max(self._occupancy_n, 1)
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` positions."""
+    return -(-tokens // page_size)

@@ -61,15 +61,36 @@ def prefill_input_specs(cfg, shape) -> Dict[str, Any]:
     return {"batch": batch}
 
 
+def bucketed_max_len(need: int, floor: int = 8) -> int:
+    """Round a cache length up to the next power-of-two bucket.
+
+    The decode caches key jit's shape cache: an exact ``prompt + tokens``
+    length retraces on every new prompt, while a power-of-two bucket
+    compiles once per bucket (validity masking makes the extra positions
+    inert). The serve engine uses the same rule for prompt padding
+    (``repro.serve.trace.bucket_for``).
+    """
+    if need <= 0:
+        raise ValueError(f"cache length must be positive (got {need})")
+    b = floor
+    while b < need:
+        b *= 2
+    return b
+
+
 def greedy_generate(model, params, prompt: jnp.ndarray, num_tokens: int,
-                    max_len: int, **prefill_kwargs):
+                    max_len: int, *, bucket: bool = True, **prefill_kwargs):
     """Reference generation loop (tests + examples; not the perf path).
 
     Prefills by running decode_step over the prompt tokens one by one, then
-    greedily decodes ``num_tokens`` more.
+    greedily decodes ``num_tokens`` more. ``max_len`` is padded to a
+    power-of-two bucket (``bucket=False`` restores the exact size) so
+    jitted callers compile once per bucket instead of once per prompt
+    length.
     """
     b, plen = prompt.shape
-    cache = model.init_cache(b, max_len)
+    cache = model.init_cache(b, bucketed_max_len(max_len) if bucket
+                             else max_len)
     if prefill_kwargs.get("encoder_frames") is not None:
         cache = model.prime_cross_cache(params, cache,
                                         prefill_kwargs["encoder_frames"])
