@@ -330,10 +330,13 @@ class CheckpointConfig:
     keep: int = 3
     async_save: bool = False
     # self-healing writes (docs/robustness.md): failed saves retry up to
-    # write_retries times with exponential backoff before the error
-    # propagates (where the recovery supervisor takes over)
+    # write_retries times with seeded-jittered exponential backoff —
+    # capped at retry_max_backoff_s, scaled by uniform [1, 1+retry_jitter]
+    # — before the error propagates (where the supervisor takes over)
     write_retries: int = 3
     retry_backoff_s: float = 0.01
+    retry_max_backoff_s: float = 0.25
+    retry_jitter: float = 0.5
 
 
 @dataclasses.dataclass(frozen=True)

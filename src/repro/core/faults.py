@@ -84,11 +84,11 @@ class FaultEvent:
     duration: int = 8         # slowdown steps until recovery
     fails: int = 2            # ckpt_io: failed write attempts injected
     grace: bool = True        # preempt: grace-period checkpoint first
+    replica: int = -1         # serving-replica target (router scope, :rN)
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS + ("slow_end",):
-            raise ValueError(f"unknown fault kind {self.kind!r} "
-                             f"(valid: {', '.join(FAULT_KINDS)})")
+            raise ValueError(_unknown_kind_message(self.kind))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,7 +100,7 @@ class FaultPlan:
 
     def __post_init__(self):
         object.__setattr__(self, "events", tuple(
-            sorted(self.events, key=lambda e: (e.step, e.kind, e.worker))))
+            sorted(self.events, key=lambda e: (e.step, e.kind, e.worker, e.replica))))
 
     def __len__(self) -> int:
         return len(self.events)
@@ -109,36 +109,78 @@ class FaultPlan:
 _KIND_ALIASES = {"slow": "slowdown", "kill": "crash"}
 
 
-def _parse_item(item: str) -> Tuple[str, Optional[int], Optional[int], int]:
-    """One spec item -> (kind, step|None, worker|None, count).
+def _unknown_kind_message(kind: str, item: Optional[str] = None) -> str:
+    """Mirror ``registry.get_strategy``'s unknown-name message: name what
+    was asked for, then the full list of valid kinds (plus aliases)."""
+    where = f" in {item!r}" if item else ""
+    aliases = ", ".join(f"{a}={k}" for a, k in sorted(_KIND_ALIASES.items()))
+    return (f"unknown fault kind {kind!r}{where}; "
+            f"valid kinds: {', '.join(FAULT_KINDS)} (aliases: {aliases})")
+
+
+@dataclasses.dataclass(frozen=True)
+class _SpecItem:
+    kind: str
+    step: Optional[int] = None
+    worker: Optional[int] = None
+    replica: Optional[int] = None
+    factor: Optional[float] = None
+    duration: Optional[int] = None
+    count: int = 1
+
+
+def _parse_item(item: str) -> _SpecItem:
+    """One spec item -> :class:`_SpecItem`.
 
     Grammar (docs/robustness.md):
-        kind '@' step [':w' worker]     explicit placement
-        kind ['=' count]                seeded-random placement
+        kind '@' step [':w' worker] [':r' replica]
+                      [':x' factor] [':d' duration]   explicit placement
+        kind ['=' count]                              seeded-random placement
+
+    ``:rN`` scopes the fault to serving replica N (the router surface,
+    docs/serving.md); ``:xF``/``:dD`` override the slowdown factor and
+    duration. ``:wN`` and ``:rN`` are mutually exclusive — a fault
+    targets a training worker or a serving replica, never both.
     """
     if "@" in item:
         kind, rest = item.split("@", 1)
         parts = rest.split(":")
-        step = int(parts[0])
-        worker = None
+        fields: Dict[str, float] = {}
         for p in parts[1:]:
-            if p.startswith("w"):
-                worker = int(p[1:])
+            if p[:1] in ("w", "r", "x", "d") and p[1:]:
+                if p[0] in fields:
+                    raise ValueError(f"duplicate fault spec field {p!r} "
+                                     f"in {item!r}")
+                fields[p[0]] = float(p[1:])
             else:
-                raise ValueError(f"bad fault spec field {p!r} in {item!r}")
-        return _KIND_ALIASES.get(kind.strip(), kind.strip()), step, worker, 1
+                raise ValueError(f"bad fault spec field {p!r} in {item!r} "
+                                 f"(valid: wN worker, rN replica, "
+                                 f"xF factor, dD duration)")
+        if "w" in fields and "r" in fields:
+            raise ValueError(f"fault {item!r} targets both a worker (:w) "
+                             f"and a replica (:r) — pick one scope")
+        return _SpecItem(
+            _KIND_ALIASES.get(kind.strip(), kind.strip()),
+            step=int(parts[0]),
+            worker=None if "w" not in fields else int(fields["w"]),
+            replica=None if "r" not in fields else int(fields["r"]),
+            factor=fields.get("x"),
+            duration=None if "d" not in fields else int(fields["d"]))
     kind, _, cnt = item.partition("=")
-    return (_KIND_ALIASES.get(kind.strip(), kind.strip()), None, None,
-            int(cnt) if cnt else 1)
+    return _SpecItem(_KIND_ALIASES.get(kind.strip(), kind.strip()),
+                     count=int(cnt) if cnt else 1)
 
 
 def plan_from_spec(spec: str, *, num_steps: int, num_workers: int,
-                   seed: int = 0) -> FaultPlan:
+                   seed: int = 0, num_replicas: int = 0) -> FaultPlan:
     """Parse a chaos spec into a deterministic :class:`FaultPlan`.
 
-    Explicit items pin (step, worker); count items draw steps/workers
-    from a RandomState seeded with ``seed`` — the same (spec, seed,
-    num_steps, num_workers) always yields the identical plan.
+    Explicit items pin (step, worker/replica); count items draw
+    steps/workers from a RandomState seeded with ``seed`` — the same
+    (spec, seed, num_steps, num_workers) always yields the identical
+    plan. ``num_replicas > 0`` switches the random-target scope to
+    serving replicas (the router's surface): drawn targets land on
+    ``replica`` instead of ``worker``, with the identical draw sequence.
     """
     rng = np.random.RandomState(seed)
     hi = max(num_steps - 1, 2)
@@ -147,19 +189,28 @@ def plan_from_spec(spec: str, *, num_steps: int, num_workers: int,
         item = raw.strip()
         if not item:
             continue
-        kind, step, worker, count = _parse_item(item)
-        if kind not in FAULT_KINDS:
-            raise ValueError(f"unknown fault kind {kind!r} in {item!r} "
-                             f"(valid: {', '.join(FAULT_KINDS)})")
-        for _ in range(count):
-            s = step if step is not None else int(rng.randint(1, hi))
-            w = worker if worker is not None else int(rng.randint(num_workers))
-            if kind in ("ckpt_io", "preempt"):
-                w = -1
+        it = _parse_item(item)
+        if it.kind not in FAULT_KINDS:
+            raise ValueError(_unknown_kind_message(it.kind, item))
+        for _ in range(it.count):
+            s = it.step if it.step is not None else int(rng.randint(1, hi))
+            if num_replicas:        # router scope: random targets = replicas
+                r = (it.replica if it.replica is not None
+                     else int(rng.randint(num_replicas)))
+                w = -1 if it.worker is None else int(it.worker)
+            else:                   # training scope: legacy draw order
+                w = (it.worker if it.worker is not None
+                     else int(rng.randint(num_workers)))
+                if it.kind in ("ckpt_io", "preempt"):
+                    w = -1
+                r = -1 if it.replica is None else int(it.replica)
+            default_dur = (max(2, min(8, num_steps // 8))
+                           if it.kind == "slowdown" else 8)
             events.append(FaultEvent(
-                kind, s, worker=w,
-                duration=max(2, min(8, num_steps // 8)) if kind == "slowdown"
-                else 8))
+                it.kind, s, worker=w, replica=r,
+                factor=4.0 if it.factor is None else float(it.factor),
+                duration=default_dur if it.duration is None
+                else int(it.duration)))
     return FaultPlan(tuple(events), seed)
 
 
@@ -200,14 +251,14 @@ class FaultInjector:
             if end <= step:
                 due.append(FaultEvent("slow_end", end, worker=w,
                                       factor=factor))
-        due.sort(key=lambda e: (e.step, e.kind, e.worker))
+        due.sort(key=lambda e: (e.step, e.kind, e.worker, e.replica))
         return due
 
     def defer(self, event: FaultEvent, to_step: int) -> None:
         """Push an event back (e.g. a preempt that cannot checkpoint at a
         mid-window arrival) — deterministic, so logs stay reproducible."""
         self._pending.append(dataclasses.replace(event, step=int(to_step)))
-        self._pending.sort(key=lambda e: (e.step, e.kind, e.worker))
+        self._pending.sort(key=lambda e: (e.step, e.kind, e.worker, e.replica))
 
     # -- effect bookkeeping (the Trainer calls these as it applies) ----------
 

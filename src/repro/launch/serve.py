@@ -5,6 +5,11 @@
         [--policy continuous|static] [--cache-int8] [--mesh-model 2] \
         [--restore /path/to/ckpt [--step N] [--ema]] [--faults slowdown@4]
 
+    # replica router: hedging, SLO admission, replica-scope chaos
+    python -m repro.launch.serve --arch qwen3-0.6b --replicas 3 \
+        --hedge-after 6 --timeout 40 --slo-p99-ms 20 \
+        --faults 'slowdown@0:r0:x8:d32,crash@10:r1,restart@30:r1'
+
     # legacy toy path (static batch, contiguous cache)
     python -m repro.launch.serve --arch gemma3-1b --toy --batch 4 --tokens 16
 
@@ -13,6 +18,10 @@ serving.md): bucketed prefill, paged decode, admission/eviction at
 decode-step granularity, optional TP-sharded decode over the mesh 'model'
 axis, optional chaos injection. ``--restore`` serves a trained checkpoint
 (replicated, TP-sharded, or sim) through the verified restore bridge.
+``--replicas N`` (N > 1) fronts N replica sessions with the
+:class:`repro.serve.ReplicaRouter` on the deterministic virtual clock
+(docs/robustness.md "Serving resilience"): ``--faults`` then takes the
+replica-scope grammar (``kind@step:rN``).
 """
 from __future__ import annotations
 
@@ -56,6 +65,21 @@ def _build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--faults", default="",
                     help="chaos spec, slowdown/preempt kinds only "
                     "(e.g. 'slowdown@4:w0,preempt@9')")
+    # -- replica router -------------------------------------------------------
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="front N replica sessions with the router "
+                    "(virtual clock; --faults takes kind@step:rN)")
+    ap.add_argument("--hedge-after", type=float, default=None,
+                    help="[router] hedge stragglers past max(windowed p95, "
+                    "this floor) virtual units")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="[router] per-attempt deadline before a jittered "
+                    "backoff retry")
+    ap.add_argument("--slo-p99-ms", type=float, default=None,
+                    help="[router] SLO: windowed-p99 latency target in "
+                    "virtual milliseconds (1 unit = 1 ms)")
+    ap.add_argument("--slo-mode", choices=("shed", "queue"), default="shed",
+                    help="[router] action while the SLO is violated")
     ap.add_argument("--restore", default="",
                     help="checkpoint dir: serve trained weights via the "
                     "verified restore bridge")
@@ -82,6 +106,18 @@ def _validate(args) -> None:
         raise SystemExit("--step needs --restore")
     if args.ema and not args.restore:
         raise SystemExit("--ema needs --restore")
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    if args.replicas == 1:
+        for flag, val in (("--hedge-after", args.hedge_after),
+                          ("--timeout", args.timeout),
+                          ("--slo-p99-ms", args.slo_p99_ms)):
+            if val is not None:
+                raise SystemExit(f"{flag} needs --replicas > 1 "
+                                 "(the router path)")
+    elif args.toy or args.policy == "static":
+        raise SystemExit("--replicas > 1 is the router path: continuous "
+                         "policy only, no --toy")
 
 
 def _toy_main(args, cfg, model, params) -> None:
@@ -123,6 +159,40 @@ def _toy_main(args, cfg, model, params) -> None:
         print(f"  {list(map(int, out[i]))}")
 
 
+def _router_main(args, engine, trace) -> None:
+    from repro.serve import ReplicaRouter, RouterConfig, SLOConfig
+    slo = None
+    if args.slo_p99_ms is not None:
+        slo = SLOConfig(target_p99=args.slo_p99_ms, mode=args.slo_mode)
+    router = ReplicaRouter(
+        engine,
+        RouterConfig(num_replicas=args.replicas, timeout=args.timeout,
+                     hedge_after=args.hedge_after, seed=args.seed,
+                     faults=args.faults or None, fault_seed=args.seed),
+        slo=slo)
+    report = router.run(trace)
+    m = report.metrics
+    print(f"[serve] {args.arch} router replicas={args.replicas} "
+          f"slots={args.slots}x{args.replicas}"
+          f"{f' hedge>{args.hedge_after}' if args.hedge_after else ''}"
+          f"{f' timeout={args.timeout}' if args.timeout else ''}"
+          f"{f' slo-p99={args.slo_p99_ms}({args.slo_mode})' if slo else ''}")
+    print(f"  {m['completed']}/{m['total']} completed, {m['rejected']} "
+          f"rejected, {m['lost_requests']} lost in {m['duration']:.1f} "
+          f"virtual units -> goodput {m['goodput']:.3f} req/unit")
+    print(f"  latency p50 {m['p50_latency']:.2f} p99 {m['p99_latency']:.2f}"
+          f" | hedges {m['hedges']} (won {m['hedge_wins']})"
+          f" | retries {m['retries']} | drained {m['drained']}"
+          f" | crashes {m['crashes']} restarts {m['restarts']}")
+    for ev in report.health:
+        print(f"  health: {ev}")
+    for rej in report.rejected[:4]:
+        print(f"  rejected: {rej}")
+    for c in report.completed[:4]:
+        print(f"  rid={c.rid} replica={c.replica}"
+              f"{' hedged' if c.hedged else ''} {c.tokens}")
+
+
 def main(argv=None) -> None:
     args = _build_parser().parse_args(argv)
     _validate(args)
@@ -145,13 +215,18 @@ def main(argv=None) -> None:
         cfg, params, num_slots=args.slots, page_size=args.page_size,
         max_prompt_len=args.max_prompt, max_new_cap=args.max_new,
         cache_int8=args.cache_int8, mesh_model=args.mesh_model,
-        use_kernel=args.use_kernel, faults=args.faults or None,
-        fault_seed=args.seed)
+        use_kernel=args.use_kernel,
+        faults=None if args.replicas > 1 else (args.faults or None),
+        fault_seed=args.seed,
+        clock="virtual" if args.replicas > 1 else "wall")
     trace = make_trace(TraceConfig(
         num_requests=args.requests, rate=args.rate,
         prompt_len_min=2, prompt_len_max=args.max_prompt,
         max_new_min=2, max_new_max=args.max_new,
         vocab=cfg.vocab_size, seed=args.seed))
+    if args.replicas > 1:
+        _router_main(args, engine, trace)
+        return
     report = engine.run(trace, policy=args.policy)
     m = report.metrics
     print(f"[serve] {args.arch} policy={args.policy} slots={args.slots} "

@@ -1,22 +1,33 @@
 """Serving subsystem: continuous batching over a paged, TP-shardable KV
-cache (docs/serving.md).
+cache, fronted by a resilient replica router (docs/serving.md).
 
 * :mod:`repro.serve.trace` — seeded open-loop arrival traces.
 * :mod:`repro.serve.pages` — the shared page pool (+ int8 scale tables).
 * :mod:`repro.serve.paged_model` — jitted paged prefill/decode, TP wrap.
-* :mod:`repro.serve.engine` — the scheduler/engine and checkpoint bridge.
+* :mod:`repro.serve.engine` — the scheduler/engine, per-replica
+  ``StepSession`` surface, and checkpoint bridge.
+* :mod:`repro.serve.router` — hedged backups, timeout/retry, failover.
+* :mod:`repro.serve.slo` — windowed-p99 SLO admission controller.
+* :mod:`repro.serve.health` — replica up/slow/down tracking.
 """
 from repro.serve.engine import (CompletedRequest, ServeEngine, ServeReport,
                                 SERVE_FAULT_KINDS, SERVE_POLICIES,
-                                restore_params)
+                                StepSession, restore_params)
+from repro.serve.health import HEALTH_STATES, HealthMonitor
 from repro.serve.pages import PagePool, PoolConfig, pages_for
 from repro.serve.paged_model import supports_paged
+from repro.serve.router import (ROUTER_FAULT_KINDS, ReplicaRouter,
+                                RouterCompleted, RouterConfig, RouterReport)
+from repro.serve.slo import SLO_MODES, SLOConfig, SLOController
 from repro.serve.trace import (Request, TraceConfig, bucket_for, make_trace,
                                trace_buckets)
 
 __all__ = [
-    "CompletedRequest", "PagePool", "PoolConfig", "Request", "ServeEngine",
-    "ServeReport", "SERVE_FAULT_KINDS", "SERVE_POLICIES", "TraceConfig",
-    "bucket_for", "make_trace", "pages_for", "restore_params",
-    "supports_paged", "trace_buckets",
+    "CompletedRequest", "HEALTH_STATES", "HealthMonitor", "PagePool",
+    "PoolConfig", "ROUTER_FAULT_KINDS", "ReplicaRouter", "Request",
+    "RouterCompleted", "RouterConfig", "RouterReport", "SERVE_FAULT_KINDS",
+    "SERVE_POLICIES", "SLO_MODES", "SLOConfig", "SLOController",
+    "ServeEngine", "ServeReport", "StepSession", "TraceConfig", "bucket_for",
+    "make_trace", "pages_for", "restore_params", "supports_paged",
+    "trace_buckets",
 ]

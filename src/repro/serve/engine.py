@@ -69,6 +69,10 @@ class ServeReport:
     completed: List[CompletedRequest]
     metrics: Dict[str, float]
     events: List[Dict[str, Any]]
+    # graceful-degradation records: requests the engine refused instead of
+    # wedging on — each entry {"rid", "reason", "t"} (reasons:
+    # "queue_overflow", "pool_exhausted")
+    rejected: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
 
     def tokens_by_rid(self) -> Dict[int, List[int]]:
         return {c.rid: list(c.tokens) for c in self.completed}
@@ -100,7 +104,9 @@ class ServeEngine:
                  clock: str = "wall", step_time: float = 1.0,
                  prefill_time: float = 1.0, faults: Optional[str] = None,
                  fault_horizon: int = 256, fault_seed: int = 0,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 strict_capacity: bool = True):
         ok, why = supports_paged(model_cfg)
         if not ok:
             raise ValueError(f"paged serving unsupported: {why}")
@@ -114,6 +120,7 @@ class ServeEngine:
         self.prefill_time = prefill_time
         self.eos_id = eos_id
         self.page_size = page_size
+        self.max_queue = max_queue
         self.max_bucket = trace_lib.bucket_for(max_prompt_len,
                                                floor=page_size, cap=1 << 30)
         self.max_new_cap = max_new_cap
@@ -121,10 +128,15 @@ class ServeEngine:
                                         page_size)
         if num_pages is None:
             num_pages = num_slots * max_pages + 1
-        if num_pages - 1 < max_pages:
+        if strict_capacity and num_pages - 1 < max_pages:
+            # strict (default): every request the caps admit must fit an
+            # idle pool. strict_capacity=False permits deliberately
+            # undersized pools — unfittable requests are then *rejected*
+            # with a structured reason at admission, never wedged on.
             raise ValueError(
                 f"num_pages={num_pages} cannot hold even one request "
-                f"({max_pages} pages + the trash page)")
+                f"({max_pages} pages + the trash page); pass "
+                f"strict_capacity=False to degrade to rejection instead")
         self.pool_cfg = pages_lib.PoolConfig(
             num_layers=model_cfg.num_layers,
             kv_heads=model_cfg.num_kv_heads,
@@ -212,6 +224,32 @@ class ServeEngine:
         if self.clock == "virtual":
             self._vnow += self.prefill_time
 
+    # -- request geometry ------------------------------------------------------
+
+    def validate_request(self, r: trace_lib.Request) -> None:
+        if r.prompt_len > self.max_bucket:
+            raise ValueError(f"request {r.rid}: prompt_len "
+                             f"{r.prompt_len} > bucket cap "
+                             f"{self.max_bucket}")
+        if not 1 <= r.max_new <= self.max_new_cap:
+            raise ValueError(f"request {r.rid}: max_new {r.max_new} "
+                             f"outside [1, {self.max_new_cap}]")
+
+    def pages_needed(self, req: trace_lib.Request) -> int:
+        """Pages a request holds for its whole lifetime: the prefill
+        scatter needs the full bucket, the decode tail the rest."""
+        return max(
+            trace_lib.bucket_for(req.prompt_len, floor=self.page_size,
+                                 cap=self.max_bucket) // self.page_size,
+            pages_lib.pages_for(req.prompt_len + req.max_new,
+                                self.page_size))
+
+    @property
+    def page_capacity(self) -> int:
+        """Most pages any single request can ever be granted."""
+        return min(self.pool_cfg.num_pages - 1,
+                   self.pool_cfg.max_pages_per_slot)
+
     # -- the serving loop -----------------------------------------------------
 
     def run(self, trace: Sequence[trace_lib.Request],
@@ -219,13 +257,7 @@ class ServeEngine:
         if policy not in SERVE_POLICIES:
             raise ValueError(f"policy must be one of {SERVE_POLICIES}")
         for r in trace:
-            if r.prompt_len > self.max_bucket:
-                raise ValueError(f"request {r.rid}: prompt_len "
-                                 f"{r.prompt_len} > bucket cap "
-                                 f"{self.max_bucket}")
-            if not 1 <= r.max_new <= self.max_new_cap:
-                raise ValueError(f"request {r.rid}: max_new {r.max_new} "
-                                 f"outside [1, {self.max_new_cap}]")
+            self.validate_request(r)
         pool = pages_lib.PagePool(self.pool_cfg, dtype=self.model.dtype,
                                   shardings=self._pool_shardings)
         self._bufs = pool.buffers
@@ -236,6 +268,7 @@ class ServeEngine:
         free_slots = list(range(self.pool_cfg.num_slots - 1, -1, -1))
         completed: List[CompletedRequest] = []
         events: List[Dict[str, Any]] = []
+        rejected: List[Dict[str, Any]] = []
         preempt_counts: Dict[int, int] = {}
         self._t0 = time.perf_counter()
         self._vnow = 0.0
@@ -251,22 +284,36 @@ class ServeEngine:
                 prompt_len=st.req.prompt_len, tokens=st.tokens,
                 preemptions=st.preemptions))
 
+        def reject(req: trace_lib.Request, reason: str, now: float) -> None:
+            rejected.append({"rid": req.rid, "reason": reason,
+                             "t": float(now)})
+            events.append({"event": "reject", "rid": req.rid,
+                           "reason": reason, "step": step_idx})
+
         while pending or queue or active:
             now = self._now()
             while pending and pending[0].arrival <= now:
-                queue.append(pending.popleft())
+                req = pending.popleft()
+                if (self.max_queue is not None
+                        and len(queue) >= self.max_queue):
+                    # admission-queue overflow: shed at the door with a
+                    # structured reason (requeued preemptions bypass this
+                    # — they re-enter at the queue head, never shed)
+                    reject(req, "queue_overflow", now)
+                else:
+                    queue.append(req)
             # -- admission ---------------------------------------------------
             may_admit = bool(queue) and (policy == "continuous"
                                          or not active)
             while may_admit and queue and free_slots:
                 req = queue[0]
-                need = max(
-                    trace_lib.bucket_for(req.prompt_len,
-                                         floor=self.page_size,
-                                         cap=self.max_bucket)
-                    // self.page_size,
-                    pages_lib.pages_for(req.prompt_len + req.max_new,
-                                        self.page_size))
+                need = self.pages_needed(req)
+                if need > self.page_capacity:
+                    # can never fit, even into an idle pool (undersized
+                    # strict_capacity=False pools): degrade to rejection
+                    queue.popleft()
+                    reject(req, "pool_exhausted", now)
+                    continue
                 if not pool.can_alloc(need):
                     break
                 queue.popleft()
@@ -347,8 +394,9 @@ class ServeEngine:
 
         return ServeReport(policy=policy, completed=completed,
                            metrics=self._metrics(trace, completed, pool,
-                                                 step_idx, events),
-                           events=events)
+                                                 step_idx, events,
+                                                 rejected=rejected),
+                           events=events, rejected=rejected)
 
     def _admit(self, req, slot: int, need: int, pool: pages_lib.PagePool,
                preemptions: int) -> _Slot:
@@ -368,7 +416,8 @@ class ServeEngine:
         self._advance_prefill(time.perf_counter() - t_start)
         return _Slot(req, admitted, self._now(), first_tok, preemptions)
 
-    def _metrics(self, trace, completed, pool, decode_steps, events):
+    def _metrics(self, trace, completed, pool, decode_steps, events,
+                 rejected=()):
         lats = np.array([c.latency for c in completed] or [0.0])
         ttfts = np.array([c.ttft for c in completed] or [0.0])
         total_tokens = sum(len(c.tokens) for c in completed)
@@ -390,7 +439,131 @@ class ServeEngine:
             "preemptions": sum(1 for e in events if e["event"] == "preempt"),
             "prefill_compiles": self.prefill_compiles,
             "decode_compiles": self.decode_compiles,
+            "rejected": len(rejected),
+            "rejected_queue_overflow": sum(
+                1 for r in rejected if r["reason"] == "queue_overflow"),
+            "rejected_pool_exhausted": sum(
+                1 for r in rejected if r["reason"] == "pool_exhausted"),
         }
+
+
+# ---------------------------------------------------------------------------
+# Incremental per-replica surface (the router drives R of these)
+# ---------------------------------------------------------------------------
+
+
+class StepSession:
+    """One serving replica as an incremental admit/tick surface.
+
+    Sessions share a single engine's jitted prefill/decode and weights —
+    they are R production replicas of one server build — but each owns
+    its KV pool, page table and decode slots, so replicas fail and drain
+    independently. The *caller* owns all timekeeping: ``admit`` takes
+    explicit timestamps and ``tick`` only reports which requests finished,
+    so the router's virtual clock fully determines every report and
+    same-seed replays are bit-identical (ISSUE 8 tentpole contract).
+    Greedy decode makes a request's token stream identical no matter
+    which replica (or how many hedged copies) ran it.
+    """
+
+    def __init__(self, engine: ServeEngine, name: str = ""):
+        self.engine = engine
+        self.name = name
+        self.pool = pages_lib.PagePool(engine.pool_cfg,
+                                       dtype=engine.model.dtype,
+                                       shardings=engine._pool_shardings)
+        self._bufs = self.pool.buffers
+        self.free_slots = list(range(engine.pool_cfg.num_slots - 1, -1, -1))
+        self.active: Dict[int, _Slot] = {}
+        self._slot_of: Dict[int, int] = {}
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    def can_admit(self, req: trace_lib.Request) -> bool:
+        need = self.engine.pages_needed(req)
+        return (bool(self.free_slots) and need <= self.engine.page_capacity
+                and self.pool.can_alloc(need))
+
+    def admit(self, req: trace_lib.Request, admitted_t: float,
+              first_token_t: float, preemptions: int = 0) -> _Slot:
+        """Prefill ``req`` into a free slot (caller checked ``can_admit``
+        and stamps both times). The returned slot state may already be
+        ``done()`` — single-token requests finish at prefill."""
+        need = self.engine.pages_needed(req)
+        slot = self.free_slots.pop()
+        self.pool.alloc(slot, need)
+        eng = self.engine
+        bucket = trace_lib.bucket_for(req.prompt_len, floor=eng.page_size,
+                                      cap=eng.max_bucket)
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :req.prompt_len] = req.prompt
+        meta = np.empty((1 + bucket // eng.page_size,), np.int32)
+        meta[0] = req.prompt_len
+        meta[1:] = self.pool.page_table[slot, :bucket // eng.page_size]
+        tok_dev, self._bufs = eng._prefill(eng.params, tokens, meta,
+                                           self._bufs)
+        st = _Slot(req, admitted_t, first_token_t, int(np.asarray(tok_dev)),
+                   preemptions)
+        self.active[slot] = st
+        self._slot_of[req.rid] = slot
+        return st
+
+    def done(self, st: _Slot) -> bool:
+        return st.produced >= st.req.max_new or (
+            self.engine.eos_id is not None
+            and st.last_token == self.engine.eos_id)
+
+    def release(self, rid: int) -> _Slot:
+        """Free ``rid``'s slot and pages — completion, a hedge loser being
+        cancelled, or an unhealthy replica draining. Returns the slot
+        state so the caller can keep (or drop) its tokens."""
+        slot = self._slot_of.pop(rid)
+        st = self.active.pop(slot)
+        self.pool.free_slot(slot)
+        self.free_slots.append(slot)
+        return st
+
+    def evict_all(self) -> List[_Slot]:
+        """Crash/preempt: drop every in-flight request, freeing all pages.
+        Returns slot states in slot order for deterministic requeue."""
+        sts = [st for _, st in sorted(self.active.items())]
+        for slot in list(self.active):
+            self.pool.free_slot(slot)
+            self.free_slots.append(slot)
+        self.active.clear()
+        self._slot_of.clear()
+        return sts
+
+    def tick(self) -> List[int]:
+        """One decode step over every active slot (one token each).
+        Returns the rids that finished this step; the caller stamps their
+        finish time and calls :meth:`release`."""
+        if not self.active:
+            return []
+        eng = self.engine
+        n_slots = eng.pool_cfg.num_slots
+        state = np.zeros((n_slots, 2 + eng.pool_cfg.max_pages_per_slot),
+                         np.int32)
+        for slot, st in self.active.items():
+            state[slot, 0] = st.last_token
+            state[slot, 1] = st.length
+        state[:, 2:] = self.pool.page_table
+        toks_dev, self._bufs = eng._decode(eng.params, state, self._bufs)
+        next_tokens = np.asarray(toks_dev)
+        finished: List[int] = []
+        for slot in sorted(self.active):
+            st = self.active[slot]
+            st.length += 1
+            tok = int(next_tokens[slot])
+            st.tokens.append(tok)
+            st.last_token = tok
+            st.produced += 1
+            if self.done(st):
+                finished.append(st.req.rid)
+        self.pool.note_occupancy()
+        return finished
 
 
 # ---------------------------------------------------------------------------

@@ -109,6 +109,16 @@ class PagePool:
         self.peak_pages = max(self.peak_pages, self.used_pages)
         return ids
 
+    def try_alloc(self, slot: int, n: int) -> Optional[np.ndarray]:
+        """Graceful :meth:`alloc`: ``None`` when ``n`` pages cannot be
+        reserved (free-list exhaustion or a page-table row too narrow)
+        instead of raising — the caller degrades (rejects/requeues with a
+        structured reason) rather than dying mid-admission."""
+        if (slot in self._owned or n > self.cfg.max_pages_per_slot
+                or n > len(self._free)):
+            return None
+        return self.alloc(slot, n)
+
     def free_slot(self, slot: int) -> None:
         """Return ``slot``'s pages to the pool (evict/complete)."""
         for pid in self._owned.pop(slot, []):

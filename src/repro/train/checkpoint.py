@@ -13,9 +13,11 @@ Hardening beyond atomicity (docs/robustness.md):
 * writes fsync file contents AND the containing directories before the
   atomic rename commits, so a power loss cannot leave a renamed-but-empty
   checkpoint;
-* transient write failures retry with exponential backoff
-  (``CheckpointConfig.write_retries``) before the error propagates — the
-  chaos engine's ``ckpt_io`` fault injects exactly here;
+* transient write failures retry with capped, seeded-jittered
+  exponential backoff (``CheckpointConfig.write_retries`` /
+  ``retry_max_backoff_s`` / ``retry_jitter``; :func:`retry_delays`)
+  before the error propagates — the chaos engine's ``ckpt_io`` fault
+  injects exactly here;
 * restore walks back to the last *verified-good* ``step_*`` dir when the
   requested checkpoint is corrupt, and ``latest_step`` falls back to
   scanning existing step dirs when ``LATEST`` dangles — good checkpoints
@@ -99,8 +101,29 @@ def _write_attempt(tmp: str, flat: Dict[str, np.ndarray], manifest: Dict,
     _fsync_path(tmp)
 
 
+def retry_delays(retries: int, backoff_s: float, *,
+                 max_backoff_s: float = 0.25, jitter: float = 0.5,
+                 seed: int = 0) -> List[float]:
+    """The seeded retry-delay schedule ``save`` sleeps through.
+
+    Exponential backoff capped at ``max_backoff_s``, then scaled by a
+    uniform jitter in ``[1, 1 + jitter]`` so a fleet of writers that
+    failed together does not retry together (the classic thundering-herd
+    fix). The jitter stream is seeded — the same ``seed`` yields the
+    identical schedule, which keeps chaos runs replayable.
+    """
+    rng = np.random.RandomState(seed)
+    out = []
+    for attempt in range(max(retries, 0)):
+        delay = min(backoff_s * (2 ** attempt), max_backoff_s)
+        out.append(delay * (1.0 + jitter * float(rng.uniform())))
+    return out
+
+
 def save(directory: str, step: int, tree: Any, metadata: Optional[Dict] = None,
          keep: int = 3, *, retries: int = 3, backoff_s: float = 0.01,
+         max_backoff_s: float = 0.25, jitter: float = 0.5,
+         backoff_seed: int = 0,
          io_check: Optional[Callable[[], None]] = None,
          on_retry: Optional[Callable[[int, BaseException], None]] = None,
          sleep: Callable[[float], None] = time.sleep) -> str:
@@ -108,8 +131,10 @@ def save(directory: str, step: int, tree: Any, metadata: Optional[Dict] = None,
 
     ``io_check`` is called at the start of every write attempt and may
     raise ``OSError`` (fault injection / preflight quota checks). Failed
-    attempts retry up to ``retries`` times with exponential backoff
-    (``on_retry(attempt, exc)`` observes each), then re-raise.
+    attempts retry up to ``retries`` times with jittered exponential
+    backoff — capped at ``max_backoff_s``, scaled by a seeded uniform
+    jitter in ``[1, 1 + jitter]`` (see :func:`retry_delays`) — with
+    ``on_retry(attempt, exc)`` observing each, then re-raise.
     """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
@@ -117,6 +142,8 @@ def save(directory: str, step: int, tree: Any, metadata: Optional[Dict] = None,
     manifest = {"step": step, "arrays": sorted(flat),
                 "checksums": {k: _checksum(v) for k, v in flat.items()},
                 **(metadata or {})}
+    delays = retry_delays(retries, backoff_s, max_backoff_s=max_backoff_s,
+                          jitter=jitter, seed=backoff_seed)
     attempt = 0
     while True:
         tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
@@ -129,11 +156,11 @@ def save(directory: str, step: int, tree: Any, metadata: Optional[Dict] = None,
             break
         except OSError as e:
             shutil.rmtree(tmp, ignore_errors=True)
-            if attempt >= max(retries, 0):
+            if attempt >= len(delays):
                 raise
             if on_retry is not None:
                 on_retry(attempt, e)
-            sleep(backoff_s * (2 ** attempt))
+            sleep(delays[attempt])
             attempt += 1
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)

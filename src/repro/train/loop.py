@@ -442,6 +442,10 @@ class Trainer:
             meta, self.cfg.checkpoint.keep,
             retries=getattr(self.cfg.checkpoint, "write_retries", 3),
             backoff_s=getattr(self.cfg.checkpoint, "retry_backoff_s", 0.01),
+            max_backoff_s=getattr(self.cfg.checkpoint,
+                                  "retry_max_backoff_s", 0.25),
+            jitter=getattr(self.cfg.checkpoint, "retry_jitter", 0.5),
+            backoff_seed=self.cfg.seed,
             io_check=inj.ckpt_io_check if inj is not None else None,
             on_retry=inj.on_ckpt_retry(self.step) if inj is not None else None)
 

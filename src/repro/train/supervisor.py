@@ -96,5 +96,9 @@ def run_supervised(cfg: TrainConfig, *,
                     injector.record("give_up", step=tr.step,
                                     restarts=attempts,
                                     error=type(e).__name__)
+                    # budget exhausted: the structured log would otherwise
+                    # die with the run — surface it on the exception so
+                    # the caller (and the postmortem) still gets it
+                    e.recovery_log = list(injector.log)
                 raise
             resume = True

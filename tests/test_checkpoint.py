@@ -192,6 +192,42 @@ def test_save_raises_after_retry_budget(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) is None
 
 
+def test_retry_delays_jittered_capped_seeded():
+    d = ckpt.retry_delays(6, 0.01, max_backoff_s=0.05, jitter=0.5, seed=3)
+    assert len(d) == 6
+    base = [min(0.01 * 2 ** a, 0.05) for a in range(6)]
+    for got, b in zip(d, base):
+        assert b <= got <= b * 1.5          # within [base, base*(1+jitter)]
+    assert d[-1] <= 0.05 * 1.5              # the cap holds at the tail
+    assert len(set(round(x / b, 6) for x, b in zip(d, base))) > 1, \
+        "jitter must decorrelate the schedule"
+    assert d == ckpt.retry_delays(6, 0.01, max_backoff_s=0.05, jitter=0.5,
+                                  seed=3), "same seed, same schedule"
+    assert d != ckpt.retry_delays(6, 0.01, max_backoff_s=0.05, jitter=0.5,
+                                  seed=4)
+    assert ckpt.retry_delays(3, 0.01, jitter=0.0) == [0.01, 0.02, 0.04]
+
+
+def test_save_sleeps_the_jittered_schedule(tmp_path):
+    """save's actual sleeps match retry_delays for the same knobs — the
+    backoff is observable, capped, and replayable."""
+    fails = {"n": 3}
+
+    def io_check():
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient")
+
+    slept = []
+    ckpt.save(str(tmp_path), 1, _tree(), retries=4, backoff_s=0.01,
+              max_backoff_s=0.02, jitter=0.5, backoff_seed=9,
+              io_check=io_check, sleep=slept.append)
+    assert slept == ckpt.retry_delays(4, 0.01, max_backoff_s=0.02,
+                                      jitter=0.5, seed=9)[:3]
+    assert max(slept) <= 0.02 * 1.5
+    assert ckpt.verify(str(tmp_path), 1)
+
+
 def test_crash_mid_save_leaves_previous_checkpoint_good(tmp_path):
     """SIGKILL during a checkpoint write (a real process death, not an
     exception) must leave the previous checkpoint restorable."""

@@ -97,7 +97,7 @@ def test_bench_files_exist():
     names = {os.path.basename(p) for p in _bench_files()}
     assert {"BENCH_loop.json", "BENCH_events.json",
             "BENCH_spmd.json", "BENCH_recovery.json",
-            "BENCH_serve.json"} <= names
+            "BENCH_serve.json", "BENCH_router.json"} <= names
 
 
 @pytest.mark.parametrize("path", _bench_files(),

@@ -44,6 +44,63 @@ def test_plan_rejects_unknown_kind():
         faults.plan_from_spec("meteor@3", num_steps=10, num_workers=2)
 
 
+def test_unknown_kind_error_lists_valid_kinds():
+    """Mirror registry.get_strategy: the error names every valid kind and
+    alias, so a typo is a one-read fix."""
+    with pytest.raises(ValueError) as ei:
+        faults.plan_from_spec("meteor@3", num_steps=10, num_workers=2)
+    msg = str(ei.value)
+    for kind in faults.FAULT_KINDS:
+        assert kind in msg
+    assert "kill=crash" in msg and "slow=slowdown" in msg
+    assert "meteor" in msg and "'meteor@3'" in msg
+    with pytest.raises(ValueError, match="valid kinds"):
+        faults.FaultEvent("meteor", 3)
+
+
+def test_replica_scope_spec_grammar():
+    plan = faults.plan_from_spec(
+        "crash@4:r1,slowdown@0:r0:x8:d32,restart@20:r1",
+        num_steps=64, num_workers=3, num_replicas=3)
+    ev = {(e.kind, e.step): e for e in plan.events}
+    assert ev[("crash", 4)].replica == 1
+    assert ev[("crash", 4)].worker == -1
+    slow = ev[("slowdown", 0)]
+    assert (slow.replica, slow.factor, slow.duration) == (0, 8.0, 32)
+    assert ev[("restart", 20)].replica == 1
+    # random placement draws replicas (seeded) under replica scope
+    p1 = faults.plan_from_spec("crash=3", num_steps=50, num_workers=4,
+                               seed=5, num_replicas=4)
+    p2 = faults.plan_from_spec("crash=3", num_steps=50, num_workers=4,
+                               seed=5, num_replicas=4)
+    assert p1 == p2
+    assert all(0 <= e.replica < 4 and e.worker == -1 for e in p1.events)
+
+
+def test_spec_field_errors():
+    with pytest.raises(ValueError, match="both a worker .* and a replica"):
+        faults.plan_from_spec("crash@4:w1:r2", num_steps=10, num_workers=2)
+    with pytest.raises(ValueError, match="duplicate fault spec field"):
+        faults.plan_from_spec("slow@4:x2:x3", num_steps=10, num_workers=2)
+    with pytest.raises(ValueError, match="bad fault spec field"):
+        faults.plan_from_spec("crash@4:q7", num_steps=10, num_workers=2)
+
+
+def test_training_scope_rng_stream_unchanged_by_replica_fields():
+    """num_replicas=0 (every training call site) must keep the legacy
+    draw order: ckpt_io/preempt still consume a worker draw before being
+    forced to -1, so existing seeded plans are byte-stable."""
+    p = faults.plan_from_spec("crash=1,ckpt_io=1,slow=1", num_steps=40,
+                              num_workers=6, seed=3)
+    q = faults.plan_from_spec("crash=1,ckpt_io=1,slow=1", num_steps=40,
+                              num_workers=6, seed=3)
+    assert p == q
+    by_kind = {e.kind: e for e in p.events}
+    assert by_kind["ckpt_io"].worker == -1
+    assert by_kind["crash"].worker >= 0
+    assert all(e.replica == -1 for e in p.events)
+
+
 def test_injector_fires_at_most_once():
     plan = faults.plan_from_spec("crash@5:w1", num_steps=10, num_workers=4)
     inj = faults.FaultInjector(plan)

@@ -1,0 +1,334 @@
+"""Replica router core: StepSession incremental parity, single-replica
+token equivalence with the engine, deterministic replay, hedged backup
+requests, timeout/retry with jittered backoff, SLO admission (shed and
+queue modes, checkpointable controller state), and graceful rejection
+paths. Chaos/failover scenarios live in test_router_chaos.py."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import get_model
+from repro.serve import (ReplicaRouter, Request, RouterConfig, SLOConfig,
+                         SLOController, ServeEngine, StepSession,
+                         TraceConfig, make_trace)
+
+
+def _trace(n=12, *, seed=0, rate=2.0, max_prompt=12, max_new=8, vocab=128,
+           min_new=2):
+    return make_trace(TraceConfig(
+        num_requests=n, rate=rate, prompt_len_min=2, prompt_len_max=max_prompt,
+        max_new_min=min_new, max_new_max=max_new, vocab=vocab, seed=seed))
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def engine(qwen):
+    cfg, _, params = qwen
+    return ServeEngine(cfg, params, num_slots=2, page_size=4,
+                       max_prompt_len=12, max_new_cap=8, clock="virtual")
+
+
+def _accounted(report, trace):
+    done = {c.rid for c in report.completed}
+    rej = {r["rid"] for r in report.rejected}
+    assert not done & rej
+    assert done | rej == {r.rid for r in trace}
+    assert report.metrics["lost_requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# StepSession: the incremental per-replica surface
+# ---------------------------------------------------------------------------
+
+
+def test_step_session_matches_engine_tokens(engine):
+    trace = _trace(4, rate=1000.0)        # all arrive ~immediately
+    ref = engine.run(trace).tokens_by_rid()
+    sess = StepSession(engine)
+    got = {}
+    backlog = list(trace)
+    while backlog or sess.active:
+        while backlog and sess.can_admit(backlog[0]):
+            req = backlog.pop(0)
+            st = sess.admit(req, 0.0, 0.0)
+            if sess.done(st):
+                got[req.rid] = sess.release(req.rid).tokens
+        for rid in sess.tick():
+            got[rid] = sess.release(rid).tokens
+    assert got == ref
+
+
+def test_step_session_release_frees_everything(engine):
+    sess = StepSession(engine)
+    free0 = sess.pool.free_pages
+    req = _trace(1, rate=1000.0)[0]
+    sess.admit(req, 0.0, 0.0)
+    assert sess.pool.free_pages < free0
+    sess.release(req.rid)
+    assert sess.pool.free_pages == free0
+    assert not sess.active and len(sess.free_slots) == 2
+
+
+def test_step_session_evict_all_orders_by_slot(engine):
+    sess = StepSession(engine)
+    trace = _trace(2, rate=1000.0, min_new=4, max_new=8)
+    for r in trace:
+        sess.admit(r, 0.0, 0.0)
+    sts = sess.evict_all()
+    assert [st.req.rid for st in sts] == sorted(st.req.rid for st in sts)
+    assert sess.pool.free_pages == engine.pool_cfg.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Router: equivalence, replay, spread
+# ---------------------------------------------------------------------------
+
+
+def test_single_replica_token_parity(engine):
+    trace = _trace(8)
+    ref = engine.run(trace).tokens_by_rid()
+    rep = ReplicaRouter(engine, RouterConfig(num_replicas=1)).run(trace)
+    _accounted(rep, trace)
+    assert rep.tokens_by_rid() == ref
+
+
+def test_multi_replica_token_parity_and_spread(engine):
+    trace = _trace(12)
+    ref = engine.run(trace).tokens_by_rid()
+    rep = ReplicaRouter(engine, RouterConfig(num_replicas=3)).run(trace)
+    _accounted(rep, trace)
+    assert rep.tokens_by_rid() == ref
+    assert len({c.replica for c in rep.completed}) > 1, \
+        "least-loaded dispatch should spread across replicas"
+
+
+def test_replay_bit_identical(engine):
+    trace = _trace(12)
+    mk = lambda: ReplicaRouter(  # noqa: E731
+        engine, RouterConfig(num_replicas=3, hedge_after=6.0,
+                             timeout=50.0)).run(trace)
+    a, b = mk(), mk()
+    assert a.metrics == b.metrics
+    assert a.events == b.events
+    assert a.health == b.health
+    assert a.tokens_by_rid() == b.tokens_by_rid()
+    assert [dataclasses.astuple(c) for c in a.completed] == \
+        [dataclasses.astuple(c) for c in b.completed]
+
+
+# ---------------------------------------------------------------------------
+# Hedged backup requests
+# ---------------------------------------------------------------------------
+
+
+def test_hedging_routes_around_straggler(engine):
+    trace = _trace(24, min_new=4)
+    spec = "slowdown@0:r0:x10:d400"
+    unhedged = ReplicaRouter(engine, RouterConfig(
+        num_replicas=3, faults=spec)).run(trace)
+    hedged = ReplicaRouter(engine, RouterConfig(
+        num_replicas=3, faults=spec, hedge_after=6.0)).run(trace)
+    _accounted(hedged, trace)
+    assert hedged.metrics["hedges"] > 0
+    assert hedged.metrics["hedge_wins"] > 0
+    assert hedged.metrics["p99_latency"] < unhedged.metrics["p99_latency"]
+    # greedy decode: a hedge changes who answers, never the answer
+    assert hedged.tokens_by_rid() == engine.run(trace).tokens_by_rid()
+    assert any(c.hedged for c in hedged.completed)
+
+
+def test_hedge_threshold_tracks_window():
+    r = ReplicaRouter.__new__(ReplicaRouter)
+    r.cfg = RouterConfig(num_replicas=2, hedge_after=5.0,
+                         hedge_min_samples=4, hedge_quantile=95.0)
+    assert r._hedge_threshold([]) == 5.0          # cold: floor applies
+    assert r._hedge_threshold([1.0, 1.0]) == 5.0  # still warming
+    assert r._hedge_threshold([1.0] * 8) == 5.0   # floor beats tiny p95
+    big = r._hedge_threshold([20.0] * 8)
+    assert big == pytest.approx(20.0)             # window beats the floor
+
+
+# ---------------------------------------------------------------------------
+# Timeout + jittered retry
+# ---------------------------------------------------------------------------
+
+
+def test_timeout_retries_then_succeeds(engine):
+    # one replica, slowed 50x for 20 steps: first attempts time out, the
+    # backoff lands after the slowdown window and the retries complete
+    trace = _trace(4, rate=2.0, min_new=2, max_new=4)
+    rep = ReplicaRouter(engine, RouterConfig(
+        num_replicas=1, timeout=8.0, max_retries=3, backoff=8.0,
+        faults="slowdown@0:r0:x50:d20")).run(trace)
+    _accounted(rep, trace)
+    assert rep.metrics["timeouts"] > 0
+    assert rep.metrics["retries"] > 0
+    assert rep.metrics["completed"] == len(trace)
+    assert any(c.retries > 0 for c in rep.completed)
+
+
+def test_timeout_budget_exhaustion_rejects_structured(engine):
+    trace = _trace(6, min_new=4)
+    rep = ReplicaRouter(engine, RouterConfig(
+        num_replicas=2, timeout=5.0, max_retries=1,
+        faults="slowdown@0:r0:x50:d400,slowdown@0:r1:x50:d400")).run(trace)
+    _accounted(rep, trace)
+    assert rep.metrics["completed"] == 0
+    assert all(r["reason"] == "timeout" for r in rep.rejected)
+
+
+def test_retry_backoff_is_jittered_and_capped(engine):
+    trace = _trace(6, min_new=4)
+    cfg = RouterConfig(num_replicas=1, timeout=5.0, max_retries=3,
+                       backoff=1.0, max_backoff=2.0, jitter=0.5,
+                       faults="slowdown@0:r0:x50:d400")
+    rep = ReplicaRouter(engine, cfg).run(trace)
+    delays = [e["delay"] for e in rep.events if e["event"] == "retry"]
+    assert delays, "slow replica must trigger retries"
+    for d in delays:
+        assert 1.0 <= d <= 2.0 * 1.5       # within cap * (1 + jitter)
+    assert len(set(delays)) > 1, "jitter must decorrelate retry delays"
+    rep2 = ReplicaRouter(engine, cfg).run(trace)
+    assert delays == [e["delay"] for e in rep2.events
+                      if e["event"] == "retry"], "jitter is seeded"
+
+
+# ---------------------------------------------------------------------------
+# SLO admission
+# ---------------------------------------------------------------------------
+
+
+def _overload(n=48, seed=3):
+    # sustained overload for a 2-slot single replica: queueing delay grows
+    # until the windowed p99 trips the controller mid-trace
+    return _trace(n, seed=seed, rate=1.0, min_new=4, max_new=8)
+
+
+def test_slo_shed_caps_latency_under_overload(engine):
+    trace = _overload()
+    base = ReplicaRouter(engine, RouterConfig(num_replicas=1)).run(trace)
+    slo = SLOConfig(target_p99=10.0, window=16, min_samples=4)
+    rep = ReplicaRouter(engine, RouterConfig(num_replicas=1),
+                        slo=slo).run(trace)
+    _accounted(rep, trace)
+    assert rep.metrics["shed"] > 0
+    assert rep.metrics["slo_trips"] >= 1
+    assert all(r["reason"] == "slo_shed" for r in rep.rejected)
+    assert rep.metrics["p99_latency"] < base.metrics["p99_latency"] * 0.6, \
+        "shedding must cap the served tail, not just drop requests"
+
+
+def _burst_then_trickle(n_burst=24, n_tail=20, gap=12.0, seed=3):
+    # overload burst, then a sparse tail: the controller must trip during
+    # the burst and re-open (hysteresis) once probe latencies recover
+    burst = _trace(n_burst, seed=seed, rate=4.0, min_new=4)
+    tail = _trace(n_tail, seed=seed + 1, rate=0.15, min_new=2, max_new=4)
+    t0 = burst[-1].arrival + gap
+    return list(burst) + [
+        dataclasses.replace(r, rid=n_burst + r.rid, arrival=t0 + r.arrival)
+        for r in tail]
+
+
+def test_slo_sheds_then_reenters_target(engine):
+    trace = _burst_then_trickle()
+    slo = SLOConfig(target_p99=15.0, window=8, min_samples=4,
+                    quantile=90.0, probe_every=2)
+    rep = ReplicaRouter(engine, RouterConfig(num_replicas=1),
+                        slo=slo).run(trace)
+    _accounted(rep, trace)
+    assert rep.metrics["shed"] > 0
+    assert rep.metrics["slo_trips"] >= 1
+    assert rep.metrics["slo_reentered"] == 1, \
+        "once the burst drains, probe latencies must re-open the gate"
+    # requests served after re-entry are fresh, not backlogged
+    tail_done = [c for c in rep.completed if c.rid >= 24]
+    assert tail_done and any(c.latency < 15.0 for c in tail_done)
+
+
+def test_slo_queue_mode_holds_instead_of_dropping(engine):
+    trace = _overload()
+    slo = SLOConfig(target_p99=15.0, mode="queue", window=16, min_samples=4)
+    rep = ReplicaRouter(engine, RouterConfig(num_replicas=1),
+                        slo=slo).run(trace)
+    _accounted(rep, trace)
+    assert rep.metrics["completed"] == len(trace), \
+        "queue mode delays load, it never drops it"
+    assert rep.metrics["slo_trips"] >= 1
+    assert rep.tokens_by_rid() == engine.run(trace).tokens_by_rid()
+
+
+def test_slo_controller_state_roundtrip():
+    a = SLOController(SLOConfig(target_p99=10.0, window=8, min_samples=4))
+    for x in [1.0, 2.0, 30.0, 40.0, 50.0]:
+        a.observe(x)
+    b = SLOController(SLOConfig(target_p99=10.0, window=8, min_samples=4))
+    b.load_state_dict(a.state_dict())
+    assert b.estimate() == a.estimate()
+    assert b.violating == a.violating
+    for x in [1.0, 1.0, 1.0, 2.0]:
+        a.observe(x)
+        b.observe(x)
+        assert a.admit(0.0) == b.admit(0.0)
+    assert b.state_dict() == a.state_dict()
+
+
+def test_slo_config_validation():
+    with pytest.raises(ValueError, match="mode"):
+        SLOConfig(target_p99=1.0, mode="panic")
+    with pytest.raises(ValueError, match="target_p99"):
+        SLOConfig(target_p99=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Graceful rejection + config validation
+# ---------------------------------------------------------------------------
+
+
+def test_router_queue_overflow_sheds_structured(engine):
+    trace = _trace(16, rate=1000.0)       # a burst lands all at once
+    rep = ReplicaRouter(engine, RouterConfig(
+        num_replicas=1, max_queue=3)).run(trace)
+    _accounted(rep, trace)
+    over = [r for r in rep.rejected if r["reason"] == "queue_overflow"]
+    assert over, "burst past the waiting-room bound must shed"
+    assert rep.metrics["completed"] >= 3
+
+
+def test_router_pool_exhausted_reject(qwen):
+    cfg, _, params = qwen
+    tiny = ServeEngine(cfg, params, num_slots=2, page_size=4,
+                       max_prompt_len=12, max_new_cap=8, clock="virtual",
+                       num_pages=3, strict_capacity=False)
+    trace = _trace(4, max_prompt=12, min_new=4)
+    rep = ReplicaRouter(tiny, RouterConfig(num_replicas=2)).run(trace)
+    _accounted(rep, trace)
+    assert any(r["reason"] == "pool_exhausted" for r in rep.rejected)
+
+
+def test_router_rejects_training_only_fault_kinds(engine):
+    with pytest.raises(ValueError, match="ckpt_io"):
+        ReplicaRouter(engine, RouterConfig(num_replicas=2,
+                                           faults="ckpt_io@3:r0"))
+
+
+def test_router_rejects_out_of_range_replica(engine):
+    with pytest.raises(ValueError, match="replica 5"):
+        ReplicaRouter(engine, RouterConfig(num_replicas=2,
+                                           faults="crash@3:r5"))
+
+
+def test_router_config_validation():
+    with pytest.raises(ValueError, match="num_replicas"):
+        RouterConfig(num_replicas=0)
+    with pytest.raises(ValueError, match="step_time"):
+        RouterConfig(num_replicas=2, step_time=0.0)

@@ -1,0 +1,120 @@
+"""Router failover under replica-scope chaos: crash/restart drains with
+zero lost requests and token parity, preemption auto-revives, total
+outage degrades to structured rejection, random replica placement is
+seeded, and whole chaos runs (health log included) replay bit-identically
+— the serving twin of test_chaos.py's training-side guarantees."""
+import jax
+import pytest
+
+from repro import configs
+from repro.models import get_model
+from repro.serve import (ReplicaRouter, RouterConfig, SLOConfig, ServeEngine,
+                         TraceConfig, make_trace)
+
+
+def _trace(n=24, *, seed=0, rate=2.0):
+    return make_trace(TraceConfig(
+        num_requests=n, rate=rate, prompt_len_min=2, prompt_len_max=12,
+        max_new_min=4, max_new_max=8, vocab=128, seed=seed))
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServeEngine(cfg, params, num_slots=2, page_size=4,
+                       max_prompt_len=12, max_new_cap=8, clock="virtual")
+
+
+def _accounted(report, trace):
+    done = {c.rid for c in report.completed}
+    rej = {r["rid"] for r in report.rejected}
+    assert not done & rej
+    assert done | rej == {r.rid for r in trace}
+    assert report.metrics["lost_requests"] == 0
+
+
+def test_crash_restart_drains_and_recovers(engine):
+    trace = _trace()
+    rep = ReplicaRouter(engine, RouterConfig(
+        num_replicas=3, faults="crash@4:r1,restart@20:r1")).run(trace)
+    _accounted(rep, trace)
+    assert rep.metrics["completed"] == len(trace), "zero lost requests"
+    assert rep.metrics["crashes"] == 1 and rep.metrics["restarts"] == 1
+    assert rep.metrics["drained"] > 0
+    # drained requests recompute from scratch: token-identical (greedy)
+    assert rep.tokens_by_rid() == engine.run(trace).tokens_by_rid()
+    kinds = [e["event"] for e in rep.health]
+    assert "down" in kinds and "up" in kinds
+    assert any(c.drains > 0 for c in rep.completed)
+
+
+def test_drained_requests_redispatch_in_arrival_order(engine):
+    trace = _trace()
+    rep = ReplicaRouter(engine, RouterConfig(
+        num_replicas=2, faults="crash@6:r0,restart@40:r0")).run(trace)
+    _accounted(rep, trace)
+    drained = sorted((c for c in rep.completed if c.drains > 0),
+                     key=lambda c: c.admitted)
+    assert [c.rid for c in drained] == \
+        [c.rid for c in sorted(drained, key=lambda c: (c.arrival, c.rid))]
+
+
+def test_preempt_auto_revives(engine):
+    trace = _trace()
+    rep = ReplicaRouter(engine, RouterConfig(
+        num_replicas=2, faults="preempt@3:r0:d10")).run(trace)
+    _accounted(rep, trace)
+    assert rep.metrics["completed"] == len(trace)
+    assert rep.metrics["restarts"] == 1, "preemption returns by itself"
+    assert rep.tokens_by_rid() == engine.run(trace).tokens_by_rid()
+
+
+def test_total_outage_rejects_structured_not_lost(engine):
+    trace = _trace(12)
+    rep = ReplicaRouter(engine, RouterConfig(
+        num_replicas=2, faults="crash@2:r0,crash@2:r1")).run(trace)
+    _accounted(rep, trace)
+    assert rep.metrics["rejected"] > 0
+    assert all(r["reason"] == "no_healthy_replica" for r in rep.rejected)
+
+
+def test_hedging_survives_hedge_replica_crash(engine):
+    # the straggling primary is slow, the hedge target then crashes: the
+    # surviving copy must be promoted and no request lost
+    trace = _trace()
+    rep = ReplicaRouter(engine, RouterConfig(
+        num_replicas=3, hedge_after=4.0,
+        faults="slowdown@0:r0:x10:d400,crash@12:r1,restart@60:r1")
+    ).run(trace)
+    _accounted(rep, trace)
+    assert rep.metrics["completed"] == len(trace)
+    assert rep.tokens_by_rid() == engine.run(trace).tokens_by_rid()
+
+
+def test_random_replica_placement_is_seeded(engine):
+    trace = _trace(12)
+    mk = lambda s: ReplicaRouter(engine, RouterConfig(  # noqa: E731
+        num_replicas=3, faults="crash=2,restart@80:r0,restart@80:r1,"
+        "restart@80:r2", fault_seed=s, fault_horizon=12)).run(trace)
+    a, b = mk(7), mk(7)
+    assert a.health == b.health
+    assert a.metrics == b.metrics
+    assert mk(8).health != a.health or mk(8).metrics != a.metrics
+
+
+def test_chaos_replay_bit_identical(engine):
+    trace = _trace()
+    mk = lambda: ReplicaRouter(engine, RouterConfig(  # noqa: E731
+        num_replicas=3, hedge_after=5.0, timeout=60.0,
+        faults="slowdown@0:r0:x8:d50,crash@10:r2,restart@30:r2,"
+        "preempt@40:r1:d8"), slo=SLOConfig(
+            target_p99=40.0, window=16, min_samples=4)).run(trace)
+    a, b = mk(), mk()
+    _accounted(a, trace)
+    assert a.metrics == b.metrics
+    assert a.events == b.events
+    assert a.health == b.health
+    assert a.rejected == b.rejected
+    assert a.tokens_by_rid() == b.tokens_by_rid()

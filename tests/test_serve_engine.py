@@ -370,3 +370,56 @@ def test_restore_missing_checkpoint(tmp_path):
     cfg = configs.get_smoke_config("qwen3-0.6b")
     with pytest.raises(FileNotFoundError):
         restore_params(str(tmp_path / "nope"), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: overflow/exhaustion reject, never wedge
+# ---------------------------------------------------------------------------
+
+
+def test_strict_capacity_still_raises_by_default(qwen):
+    cfg, _, params = qwen
+    with pytest.raises(ValueError, match="strict_capacity=False"):
+        ServeEngine(cfg, params, num_slots=2, page_size=4,
+                    max_prompt_len=12, max_new_cap=8, num_pages=3)
+
+
+def test_undersized_pool_rejects_long_prompts_structured(qwen):
+    """strict_capacity=False permits a pool too small for the longest
+    admissible request; those requests are rejected with a structured
+    reason while everything that fits still completes."""
+    cfg, _, params = qwen
+    eng = ServeEngine(cfg, params, num_slots=2, page_size=4,
+                      max_prompt_len=16, max_new_cap=8, num_pages=4,
+                      strict_capacity=False, clock="virtual")
+    assert eng.page_capacity == 3
+    short = _trace(3, max_prompt=6, max_new=4)      # needs <= 3 pages
+    long = make_trace(TraceConfig(
+        num_requests=2, rate=4.0, prompt_len_min=13, prompt_len_max=16,
+        max_new_min=4, max_new_max=8, vocab=128, seed=7))
+    trace = sorted(short + [type(r)(r.rid + 100, r.arrival, r.prompt,
+                                    r.max_new) for r in long],
+                   key=lambda r: (r.arrival, r.rid))
+    rep = eng.run(trace)
+    assert rep.metrics["completed"] == 3
+    assert rep.metrics["rejected"] == 2
+    assert rep.metrics["rejected_pool_exhausted"] == 2
+    assert all(r["reason"] == "pool_exhausted" and r["rid"] >= 100
+               for r in rep.rejected)
+    assert {c.rid for c in rep.completed} == {r.rid for r in short}
+
+
+def test_queue_overflow_rejects_structured(qwen):
+    cfg, _, params = qwen
+    eng = ServeEngine(cfg, params, num_slots=1, page_size=4,
+                      max_prompt_len=8, max_new_cap=8, max_queue=2,
+                      clock="virtual")
+    trace = _trace(8, rate=1000.0, max_prompt=8, min_new=6, max_new=8)
+    rep = eng.run(trace)
+    over = [r for r in rep.rejected if r["reason"] == "queue_overflow"]
+    assert over and rep.metrics["rejected_queue_overflow"] == len(over)
+    assert rep.metrics["completed"] + rep.metrics["rejected"] == len(trace)
+    assert rep.metrics["completed"] >= 1
+    # rejection is part of the deterministic virtual-time replay
+    rep2 = eng.run(trace)
+    assert rep2.rejected == rep.rejected

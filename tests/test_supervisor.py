@@ -57,10 +57,15 @@ def test_restart_budget_exhaustion_gives_up(tmp_path):
         tuple(faults.FaultEvent("preempt", s, grace=False)
               for s in (3, 5, 7)), seed=0))
     cfg = _cfg(tmp_path, max_restarts=1, every=0)   # no cadence saves
-    with pytest.raises(faults.Preemption):
+    with pytest.raises(faults.Preemption) as ei:
         run_supervised(cfg, latency=LAT, injector=inj)
     assert inj.log[-1]["event"] == "give_up"
     assert inj.log[-1]["restarts"] == 2
+    # the structured log is surfaced on the exception, not lost with the
+    # run: the caller's postmortem sees every recovery action
+    assert ei.value.recovery_log == list(inj.log)
+    assert ei.value.recovery_log[-1]["event"] == "give_up"
+    assert any(e["event"] == "restore" for e in ei.value.recovery_log)
 
 
 def test_recovery_without_any_checkpoint_restarts_fresh(tmp_path):
