@@ -46,7 +46,8 @@ def _arm(m, **extra):
            "p50_latency": m["p50_latency"], "p99_latency": m["p99_latency"],
            "hedges": m["hedges"], "hedge_wins": m["hedge_wins"],
            "drained": m["drained"], "crashes": m["crashes"],
-           "restarts": m["restarts"], "shed": m["shed"]}
+           "preempts": m["preempts"], "restarts": m["restarts"],
+           "shed": m["shed"]}
     out.update(extra)
     return out
 

@@ -147,15 +147,20 @@ def _parse_item(item: str) -> _SpecItem:
         parts = rest.split(":")
         fields: Dict[str, float] = {}
         for p in parts[1:]:
-            if p[:1] in ("w", "r", "x", "d") and p[1:]:
-                if p[0] in fields:
-                    raise ValueError(f"duplicate fault spec field {p!r} "
-                                     f"in {item!r}")
-                fields[p[0]] = float(p[1:])
-            else:
+            try:
+                value = (float(p[1:])
+                         if p[:1] in ("w", "r", "x", "d") and p[1:]
+                         else None)
+            except ValueError:           # known key, non-numeric suffix
+                value = None
+            if value is None:
                 raise ValueError(f"bad fault spec field {p!r} in {item!r} "
                                  f"(valid: wN worker, rN replica, "
                                  f"xF factor, dD duration)")
+            if p[0] in fields:
+                raise ValueError(f"duplicate fault spec field {p!r} "
+                                 f"in {item!r}")
+            fields[p[0]] = value
         if "w" in fields and "r" in fields:
             raise ValueError(f"fault {item!r} targets both a worker (:w) "
                              f"and a replica (:r) — pick one scope")

@@ -183,7 +183,8 @@ def _router_main(args, engine, trace) -> None:
     print(f"  latency p50 {m['p50_latency']:.2f} p99 {m['p99_latency']:.2f}"
           f" | hedges {m['hedges']} (won {m['hedge_wins']})"
           f" | retries {m['retries']} | drained {m['drained']}"
-          f" | crashes {m['crashes']} restarts {m['restarts']}")
+          f" | crashes {m['crashes']} preempts {m['preempts']} "
+          f"restarts {m['restarts']}")
     for ev in report.health:
         print(f"  health: {ev}")
     for rej in report.rejected[:4]:

@@ -547,6 +547,9 @@ class StepSession:
         state = np.zeros((n_slots, 2 + eng.pool_cfg.max_pages_per_slot),
                          np.int32)
         for slot, st in self.active.items():
+            if self.done(st):
+                continue   # finished at prefill; holds its slot until the
+                           # caller's scheduled release — never decodes
             state[slot, 0] = st.last_token
             state[slot, 1] = st.length
         state[:, 2:] = self.pool.page_table
@@ -555,6 +558,8 @@ class StepSession:
         finished: List[int] = []
         for slot in sorted(self.active):
             st = self.active[slot]
+            if self.done(st):
+                continue
             st.length += 1
             tok = int(next_tokens[slot])
             st.tokens.append(tok)

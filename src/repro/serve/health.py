@@ -31,6 +31,7 @@ class _Replica:
     slow_until: float = -1.0       # router-clock time the slowdown ends
     up_at: float = -1.0            # scheduled restart time when down
     crashes: int = 0
+    preempts: int = 0
     restarts: int = 0
 
 
@@ -51,7 +52,10 @@ class HealthMonitor:
         rep.state = "down"
         rep.slow_factor, rep.slow_until = 1.0, -1.0
         rep.up_at = up_at
-        rep.crashes += 1
+        if reason == "preempt":          # two distinct fault kinds: keep
+            rep.preempts += 1            # the metrics distinguishable
+        else:
+            rep.crashes += 1
         self.log.append({"event": "down", "replica": r, "t": float(now),
                          "reason": reason})
 
@@ -106,4 +110,5 @@ class HealthMonitor:
 
     def counts(self) -> Dict[str, int]:
         return {"crashes": sum(r.crashes for r in self.replicas),
+                "preempts": sum(r.preempts for r in self.replicas),
                 "restarts": sum(r.restarts for r in self.replicas)}

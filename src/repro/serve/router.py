@@ -194,6 +194,11 @@ class ReplicaRouter:
         waiting: List[Tuple[float, float, int]] = []   # (ready, arrival, rid)
         held: List[int] = []                           # SLO "queue" pen
         next_tick: Dict[int, float] = {}               # replica -> t
+        # requests that finished at prefill, completing when the clock
+        # reaches ft: (ft, rid, replica, slot-state); the slot-state
+        # identity check at fire time detects cancelled/re-dispatched
+        # copies, so stale entries drain as no-ops
+        pending_prefill: List[Tuple[float, int, int, Any]] = []
         completed: List[RouterCompleted] = []
         rejected: List[Dict[str, Any]] = []
         events: List[Dict[str, Any]] = []
@@ -278,8 +283,12 @@ class ReplicaRouter:
                 fl.dispatch_t = now
                 fl.deadline = (now + cfg.timeout if cfg.timeout is not None
                                else float("inf"))
-            if sessions[r].done(st):               # finished at prefill
-                complete(rid, r, ft)
+            if sessions[r].done(st):               # finishes at prefill
+                # completion is an *event at ft*, not a fact at admission:
+                # the replica can still crash (or the copy be cancelled)
+                # before the clock reaches ft, so schedule it instead of
+                # completing in the past's future
+                pending_prefill.append((ft, rid, r, st))
             else:
                 base = next_tick.get(r)
                 step = cfg.step_time * health.factor(r, now)
@@ -373,9 +382,22 @@ class ReplicaRouter:
                     flights[rid].state = "waiting"
                     waiting.append((t, flights[rid].req.arrival, rid))
                     changed = True
-                # replica decode ticks
+                # prefill-only completions land when the clock reaches ft
+                for entry in [p for p in pending_prefill
+                              if p[0] <= t + 1e-12]:
+                    pending_prefill.remove(entry)
+                    _, rid, r, st = entry
+                    slot = sessions[r]._slot_of.get(rid)
+                    if slot is None or sessions[r].active.get(slot) is not st:
+                        continue   # copy cancelled (drain/timeout/hedge win)
+                    changed = True
+                    complete(rid, r, t)
+                # replica decode ticks — look up via .get(): complete()
+                # above (and hedge-loser release inside it) may pop a
+                # replica's entry while this sweep is mid-iteration
                 for r in sorted(next_tick):
-                    if next_tick[r] > t + 1e-12:
+                    tick = next_tick.get(r)
+                    if tick is None or tick > t + 1e-12:
                         continue
                     changed = True
                     for rid in sessions[r].tick():
@@ -450,6 +472,7 @@ class ReplicaRouter:
                 cands.append(arrivals[arr_i].arrival)
             cands.extend(w[0] for w in waiting if w[0] > t)
             cands.extend(next_tick.values())
+            cands.extend(p[0] for p in pending_prefill)
             if cfg.timeout is not None:
                 cands.extend(fl.deadline for fl in flights.values()
                              if fl.state == "inflight"

@@ -84,6 +84,10 @@ def test_spec_field_errors():
         faults.plan_from_spec("slow@4:x2:x3", num_steps=10, num_workers=2)
     with pytest.raises(ValueError, match="bad fault spec field"):
         faults.plan_from_spec("crash@4:q7", num_steps=10, num_workers=2)
+    # known key but non-numeric suffix: structured message, not a bare
+    # float() ValueError
+    with pytest.raises(ValueError, match="bad fault spec field"):
+        faults.plan_from_spec("crash@5:wa", num_steps=10, num_workers=2)
 
 
 def test_training_scope_rng_stream_unchanged_by_replica_fields():

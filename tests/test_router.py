@@ -147,6 +147,18 @@ def test_hedging_routes_around_straggler(engine):
     assert any(c.hedged for c in hedged.completed)
 
 
+def test_hedge_win_release_during_tick_sweep(engine):
+    # regression: a hedge win releasing the loser replica mid-sweep used
+    # to pop its next_tick entry out from under the decode-tick loop
+    # (KeyError); the loser here is the slow replica with no other work
+    trace = _trace(24, rate=2.0, min_new=4)
+    rep = ReplicaRouter(engine, RouterConfig(
+        num_replicas=2, faults="slowdown@0:r1:x20:d200",
+        hedge_after=3.0)).run(trace)
+    _accounted(rep, trace)
+    assert rep.metrics["hedges"] > 0
+
+
 def test_hedge_threshold_tracks_window():
     r = ReplicaRouter.__new__(ReplicaRouter)
     r.cfg = RouterConfig(num_replicas=2, hedge_after=5.0,
@@ -156,6 +168,37 @@ def test_hedge_threshold_tracks_window():
     assert r._hedge_threshold([1.0] * 8) == 5.0   # floor beats tiny p95
     big = r._hedge_threshold([20.0] * 8)
     assert big == pytest.approx(20.0)             # window beats the floor
+
+
+# ---------------------------------------------------------------------------
+# Prefill-only completion causality
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_only_completion_lands_at_ft(engine):
+    # max_new=1 requests finish at prefill; completion is an event at
+    # admitted + prefill_time on the virtual clock, never recorded early
+    trace = _trace(4, rate=1000.0, min_new=1, max_new=1)
+    rep = ReplicaRouter(engine, RouterConfig(num_replicas=2)).run(trace)
+    _accounted(rep, trace)
+    assert rep.metrics["completed"] == len(trace)
+    for c in rep.completed:
+        assert c.finish == pytest.approx(c.admitted + 1.0)
+        assert c.finish == c.first_token
+
+
+def test_prefill_completion_cancelled_by_crash(engine):
+    # the replica dies between admission and prefill-finish: the request
+    # must drain and recompute elsewhere, not count as completed before
+    # the clock ever reached its finish time
+    trace = _trace(1, rate=1000.0, min_new=1, max_new=1)
+    rep = ReplicaRouter(engine, RouterConfig(
+        num_replicas=2, faults="crash@1:r0")).run(trace)
+    _accounted(rep, trace)
+    assert rep.metrics["completed"] == 1
+    (c,) = rep.completed
+    assert c.drains == 1
+    assert c.finish == pytest.approx(2.0)   # re-prefilled on the survivor
 
 
 # ---------------------------------------------------------------------------

@@ -42,6 +42,7 @@ def test_crash_restart_drains_and_recovers(engine):
     _accounted(rep, trace)
     assert rep.metrics["completed"] == len(trace), "zero lost requests"
     assert rep.metrics["crashes"] == 1 and rep.metrics["restarts"] == 1
+    assert rep.metrics["preempts"] == 0
     assert rep.metrics["drained"] > 0
     # drained requests recompute from scratch: token-identical (greedy)
     assert rep.tokens_by_rid() == engine.run(trace).tokens_by_rid()
@@ -68,6 +69,8 @@ def test_preempt_auto_revives(engine):
     _accounted(rep, trace)
     assert rep.metrics["completed"] == len(trace)
     assert rep.metrics["restarts"] == 1, "preemption returns by itself"
+    assert rep.metrics["preempts"] == 1 and rep.metrics["crashes"] == 0, \
+        "preemptions must not be conflated with crashes"
     assert rep.tokens_by_rid() == engine.run(trace).tokens_by_rid()
 
 
