@@ -1,0 +1,176 @@
+"""Telemetry bench: tracer overhead + perfmodel prediction vs measured.
+
+Two CI-tracked numbers (docs/perf.md BENCH_obs schema):
+
+* ``tracer_overhead_pct`` — the disabled-tracing path. Every
+  instrumentation site in the chunked trainer costs one shared no-op
+  context manager per hook when no tracer is passed; this measures that
+  hook cost directly (a tight loop over the NULL tracer) and expresses
+  it against the measured per-chunk wall time. The acceptance bar (and
+  tests/test_obs.py) holds it under 2%.
+* ``predicted_vs_measured_err`` — closes ROADMAP's "perfmodel
+  prediction vs measured as a CI number". The analytic FLOP model
+  (``analysis/perfmodel.cell_flops``) is calibrated on ONE shape
+  (achieved FLOP/s = predicted train FLOPs / fenced measured step
+  time), then predicts the step time of the remaining shapes; the
+  reported number is the mean relative error of those predictions
+  against traced (fenced) measurements.
+
+Also reports ``traced_overhead_pct`` — the cost of *enabled* tracing
+(spans + chunk-edge fences) against the fence-only baseline.
+
+Writes experiments/bench/BENCH_obs.json + the repo-root headline mirror.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import tiny_lm_config, write_bench
+
+# hooks the chunked trainer's hot loop runs per chunk on the disabled
+# path: train/chunk + train/data_wait + train/device_wait spans and two
+# perf_counter-gated _now() calls (counted generously as a hook each)
+HOOKS_PER_CHUNK = 5
+
+
+def _build_trainer(seq: int, batch: int, tmpdir: str, tracer=None,
+                   metrics=None):
+    from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                    OptimizerConfig, ShapeConfig,
+                                    TrainConfig)
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    cfg = TrainConfig(
+        model=tiny_lm_config(),
+        shape=ShapeConfig("bench_obs", seq, batch, "train"),
+        aggregation=AggregationConfig(strategy="full_sync", num_workers=4),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.05,
+                                  scale_lr_with_workers=False),
+        checkpoint=CheckpointConfig(directory=tmpdir, every_steps=0),
+        log_every=1000, chunk_size=8, straggler_backend="host")
+    tr = Trainer(cfg, latency=Uniform(1.0, 2.0), tracer=tracer,
+                 metrics=metrics)
+    tr.init_state()
+    return tr
+
+
+def _fenced_step_s(tr, warmup_steps: int, steps: int) -> float:
+    """Mean fenced device-dispatch seconds per step (data time excluded:
+    the FLOP model predicts compute, not host staging)."""
+    tr.run(warmup_steps)
+    d0, s0 = tr._phase["dispatch_s"], tr.step
+    tr.run(steps)
+    return (tr._phase["dispatch_s"] - d0) / (tr.step - s0)
+
+
+def _null_hook_cost_s() -> float:
+    """Per-hook cost of the disabled path: one shared no-op span."""
+    from repro.obs.trace import NULL
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with NULL.span("train/chunk"):
+            pass
+    return (time.perf_counter() - t0) / n
+
+
+def main(quick: bool = True) -> dict:
+    import tempfile
+
+    from repro.analysis.perfmodel import cell_flops
+    from repro.configs.base import ShapeConfig
+    from repro.obs import MetricsRegistry, Tracer
+
+    warmup, steps = (8, 24) if quick else (16, 64)
+    # calibration shape first; the rest are predicted from its FLOP/s
+    shapes = [(32, 16), (64, 16), (32, 32)]
+    model_cfg = tiny_lm_config()
+
+    cells = []
+    for seq, batch in shapes:
+        with tempfile.TemporaryDirectory() as tmp:
+            tr = _build_trainer(seq, batch, tmp, metrics=MetricsRegistry())
+            step_s = _fenced_step_s(tr, warmup, steps)
+        flops = cell_flops(model_cfg,
+                           ShapeConfig("bench_obs", seq, batch, "train"))
+        cells.append({"seq_len": seq, "global_batch": batch,
+                      "measured_step_s": step_s,
+                      "train_flops": flops.train})
+        print(f"[obs] shape seq={seq} batch={batch}: "
+              f"{step_s * 1e3:.2f} ms/step "
+              f"({flops.train / step_s / 1e9:.2f} GFLOP/s)")
+
+    calib = cells[0]
+    flops_per_s = calib["train_flops"] / calib["measured_step_s"]
+    errs = []
+    for c in cells:
+        c["predicted_step_s"] = c["train_flops"] / flops_per_s
+        c["rel_err"] = (abs(c["predicted_step_s"] - c["measured_step_s"])
+                        / c["measured_step_s"])
+        if c is not calib:
+            errs.append(c["rel_err"])
+    predicted_vs_measured_err = sum(errs) / len(errs)
+
+    # disabled-path overhead: measured hook cost vs the measured chunk
+    hook_s = _null_hook_cost_s()
+    chunk_s = calib["measured_step_s"] * 8          # chunk_size=8
+    tracer_overhead_pct = 100.0 * HOOKS_PER_CHUNK * hook_s / chunk_s
+
+    # enabled-path overhead: spans + export bookkeeping vs fence-only
+    with tempfile.TemporaryDirectory() as tmp:
+        tr = _build_trainer(32, 16, tmp, tracer=Tracer(),
+                            metrics=MetricsRegistry())
+        traced_step_s = _fenced_step_s(tr, warmup, steps)
+    traced_overhead_pct = 100.0 * max(
+        traced_step_s - calib["measured_step_s"], 0.0) \
+        / calib["measured_step_s"]
+
+    payload = {
+        "tracer_overhead_pct": tracer_overhead_pct,
+        "traced_overhead_pct": traced_overhead_pct,
+        "predicted_vs_measured_err": predicted_vs_measured_err,
+        "null_hook_cost_us": hook_s * 1e6,
+        "calibration_flops_per_s": flops_per_s,
+        "cells": cells,
+        "quick": quick,
+    }
+    mirror = {
+        "tracer_overhead_pct": tracer_overhead_pct,
+        "predicted_vs_measured_err": predicted_vs_measured_err,
+    }
+    path = write_bench("BENCH_obs", payload, mirror)
+    print(f"[obs] tracer_overhead {tracer_overhead_pct:.4f}% "
+          f"traced_overhead {traced_overhead_pct:.1f}% "
+          f"predicted_vs_measured_err {predicted_vs_measured_err:.3f}")
+    print(f"-> {path} (+ root BENCH_obs.json)")
+    return payload
+
+
+def run(quick: bool = True):
+    """benchmarks/run.py harness contract: (name, us_per_call, derived)."""
+    payload = main(quick=quick)
+    rows = [("obs.tracer_overhead", 0.0,
+             f"{payload['tracer_overhead_pct']:.4f}%"),
+            ("obs.traced_overhead", 0.0,
+             f"{payload['traced_overhead_pct']:.1f}%"),
+            ("obs.predicted_vs_measured_err", 0.0,
+             f"{payload['predicted_vs_measured_err']:.3f}")]
+    rows += [(f"obs.step_s{c['seq_len']}x{c['global_batch']}",
+              c["measured_step_s"] * 1e6,
+              f"rel_err={c['rel_err']:.3f}") for c in payload["cells"]]
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick or os.environ.get(
+        "REPRO_BENCH_FULL", "0") not in ("1", "true"))

@@ -13,6 +13,26 @@ import numpy as np
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
 ROOT_DIR = os.path.join(os.path.dirname(__file__), "..")
 
+BENCH_SCHEMA_VERSION = 1
+
+
+def _provenance() -> Dict:
+    """{schema_version, git_sha, jax_version, device_kind} — stamped on
+    every BENCH json so a recorded number can always be tied back to the
+    commit and substrate that produced it. Best-effort: outside a git
+    checkout the sha records as "unknown"."""
+    try:
+        import subprocess
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT_DIR,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except Exception:
+        sha = ""
+    return {"schema_version": BENCH_SCHEMA_VERSION,
+            "git_sha": sha or "unknown",
+            "jax_version": jax.__version__,
+            "device_kind": jax.devices()[0].device_kind}
+
 
 def save_json(name: str, payload: Dict) -> str:
     os.makedirs(OUT_DIR, exist_ok=True)
@@ -27,8 +47,12 @@ def write_bench(name: str, payload: Dict,
     """The one writer for benchmark artifacts: the full ``payload`` goes
     to ``experiments/bench/<name>.json`` and ``mirror`` (the headline
     summary the perf-trajectory tooling tracks; defaults to the full
-    payload) to the repo-root ``<name>.json``. Returns the
-    experiments/bench path."""
+    payload) to the repo-root ``<name>.json``. Both copies are stamped
+    with a ``provenance`` block (schema_version/git_sha/jax_version/
+    device_kind). Returns the experiments/bench path."""
+    prov = _provenance()
+    payload = dict(payload, provenance=prov)
+    mirror = dict(mirror, provenance=prov) if mirror is not None else None
     path = save_json(name, payload)
     with open(os.path.join(ROOT_DIR, name + ".json"), "w") as f:
         json.dump(mirror if mirror is not None else payload, f, indent=2,

@@ -15,6 +15,7 @@ EXPERIMENTS.md.
   bench_spmd             — SPMD mesh engine vs simulated backend
   bench_recovery         — MTTR + chaos overhead of the recovery supervisor
   bench_serve            — continuous batching vs static at 3 offered loads
+  bench_obs              — tracer overhead + perfmodel predicted-vs-measured
   bench_step_time        — host step-time microbenchmark per arch
   roofline               — §Roofline terms from the dry-run artifacts
 """
@@ -31,8 +32,8 @@ def main() -> None:
     quick = common.quick_mode()
     from benchmarks import (bench_event_loop, bench_iterations_vs_n,
                             bench_layer_staleness, bench_lr_sweep,
-                            bench_recovery, bench_serve, bench_spmd,
-                            bench_staleness, bench_step_time,
+                            bench_obs, bench_recovery, bench_serve,
+                            bench_spmd, bench_staleness, bench_step_time,
                             bench_straggler, bench_sync_vs_async,
                             bench_time_to_converge, roofline)
     modules = [
@@ -47,6 +48,7 @@ def main() -> None:
         ("spmd", bench_spmd),                  # re-execs itself (forced devices)
         ("recovery", bench_recovery),
         ("serve", bench_serve),
+        ("obs", bench_obs),
         ("step_time", bench_step_time),
         ("roofline", roofline),
     ]

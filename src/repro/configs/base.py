@@ -249,6 +249,11 @@ class AggregationConfig:
     # controller may choose (0 => max(1, num_workers // 2)).
     dynamic_window: int = 32
     dynamic_min_workers: int = 0
+    # where dynamic_backup's adaptation window comes from: 'sim' (the
+    # straggler simulator's arrival model) or 'measured' (fenced
+    # wall-clock per-worker step times fed by the trainer — see
+    # docs/observability.md; host straggler backend only)
+    latency_source: str = "sim"
     staleness_tau: int = 0            # staleness strategy: target tau
     staleness_ramp_steps: int = 0     # ramp tau up over the first steps
     staleness_jitter: int = 0         # +- uniform jitter on tau

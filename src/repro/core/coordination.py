@@ -263,13 +263,26 @@ class DynamicBackup(MaskStrategy):
     backups: int              # b — total_workers = N + b
     window: int = 32
     min_workers: int = 0      # floor for the adapted n (0 -> 1)
+    latency_source: str = "sim"   # sim | measured
 
     name = "dynamic_backup"
     device_select_supported = False
 
     def __post_init__(self):
+        if self.latency_source not in ("sim", "measured"):
+            raise ValueError(
+                f"latency_source must be 'sim' or 'measured' "
+                f"(got {self.latency_source!r})")
         self.n = int(self.num_workers)
         self.history: List[np.ndarray] = []   # sorted arrival rows [W]
+        # measured mode: the window adapts from fenced wall-clock rows
+        # the trainer feeds via observe_measured (repro.obs), not from
+        # the simulator's arrival model seen in select()
+        self.measured = None
+        if self.latency_source == "measured":
+            from repro.obs.latency import EmpiricalLatencyModel
+            self.measured = EmpiricalLatencyModel(
+                self.total_workers, window=max(self.window * 8, 64))
 
     @property
     def total_workers(self) -> int:
@@ -287,7 +300,8 @@ class DynamicBackup(MaskStrategy):
         mask = np.zeros_like(arrivals, dtype=bool)
         mask[order[:n]] = True
         t = float(arrivals[order[n - 1]])
-        self._observe(arrivals)
+        if self.latency_source == "sim":
+            self._observe(arrivals)
         return mask, t
 
     # select_batch: the MaskStrategy fallback loops over select — required
@@ -311,15 +325,38 @@ class DynamicBackup(MaskStrategy):
         throughput[:floor - 1] = -np.inf
         self.n = int(np.argmax(throughput)) + 1
 
+    def observe_measured(self, times: np.ndarray) -> None:
+        """Fold one *measured* per-worker step-time row (seconds; +inf
+        for dead workers) — the trainer's fenced wall-clock feed in
+        ``latency_source='measured'`` mode. The row both joins the
+        cutoff-adaptation window (same estimator as sim mode, real
+        data) and accumulates in the :class:`EmpiricalLatencyModel`,
+        which checkpoints with the strategy and can later stand in for
+        a simulated latency model."""
+        if self.latency_source != "measured":
+            raise RuntimeError(
+                "observe_measured is only valid with "
+                "latency_source='measured'")
+        times = np.asarray(times, np.float64)
+        self.measured.record(times)
+        self._observe(times)
+
     # -- checkpointable state (saved as manifest "strategy_state") ----------
 
     def state_dict(self) -> Dict:
-        return {"n": int(self.n),
-                "history": [[float(x) for x in row] for row in self.history]}
+        d = {"n": int(self.n),
+             "history": [[float(x) for x in row] for row in self.history],
+             "latency_source": self.latency_source}
+        if self.measured is not None:
+            d["measured"] = self.measured.state_dict()
+        return d
 
     def load_state_dict(self, d: Dict) -> None:
         self.n = int(d["n"])
         self.history = [np.asarray(row, np.float64) for row in d["history"]]
+        # pre-telemetry checkpoints carry neither key: stay in sim mode
+        if self.measured is not None and d.get("measured") is not None:
+            self.measured.load_state_dict(d["measured"])
 
 
 # ---------------------------------------------------------------------------

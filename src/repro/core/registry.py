@@ -109,9 +109,10 @@ def _timeout(cfg) -> coordination.Timeout:
 
 @register("dynamic_backup")
 def _dynamic_backup(cfg) -> coordination.DynamicBackup:
-    return coordination.DynamicBackup(cfg.num_workers, cfg.backup_workers,
-                                      cfg.dynamic_window,
-                                      cfg.dynamic_min_workers)
+    return coordination.DynamicBackup(
+        cfg.num_workers, cfg.backup_workers, cfg.dynamic_window,
+        cfg.dynamic_min_workers,
+        latency_source=getattr(cfg, "latency_source", "sim"))
 
 
 @register("async")

@@ -399,7 +399,23 @@ def state_shardings(model, optimizer, mesh: Mesh, *, ema_decay: float = 0.0,
     return psh, osh, esh
 
 
-def make_train_step(model, optimizer, mesh: Mesh, **step_kwargs) -> Callable:
+
+def _traced(fn, tracer) -> Callable:
+    """Bracket a jitted mesh step with spmd/dispatch + collective-wait
+    spans. Only installed when a live tracer is passed: the fence
+    (``block_until_ready``) serializes dispatch against device work, so
+    the untraced path must keep the bare async-dispatch callable."""
+    def call(*args):
+        with tracer.span("spmd/dispatch"):
+            out = fn(*args)
+        with tracer.span("spmd/collective_wait"):
+            jax.block_until_ready(out)
+        return out
+    return call
+
+
+def make_train_step(model, optimizer, mesh: Mesh, *, tracer=None,
+                    **step_kwargs) -> Callable:
     """Jitted per-step engine, drop-in for the Trainer's ``train_step``:
     step/mask replicated, batch rows sharded over 'data', and params/
     opt/ema replicated — or sharded over 'model' under a TP plan. The
@@ -411,13 +427,16 @@ def make_train_step(model, optimizer, mesh: Mesh, **step_kwargs) -> Callable:
         model_cfg=step_kwargs.get("model_cfg"))
     rep = _replicated(mesh)
     bsh = NamedSharding(mesh, P(WORKER_AXIS))
-    return jax.jit(build_spmd_step(model, optimizer, mesh, **step_kwargs),
-                   in_shardings=(psh, osh, esh, rep, bsh, rep),
-                   out_shardings=(psh, osh, esh, rep),
-                   donate_argnums=(0, 1, 2))
+    fn = jax.jit(build_spmd_step(model, optimizer, mesh, **step_kwargs),
+                 in_shardings=(psh, osh, esh, rep, bsh, rep),
+                 out_shardings=(psh, osh, esh, rep),
+                 donate_argnums=(0, 1, 2))
+    return _traced(fn, tracer) if tracer is not None and tracer.enabled \
+        else fn
 
 
-def make_chunk_step(model, optimizer, mesh: Mesh, **step_kwargs) -> Callable:
+def make_chunk_step(model, optimizer, mesh: Mesh, *, tracer=None,
+                    **step_kwargs) -> Callable:
     """Jitted K-step engine, drop-in for the Trainer's ``chunk_step``:
     stacked batches [K, B, ...] shard axis 1 (the batch rows) over 'data';
     the scan carries the (possibly 'model'-sharded) state trees."""
@@ -427,8 +446,10 @@ def make_chunk_step(model, optimizer, mesh: Mesh, **step_kwargs) -> Callable:
         model_cfg=step_kwargs.get("model_cfg"))
     rep = _replicated(mesh)
     bsh = NamedSharding(mesh, P(None, WORKER_AXIS))
-    return jax.jit(
+    fn = jax.jit(
         build_spmd_chunk_step(model, optimizer, mesh, **step_kwargs),
         in_shardings=(psh, osh, esh, rep, bsh, rep),
         out_shardings=(psh, osh, esh, rep),
         donate_argnums=(0, 1, 2))
+    return _traced(fn, tracer) if tracer is not None and tracer.enabled \
+        else fn

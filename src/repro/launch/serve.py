@@ -26,6 +26,7 @@ replica-scope grammar (``kind@step:rN``).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -76,10 +77,12 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="[router] per-attempt deadline before a jittered "
                     "backoff retry")
     ap.add_argument("--slo-p99-ms", type=float, default=None,
-                    help="[router] SLO: windowed-p99 latency target in "
-                    "virtual milliseconds (1 unit = 1 ms)")
+                    help="SLO: windowed-p99 latency target. With --replicas "
+                    "> 1 the router gates on its virtual clock (1 unit = "
+                    "1 ms); with one replica the engine gates on measured "
+                    "wall-clock seconds (docs/observability.md)")
     ap.add_argument("--slo-mode", choices=("shed", "queue"), default="shed",
-                    help="[router] action while the SLO is violated")
+                    help="action while the SLO is violated")
     ap.add_argument("--restore", default="",
                     help="checkpoint dir: serve trained weights via the "
                     "verified restore bridge")
@@ -95,6 +98,13 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="[toy] prompt length")
     ap.add_argument("--tokens", type=int, default=16,
                     help="[toy] tokens to decode")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record prefill/decode/admit/evict (and router "
+                    "dispatch/hedge/timeout/failover) spans, exported as "
+                    "Chrome-trace JSON (load at ui.perfetto.dev)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="dump the unified metrics registry as JSONL "
+                    "(one object per metric; docs/observability.md)")
     return ap
 
 
@@ -110,14 +120,27 @@ def _validate(args) -> None:
         raise SystemExit("--replicas must be >= 1")
     if args.replicas == 1:
         for flag, val in (("--hedge-after", args.hedge_after),
-                          ("--timeout", args.timeout),
-                          ("--slo-p99-ms", args.slo_p99_ms)):
+                          ("--timeout", args.timeout)):
             if val is not None:
                 raise SystemExit(f"{flag} needs --replicas > 1 "
                                  "(the router path)")
+        if args.slo_p99_ms is not None and args.toy:
+            raise SystemExit("--slo-p99-ms has no --toy support (the gate "
+                             "lives in the serve engine / router)")
     elif args.toy or args.policy == "static":
         raise SystemExit("--replicas > 1 is the router path: continuous "
                          "policy only, no --toy")
+    for flag, value in (("--trace", args.trace),
+                        ("--metrics", args.metrics)):
+        if value is None:
+            continue
+        if args.toy:
+            raise SystemExit(f"{flag} has no --toy support (spans live in "
+                             "the serve engine / router)")
+        parent = os.path.dirname(os.path.abspath(value))
+        if not os.path.isdir(parent):
+            raise SystemExit(f"{flag} {value}: directory {parent} "
+                             "does not exist")
 
 
 def _toy_main(args, cfg, model, params) -> None:
@@ -159,7 +182,7 @@ def _toy_main(args, cfg, model, params) -> None:
         print(f"  {list(map(int, out[i]))}")
 
 
-def _router_main(args, engine, trace) -> None:
+def _router_main(args, engine, trace, tracer=None, metrics=None) -> None:
     from repro.serve import ReplicaRouter, RouterConfig, SLOConfig
     slo = None
     if args.slo_p99_ms is not None:
@@ -169,7 +192,7 @@ def _router_main(args, engine, trace) -> None:
         RouterConfig(num_replicas=args.replicas, timeout=args.timeout,
                      hedge_after=args.hedge_after, seed=args.seed,
                      faults=args.faults or None, fault_seed=args.seed),
-        slo=slo)
+        slo=slo, tracer=tracer, metrics=metrics)
     report = router.run(trace)
     m = report.metrics
     print(f"[serve] {args.arch} router replicas={args.replicas} "
@@ -211,7 +234,20 @@ def main(argv=None) -> None:
         _toy_main(args, cfg, model, params)
         return
 
-    from repro.serve import ServeEngine, TraceConfig, make_trace
+    from repro.serve import ServeEngine, SLOConfig, TraceConfig, make_trace
+    tracer = metrics = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
+    engine_slo = None
+    if args.slo_p99_ms is not None and args.replicas == 1:
+        # single-replica path: the gate runs inside the engine on its
+        # wall clock — the measured-latency SLO loop
+        engine_slo = SLOConfig(target_p99=args.slo_p99_ms,
+                               mode=args.slo_mode)
     engine = ServeEngine(
         cfg, params, num_slots=args.slots, page_size=args.page_size,
         max_prompt_len=args.max_prompt, max_new_cap=args.max_new,
@@ -219,14 +255,16 @@ def main(argv=None) -> None:
         use_kernel=args.use_kernel,
         faults=None if args.replicas > 1 else (args.faults or None),
         fault_seed=args.seed,
-        clock="virtual" if args.replicas > 1 else "wall")
+        clock="virtual" if args.replicas > 1 else "wall",
+        slo=engine_slo, tracer=tracer, metrics=metrics)
     trace = make_trace(TraceConfig(
         num_requests=args.requests, rate=args.rate,
         prompt_len_min=2, prompt_len_max=args.max_prompt,
         max_new_min=2, max_new_max=args.max_new,
         vocab=cfg.vocab_size, seed=args.seed))
     if args.replicas > 1:
-        _router_main(args, engine, trace)
+        _router_main(args, engine, trace, tracer=tracer, metrics=metrics)
+        _export_obs(args, tracer, metrics)
         return
     report = engine.run(trace, policy=args.policy)
     m = report.metrics
@@ -241,10 +279,26 @@ def main(argv=None) -> None:
           f" | occupancy {m['mean_occupancy']:.2f}"
           f" | compiles prefill={m['prefill_compiles']} "
           f"decode={m['decode_compiles']}")
+    if engine_slo is not None:
+        print(f"  slo: shed {m['rejected_slo_shed']} trips {m['slo_trips']}"
+              f" estimate {m['slo_estimate']:.3f}s")
+    print(f"  wall {m['wall_time_s']:.2f}s (prefill {m['prefill_s']:.2f}s "
+          f"decode {m['decode_s']:.2f}s)")
     for ev in report.events:
         print(f"  chaos: {ev}")
     for c in report.completed[:4]:
         print(f"  rid={c.rid} {c.tokens}")
+    _export_obs(args, tracer, metrics)
+
+
+def _export_obs(args, tracer, metrics) -> None:
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"[serve] trace: {args.trace} ({len(tracer)} events, "
+              f"{tracer.dropped} dropped)")
+    if metrics is not None:
+        metrics.dump_jsonl(args.metrics)
+        print(f"[serve] metrics: {args.metrics} ({len(metrics)} series)")
 
 
 if __name__ == "__main__":

@@ -71,7 +71,8 @@ def build_config(args) -> TrainConfig:
                                       deadline_s=deadline,
                                       softsync_c=softsync_c,
                                       dynamic_window=(args.dynamic_window
-                                                      or 32)),
+                                                      or 32),
+                                      latency_source=args.latency_source),
         optimizer=OptimizerConfig(name=args.optimizer,
                                   learning_rate=args.lr,
                                   scale_lr_with_workers=True,
@@ -102,6 +103,15 @@ def _validate(ap: argparse.ArgumentParser, args) -> None:
     if args.strategy == "dynamic_backup" and args.straggler_backend != "host":
         ap.error("--strategy dynamic_backup selects on the host (stateful "
                  "adaptation): --straggler-backend must be host")
+    if args.latency_source != "sim" and args.strategy != "dynamic_backup":
+        ap.error(f"--latency-source measured only applies to --strategy "
+                 f"dynamic_backup (got --strategy {args.strategy})")
+    for flag, value in (("--trace", args.trace),
+                        ("--metrics", args.metrics)):
+        if value is not None:
+            parent = os.path.dirname(os.path.abspath(value))
+            if not os.path.isdir(parent):
+                ap.error(f"{flag} {value}: directory {parent} does not exist")
     if args.faults and args.straggler_backend != "host":
         ap.error("--faults composes with host-planned arrivals only: "
                  "--straggler-backend must be host")
@@ -197,20 +207,41 @@ def main(argv=None) -> None:
                          "continue (repro.train.supervisor)")
     ap.add_argument("--max-restarts", type=int, default=3,
                     help="supervisor restart budget before giving up")
+    ap.add_argument("--latency-source", choices=["sim", "measured"],
+                    default="sim",
+                    help="where dynamic_backup's adaptation window comes "
+                         "from: the straggler simulator's arrival model, or "
+                         "fenced wall-clock per-worker step times measured "
+                         "on the real mesh (docs/observability.md)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record host-side spans and export Chrome-trace "
+                         "JSON here (load at ui.perfetto.dev); enables "
+                         "block_until_ready fences at chunk edges")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="dump the unified metrics registry as JSONL here "
+                         "(one object per metric; docs/observability.md)")
     args = ap.parse_args(argv)
     _validate(ap, args)
 
     cfg = build_config(args)
+    tracer = metrics = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
     resume = args.resume and os.path.exists(os.path.join(args.ckpt, "LATEST"))
     if resume:
         from repro.train import checkpoint as ckpt_lib
         print(f"[train] resumed at step {ckpt_lib.latest_step(args.ckpt)}")
     if args.supervise:
         from repro.train.supervisor import run_supervised
-        res = run_supervised(cfg, latency=PaperCalibrated())
+        res = run_supervised(cfg, latency=PaperCalibrated(), tracer=tracer,
+                             metrics=metrics)
     else:
         res = run_experiment(cfg, latency=PaperCalibrated(), resume=resume,
-                             save_final=True)
+                             save_final=True, tracer=tracer, metrics=metrics)
     for e in res.recovery_log:
         fields = " ".join(f"{k}={v}" for k, v in e.items() if k != "event")
         print(f"[train] recovery: {e['event']} {fields}")
@@ -222,6 +253,17 @@ def main(argv=None) -> None:
           f"mean_selected {res.mean_selected:.2f}, "
           f"mean_staleness {res.mean_staleness:.2f}, "
           f"restarts {res.restarts}, checkpoint {args.ckpt}")
+    if res.phase_times:
+        breakdown = " ".join(f"{k} {v:.2f}s"
+                             for k, v in sorted(res.phase_times.items()))
+        print(f"[train] wall {res.wall_time_s:.2f}s ({breakdown})")
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"[train] trace: {args.trace} ({len(tracer)} events, "
+              f"{tracer.dropped} dropped)")
+    if metrics is not None:
+        metrics.dump_jsonl(args.metrics)
+        print(f"[train] metrics: {args.metrics} ({len(metrics)} series)")
 
 
 if __name__ == "__main__":

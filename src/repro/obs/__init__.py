@@ -1,0 +1,46 @@
+"""Observability: tracing + metrics + measured latency (docs/observability.md).
+
+Zero-dependency (numpy + stdlib) and at the bottom of the layer order:
+``core``, ``distributed``, ``serve`` and ``train`` all import ``obs``,
+never the reverse. The disabled path is free — pass ``tracer=None``
+anywhere and :func:`as_tracer` substitutes the shared no-op
+:data:`NULL` tracer.
+"""
+from repro.obs.latency import EmpiricalLatencyModel
+from repro.obs.metrics import (
+    METRIC_NAMES,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    load_jsonl,
+)
+from repro.obs.quantiles import WindowedQuantile, windowed_quantile
+from repro.obs.trace import (
+    NULL,
+    SPAN_NAMES,
+    NullTracer,
+    Tracer,
+    as_tracer,
+    load_trace,
+    span_tree,
+)
+
+__all__ = [
+    "EmpiricalLatencyModel",
+    "METRIC_NAMES",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "load_jsonl",
+    "WindowedQuantile",
+    "windowed_quantile",
+    "NULL",
+    "SPAN_NAMES",
+    "NullTracer",
+    "Tracer",
+    "as_tracer",
+    "load_trace",
+    "span_tree",
+]

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import faults as faults_lib
 from repro.models import get_model
+from repro.obs.trace import as_tracer
 from repro.serve import pages as pages_lib
 from repro.serve import trace as trace_lib
 from repro.serve.paged_model import (build_paged_decode, build_paged_prefill,
@@ -106,7 +107,8 @@ class ServeEngine:
                  fault_horizon: int = 256, fault_seed: int = 0,
                  eos_id: Optional[int] = None,
                  max_queue: Optional[int] = None,
-                 strict_capacity: bool = True):
+                 strict_capacity: bool = True,
+                 slo=None, tracer=None, metrics=None):
         ok, why = supports_paged(model_cfg)
         if not ok:
             raise ValueError(f"paged serving unsupported: {why}")
@@ -115,6 +117,15 @@ class ServeEngine:
         from repro.distributed.spmd_engine import _auto_interpret
         self.cfg = model_cfg
         self.model = get_model(model_cfg)
+        # engine-level SLO admission (serve/slo.py SLOConfig): under
+        # clock='wall' the gate controls on *measured* request latency —
+        # the wall-clock SLO loop; under clock='virtual' it stays
+        # replay-deterministic. tracer/metrics are pure observability.
+        self.slo_cfg = slo
+        self.tracer = as_tracer(tracer)
+        self.registry = metrics
+        self._prefill_s = 0.0
+        self._decode_s = 0.0
         self.clock = clock
         self.step_time = step_time
         self.prefill_time = prefill_time
@@ -270,12 +281,20 @@ class ServeEngine:
         events: List[Dict[str, Any]] = []
         rejected: List[Dict[str, Any]] = []
         preempt_counts: Dict[int, int] = {}
+        from repro.serve.slo import SLOController
+        slo = SLOController(self.slo_cfg) if self.slo_cfg else None
+        held: List[trace_lib.Request] = []     # SLO "queue" holding pen
+        self._prefill_s = 0.0
+        self._decode_s = 0.0
+        wall_t0 = time.perf_counter()
         self._t0 = time.perf_counter()
         self._vnow = 0.0
         step_idx = 0
         slow_factor, slow_until = 1.0, -1
 
         def complete(slot: int, st: _Slot, now: float) -> None:
+            if slo is not None:
+                slo.observe(now - st.req.arrival)
             pool.free_slot(slot)
             free_slots.append(slot)
             completed.append(CompletedRequest(
@@ -290,7 +309,7 @@ class ServeEngine:
             events.append({"event": "reject", "rid": req.rid,
                            "reason": reason, "step": step_idx})
 
-        while pending or queue or active:
+        while pending or queue or active or held:
             now = self._now()
             while pending and pending[0].arrival <= now:
                 req = pending.popleft()
@@ -300,8 +319,24 @@ class ServeEngine:
                     # structured reason (requeued preemptions bypass this
                     # — they re-enter at the queue head, never shed)
                     reject(req, "queue_overflow", now)
+                    continue
+                verdict = slo.admit(now) if slo is not None else "admit"
+                if verdict == "shed":
+                    reject(req, "slo_shed", now)
+                elif verdict == "queue":
+                    held.append(req)
                 else:
                     queue.append(req)
+            if held and not slo.violating:
+                # gate re-opened under hysteresis: release the pen in
+                # arrival order behind whatever is already queued
+                queue.extend(held)
+                held.clear()
+            elif held and not queue and not active and not pending:
+                # gate shut but the engine is idle: nothing in flight can
+                # ever feed the estimator — probe with the oldest held
+                # request instead of deadlocking
+                queue.append(held.pop(0))
             # -- admission ---------------------------------------------------
             may_admit = bool(queue) and (policy == "continuous"
                                          or not active)
@@ -356,6 +391,8 @@ class ServeEngine:
                             queue.appendleft(st.req)
                         events.append({"event": "preempt", "step": step_idx,
                                        "evicted": len(evicted)})
+                        self.tracer.instant("serve/evict", step=step_idx,
+                                            evicted=len(evicted))
                 if not active:
                     step_idx += 1
                     continue
@@ -373,10 +410,16 @@ class ServeEngine:
                 state[slot, 1] = st.length
             state[:, 2:] = pool.page_table
             t_start = time.perf_counter()
-            toks_dev, self._bufs = self._decode(self.params, state,
-                                                self._bufs)
-            next_tokens = np.asarray(toks_dev)
-            self._advance_decode(time.perf_counter() - t_start, factor)
+            with self.tracer.span("serve/decode", step=step_idx,
+                                  n_active=len(active)):
+                toks_dev, self._bufs = self._decode(self.params, state,
+                                                    self._bufs)
+                next_tokens = np.asarray(toks_dev)
+            dt = time.perf_counter() - t_start
+            self._decode_s += dt
+            if self.registry is not None:
+                self.registry.histogram("serve/decode_s").observe(dt)
+            self._advance_decode(dt, factor)
             pool.note_occupancy()
             now = self._now()
             for slot in sorted(active):
@@ -392,10 +435,32 @@ class ServeEngine:
                     complete(slot, st, now)
             step_idx += 1
 
+        metrics = self._metrics(trace, completed, pool, step_idx, events,
+                                rejected=rejected)
+        metrics["wall_time_s"] = time.perf_counter() - wall_t0
+        metrics["prefill_s"] = self._prefill_s
+        metrics["decode_s"] = self._decode_s
+        metrics["rejected_slo_shed"] = sum(
+            1 for r in rejected if r["reason"] == "slo_shed")
+        if slo is not None:
+            metrics["slo_trips"] = slo.trips
+            metrics["slo_estimate"] = slo.estimate()
+        if self.registry is not None:
+            reg = self.registry
+            reg.counter("serve/completed").inc(len(completed))
+            reg.counter("serve/rejected").inc(len(rejected))
+            reg.counter("serve/slo_shed").inc(
+                metrics["rejected_slo_shed"])
+            reg.counter("serve/tokens").inc(
+                sum(len(c.tokens) for c in completed))
+            hl = reg.histogram("serve/latency")
+            ht = reg.histogram("serve/ttft")
+            for c in completed:
+                hl.observe(c.latency)
+                ht.observe(c.ttft)
+            reg.gauge("serve/wall_time_s").set(metrics["wall_time_s"])
         return ServeReport(policy=policy, completed=completed,
-                           metrics=self._metrics(trace, completed, pool,
-                                                 step_idx, events,
-                                                 rejected=rejected),
+                           metrics=metrics,
                            events=events, rejected=rejected)
 
     def _admit(self, req, slot: int, need: int, pool: pages_lib.PagePool,
@@ -409,11 +474,18 @@ class ServeEngine:
         meta[0] = req.prompt_len
         meta[1:] = pool.page_table[slot, :bucket // self.page_size]
         admitted = self._now()
-        t_start = time.perf_counter()
-        tok_dev, self._bufs = self._prefill(self.params, tokens, meta,
-                                            self._bufs)
-        first_tok = int(np.asarray(tok_dev))
-        self._advance_prefill(time.perf_counter() - t_start)
+        with self.tracer.span("serve/admit", rid=req.rid):
+            t_start = time.perf_counter()
+            with self.tracer.span("serve/prefill", rid=req.rid,
+                                  prompt_len=req.prompt_len):
+                tok_dev, self._bufs = self._prefill(self.params, tokens,
+                                                    meta, self._bufs)
+                first_tok = int(np.asarray(tok_dev))
+            dt = time.perf_counter() - t_start
+        self._prefill_s += dt
+        if self.registry is not None:
+            self.registry.histogram("serve/prefill_s").observe(dt)
+        self._advance_prefill(dt)
         return _Slot(req, admitted, self._now(), first_tok, preemptions)
 
     def _metrics(self, trace, completed, pool, decode_steps, events,
@@ -502,8 +574,10 @@ class StepSession:
         meta = np.empty((1 + bucket // eng.page_size,), np.int32)
         meta[0] = req.prompt_len
         meta[1:] = self.pool.page_table[slot, :bucket // eng.page_size]
-        tok_dev, self._bufs = eng._prefill(eng.params, tokens, meta,
-                                           self._bufs)
+        with eng.tracer.span("serve/prefill", rid=req.rid,
+                             replica=self.name):
+            tok_dev, self._bufs = eng._prefill(eng.params, tokens, meta,
+                                               self._bufs)
         st = _Slot(req, admitted_t, first_token_t, int(np.asarray(tok_dev)),
                    preemptions)
         self.active[slot] = st
@@ -553,7 +627,9 @@ class StepSession:
             state[slot, 0] = st.last_token
             state[slot, 1] = st.length
         state[:, 2:] = self.pool.page_table
-        toks_dev, self._bufs = eng._decode(eng.params, state, self._bufs)
+        with eng.tracer.span("serve/decode", replica=self.name,
+                             n_active=len(self.active)):
+            toks_dev, self._bufs = eng._decode(eng.params, state, self._bufs)
         next_tokens = np.asarray(toks_dev)
         finished: List[int] = []
         for slot in sorted(self.active):

@@ -41,6 +41,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import faults as faults_lib
+from repro.obs.quantiles import windowed_quantile
+from repro.obs.trace import as_tracer
 from repro.serve import trace as trace_lib
 from repro.serve.engine import ServeEngine, StepSession
 from repro.serve.health import HealthMonitor
@@ -140,10 +142,16 @@ class ReplicaRouter:
     """Deterministic event-driven router over R StepSession replicas."""
 
     def __init__(self, engine: ServeEngine, cfg: RouterConfig,
-                 slo: Optional[SLOConfig] = None):
+                 slo: Optional[SLOConfig] = None, tracer=None, metrics=None):
         self.engine = engine
         self.cfg = cfg
         self.slo_cfg = slo
+        # observability only: the tracer marks dispatch/hedge/timeout/
+        # failover instants and the registry mirrors the counters. The
+        # virtual-clock dynamics (and the returned metrics dict) never
+        # read either, so replays stay bit-identical with or without.
+        self.tracer = as_tracer(tracer)
+        self.metrics = metrics
         self.fault_plan = None
         if cfg.faults:
             plan = faults_lib.plan_from_spec(
@@ -170,17 +178,19 @@ class ReplicaRouter:
         cfg = self.cfg
         if cfg.hedge_after is None:
             return None
-        if len(lat_window) >= cfg.hedge_min_samples:
-            est = float(np.percentile(np.asarray(lat_window, np.float64),
-                                      cfg.hedge_quantile))
-            return max(est, cfg.hedge_after)
-        return cfg.hedge_after
+        # cold window -> -inf -> max() returns the floor: identical to
+        # the pre-extraction two-branch logic, bit for bit
+        est = windowed_quantile(lat_window, cfg.hedge_quantile,
+                                cfg.hedge_min_samples,
+                                default=float("-inf"))
+        return max(est, cfg.hedge_after)
 
     # -- the event loop -------------------------------------------------------
 
     def run(self, trace: Sequence[trace_lib.Request]) -> RouterReport:
         cfg = self.cfg
         eng = self.engine
+        tracer = self.tracer
         for r in trace:
             eng.validate_request(r)
         sessions = [StepSession(eng, name=f"r{i}")
@@ -278,11 +288,15 @@ class ReplicaRouter:
                 counters["hedges"] += 1
                 events.append({"event": "hedge", "rid": rid, "replica": r,
                                "t": float(now)})
+                tracer.instant("router/hedge", rid=rid, replica=r,
+                               vt=float(now))
             else:
                 fl.primary, fl.state = r, "inflight"
                 fl.dispatch_t = now
                 fl.deadline = (now + cfg.timeout if cfg.timeout is not None
                                else float("inf"))
+                tracer.instant("router/dispatch", rid=rid, replica=r,
+                               vt=float(now))
             if sessions[r].done(st):               # finishes at prefill
                 # completion is an *event at ft*, not a fact at admission:
                 # the replica can still crash (or the copy be cancelled)
@@ -318,6 +332,8 @@ class ReplicaRouter:
             next_tick.pop(r, None)
             events.append({"event": "drain", "replica": r, "t": float(now),
                            "reason": reason})
+            tracer.instant("router/failover", replica=r, reason=reason,
+                           vt=float(now))
 
         while done_count < total:
             # ---- phase A: drain everything due at time t --------------------
@@ -418,6 +434,8 @@ class ReplicaRouter:
                                 sessions[r].release(rid)
                                 untick(r)
                         counters["timeouts"] += 1
+                        tracer.instant("router/timeout", rid=rid,
+                                       vt=float(t))
                         if fl.retries >= cfg.max_retries:
                             reject(fl, "timeout", t)
                             continue
@@ -505,6 +523,16 @@ class ReplicaRouter:
 
         metrics = self._metrics(arrivals, completed, rejected, counters,
                                 health, slo)
+        if self.metrics is not None:
+            reg = self.metrics
+            reg.counter("router/completed").inc(len(completed))
+            reg.counter("router/rejected").inc(len(rejected))
+            for key in ("hedges", "hedge_wins", "timeouts", "retries",
+                        "drained"):
+                reg.counter(f"router/{key}").inc(counters[key])
+            h = reg.histogram("router/latency")
+            for c in completed:
+                h.observe(c.latency)
         return RouterReport(completed=completed, rejected=rejected,
                             metrics=metrics, events=events,
                             health=list(health.log))

@@ -27,7 +27,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List
 
-import numpy as np
+from repro.obs.quantiles import windowed_quantile
 
 SLO_MODES = ("off", "shed", "queue")
 
@@ -73,10 +73,8 @@ class SLOController:
 
     def estimate(self) -> float:
         """Current windowed p-``quantile`` latency (0 until warm)."""
-        if len(self.window) < self.cfg.min_samples:
-            return 0.0
-        return float(np.percentile(np.asarray(self.window, np.float64),
-                                   self.cfg.quantile))
+        return windowed_quantile(self.window, self.cfg.quantile,
+                                 self.cfg.min_samples, 0.0)
 
     def observe(self, latency: float) -> None:
         self.window.append(float(latency))

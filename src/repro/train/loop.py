@@ -65,6 +65,7 @@ CLI, the examples, and the benchmarks.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional
 
@@ -85,6 +86,7 @@ from repro.data.synthetic_lm import (ChunkPrefetcher, PipelineState,
                                      device_batch_fn, worker_batch)
 from repro.distributed import spmd_engine
 from repro.models import get_model
+from repro.obs.trace import as_tracer
 from repro.optim import make_optimizer, schedules
 from repro.train import checkpoint as ckpt_lib
 from repro.train import elastic
@@ -110,6 +112,11 @@ class TrainResult:
     # schema is docs/api.md "Recovery events"; empty without fault injection.
     # Deterministic in (fault spec, fault seed): no wall-clock fields.
     recovery_log: List[Dict] = dataclasses.field(default_factory=list)
+    # host wall-clock of run() (always measured — two clock reads) and,
+    # when observability is on (tracer/metrics/measured mode), the
+    # fenced per-phase breakdown {dispatch_s, data_s, ckpt_s}
+    wall_time_s: float = 0.0
+    phase_times: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 def _normalize_kills(kill_worker_at: Optional[Dict[int, Any]]
@@ -129,7 +136,8 @@ class Trainer:
     def __init__(self, cfg: TrainConfig, latency: Optional[LatencyModel] = None,
                  data_cfg: Optional[SyntheticLMConfig] = None,
                  model=None, batch_fn: Optional[Callable] = None,
-                 injector: Optional[faults_lib.FaultInjector] = None):
+                 injector: Optional[faults_lib.FaultInjector] = None,
+                 tracer=None, metrics=None):
         """``model``/``batch_fn`` override the config-derived model and
         per-worker batch source (event mode only) — how non-LM rigs like
         the §2.1 MNIST staleness experiment route through run_experiment.
@@ -137,6 +145,15 @@ class Trainer:
 
         ``injector`` attaches a chaos-engine fault plan (repro.core.faults);
         the supervisor owns it across restarts so faults fire at most once.
+
+        ``tracer`` (repro.obs.Tracer) records train/chunk, train/step,
+        train/data_wait, train/device_wait and train/ckpt_save spans;
+        ``metrics`` (repro.obs.MetricsRegistry) accumulates the train/*
+        schema. Either being set — or the strategy running with
+        ``latency_source='measured'`` — turns on block_until_ready
+        fences at chunk edges (never inside the fused scan), so chunk
+        timings are real; with both unset the loop is untouched (the
+        no-op tracer path, held under 2%% overhead by tests/test_obs.py).
         """
         self.cfg = cfg
         self.latency = latency or PaperCalibrated()
@@ -156,7 +173,17 @@ class Trainer:
         self.data_cfg = data_cfg or SyntheticLMConfig(
             vocab_size=cfg.model.vocab_size, seq_len=cfg.shape.seq_len,
             global_batch=cfg.shape.global_batch, num_workers=w, seed=cfg.seed)
+        self.tracer = as_tracer(tracer)
+        self.registry = metrics
+        self._wall_s = 0.0
+        self._phase = {"dispatch_s": 0.0, "data_s": 0.0, "ckpt_s": 0.0}
         self._build()
+        # measured mode: feed fenced wall-clock per-worker rows into the
+        # strategy's adaptation window (dynamic_backup, docs/observability)
+        self._measured_feed = (
+            getattr(self.strategy, "latency_source", "sim") == "measured")
+        self._obs = (self.tracer.enabled or self.registry is not None
+                     or self._measured_feed)
 
     # -- construction ---------------------------------------------------------
 
@@ -239,11 +266,16 @@ class Trainer:
                                  interpret=cfg.execution.interpret,
                                  model_cfg=(None if self._model_override
                                             else cfg.model))
+            engine_tracer = (self.tracer
+                             if getattr(self, "tracer", None) is not None
+                             and self.tracer.enabled else None)
             self.train_step = spmd_engine.make_train_step(
-                self.model, self.optimizer, self.mesh, **engine_kwargs)
+                self.model, self.optimizer, self.mesh,
+                tracer=engine_tracer, **engine_kwargs)
             if cfg.chunk_size > 1:
                 self.chunk_step = spmd_engine.make_chunk_step(
-                    self.model, self.optimizer, self.mesh, **engine_kwargs)
+                    self.model, self.optimizer, self.mesh,
+                    tracer=engine_tracer, **engine_kwargs)
                 self.prefetcher = ChunkPrefetcher(
                     self.pipeline.cfg, depth=cfg.prefetch_depth)
             self.step = 0
@@ -437,17 +469,24 @@ class Trainer:
             meta["dead_workers"] = [int(w) for w in
                                     np.nonzero(self.sim.dead)[0]]
         inj = self.injector
-        return ckpt_lib.save(
-            self.cfg.checkpoint.directory, self.step, self._state_tree(),
-            meta, self.cfg.checkpoint.keep,
-            retries=getattr(self.cfg.checkpoint, "write_retries", 3),
-            backoff_s=getattr(self.cfg.checkpoint, "retry_backoff_s", 0.01),
-            max_backoff_s=getattr(self.cfg.checkpoint,
-                                  "retry_max_backoff_s", 0.25),
-            jitter=getattr(self.cfg.checkpoint, "retry_jitter", 0.5),
-            backoff_seed=self.cfg.seed,
-            io_check=inj.ckpt_io_check if inj is not None else None,
-            on_retry=inj.on_ckpt_retry(self.step) if inj is not None else None)
+        t0 = self._now()
+        with self.tracer.span("train/ckpt_save", step=int(self.step)):
+            path = ckpt_lib.save(
+                self.cfg.checkpoint.directory, self.step, self._state_tree(),
+                meta, self.cfg.checkpoint.keep,
+                retries=getattr(self.cfg.checkpoint, "write_retries", 3),
+                backoff_s=getattr(self.cfg.checkpoint,
+                                  "retry_backoff_s", 0.01),
+                max_backoff_s=getattr(self.cfg.checkpoint,
+                                      "retry_max_backoff_s", 0.25),
+                jitter=getattr(self.cfg.checkpoint, "retry_jitter", 0.5),
+                backoff_seed=self.cfg.seed,
+                io_check=inj.ckpt_io_check if inj is not None else None,
+                on_retry=(inj.on_ckpt_retry(self.step)
+                          if inj is not None else None))
+        if t0 is not None:
+            self._phase["ckpt_s"] += time.perf_counter() - t0
+        return path
 
     def restore_checkpoint(self, step: Optional[int] = None) -> None:
         # manifest first: the event-mode template depends on saved metadata
@@ -698,6 +737,25 @@ class Trainer:
             min_alive_behavior: str = "rescale") -> TrainResult:
         """kill_worker_at: {step: worker_id | [worker_ids]} failure
         injections (a correlated outage kills several workers at once)."""
+        t0 = time.perf_counter()
+        step0 = self.step
+        try:
+            res = self._run(num_steps, kill_worker_at, min_alive_behavior)
+        finally:
+            self._wall_s += time.perf_counter() - t0
+            if self.registry is not None:
+                self.registry.counter("train/steps").inc(self.step - step0)
+                self.registry.gauge("train/wall_time_s").set(self._wall_s)
+                for key, v in self._phase.items():
+                    self.registry.gauge(f"train/{key}").set(v)
+        # _result() ran before the finally accumulated this run's wall
+        # time: restamp so the returned report carries the final figure
+        return dataclasses.replace(
+            res, wall_time_s=self._wall_s,
+            phase_times=dict(self._phase) if self._obs else {})
+
+    def _run(self, num_steps: int, kill_worker_at, min_alive_behavior
+             ) -> TrainResult:
         kill_worker_at = _normalize_kills(kill_worker_at)
         target = self.step + num_steps
         if self.strategy.kind == "event":
@@ -742,7 +800,9 @@ class Trainer:
             mean_selected=self._sel_sum / max(self._sel_count, 1),
             mean_staleness=self._stal_sum / max(self._stal_count, 1),
             recovery_log=(list(self.injector.log)
-                          if self.injector is not None else []))
+                          if self.injector is not None else []),
+            wall_time_s=self._wall_s,
+            phase_times=dict(self._phase) if self._obs else {})
 
     def _chunk_len_at(self, step: int, target: int,
                       kill_worker_at: Dict[int, int]) -> int:
@@ -785,15 +845,58 @@ class Trainer:
             d += kk
         return specs
 
+    # -- observability hooks (no-ops unless tracer/metrics/measured) --------
+
+    def _now(self) -> Optional[float]:
+        return time.perf_counter() if self._obs else None
+
+    def _fence(self) -> None:
+        """block_until_ready at the chunk edge — the only place device
+        work is ever awaited for observability, so the fused scan stays
+        one dispatch and async dispatch is untouched when off."""
+        with self.tracer.span("train/device_wait"):
+            jax.block_until_ready(self.params)
+
+    def _observe_chunk(self, k: int, t0: Optional[float],
+                       data_s: float) -> None:
+        if t0 is None:
+            return
+        dt = time.perf_counter() - t0
+        self._phase["dispatch_s"] += dt - data_s
+        self._phase["data_s"] += data_s
+        if self.registry is not None:
+            self.registry.histogram("train/chunk_time_s").observe(dt)
+            self.registry.histogram("train/step_time_s").observe(dt / k)
+        if self._measured_feed:
+            # one measured per-worker row per dispatch: on a lockstep
+            # mesh every live worker spends the fenced per-step wall
+            # time; dead workers arrive at +inf (the estimator's
+            # routing-around-crashes convention)
+            per_step = (dt - data_s) / k
+            row = np.where(self.sim.dead, np.inf, per_step)
+            self.strategy.observe_measured(row)
+            if self.registry is not None:
+                h = self.registry.histogram("spmd/worker_step_s")
+                for v in row[np.isfinite(row)]:
+                    h.observe(float(v))
+
     def _run_one_step(self, target: int) -> None:
         """Legacy per-step path: one dispatch + one metrics sync per step."""
-        ev = self.sim.next_event()
-        batch_np = self.pipeline.next()
-        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        mask = jnp.asarray(ev.mask)
-        self.params, self.opt_state, self.ema, m = self.train_step(
-            self.params, self.opt_state, self.ema,
-            jnp.asarray(self.step, jnp.int32), batch, mask)
+        t0 = self._now()
+        with self.tracer.span("train/step", step=int(self.step)):
+            td0 = self._now()
+            with self.tracer.span("train/data_wait"):
+                ev = self.sim.next_event()
+                batch_np = self.pipeline.next()
+                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            data_s = time.perf_counter() - td0 if td0 is not None else 0.0
+            mask = jnp.asarray(ev.mask)
+            self.params, self.opt_state, self.ema, m = self.train_step(
+                self.params, self.opt_state, self.ema,
+                jnp.asarray(self.step, jnp.int32), batch, mask)
+            if self._obs:
+                self._fence()
+        self._observe_chunk(1, t0, data_s)
         self.sim_time += ev.iteration_time
         self.step += 1
         selected = int(ev.mask.sum())
@@ -809,32 +912,47 @@ class Trainer:
                    kill_worker_at: Dict[int, int]) -> None:
         """Fused path: K steps in one lax.scan dispatch, one host sync."""
         step0 = jnp.asarray(self.step, jnp.int32)
+        t0 = self._now()
+        data_s = 0.0
         if self.cfg.straggler_backend == "device":
             # fully device-resident: batches, arrivals and masks are all
             # produced inside the scan body — no per-chunk host transfer
-            self.pipeline.state.step += k
-            dead = jnp.asarray(self.sim.dead)
-            (self.params, self.opt_state, self.ema, ms, masks_dev,
-             times_dev) = self.chunk_step_device(
-                self.params, self.opt_state, self.ema, step0, k,
-                dead, self._chunk_key)
+            with self.tracer.span("train/chunk", k=k, step=int(self.step)):
+                self.pipeline.state.step += k
+                dead = jnp.asarray(self.sim.dead)
+                (self.params, self.opt_state, self.ema, ms, masks_dev,
+                 times_dev) = self.chunk_step_device(
+                    self.params, self.opt_state, self.ema, step0, k,
+                    dead, self._chunk_key)
+                if self._obs:
+                    self._fence()
             masks = masks_dev                 # converted lazily iff logging
             times = np.asarray(times_dev, np.float64)
             self._sel_sum += float(jnp.sum(masks_dev))
             self.sim.reset_to_step(self.sim.step + k)
         else:
-            chunk_np = self.prefetcher.get(
-                self.pipeline.state.step, k,
-                next_specs=self._next_chunk_specs(k, target, kill_worker_at))
-            self.pipeline.state.step += k
-            batches = {key: jnp.asarray(v) for key, v in chunk_np.items()}
-            events = self.sim.next_events(k)
-            masks = events.masks
-            times = events.times
-            self._sel_sum += float(masks.sum())
-            self.params, self.opt_state, self.ema, ms = self.chunk_step(
-                self.params, self.opt_state, self.ema, step0, batches,
-                jnp.asarray(masks))
+            with self.tracer.span("train/chunk", k=k, step=int(self.step)):
+                td0 = self._now()
+                with self.tracer.span("train/data_wait"):
+                    chunk_np = self.prefetcher.get(
+                        self.pipeline.state.step, k,
+                        next_specs=self._next_chunk_specs(k, target,
+                                                          kill_worker_at))
+                    self.pipeline.state.step += k
+                    batches = {key: jnp.asarray(v)
+                               for key, v in chunk_np.items()}
+                data_s = (time.perf_counter() - td0
+                          if td0 is not None else 0.0)
+                events = self.sim.next_events(k)
+                masks = events.masks
+                times = events.times
+                self._sel_sum += float(masks.sum())
+                self.params, self.opt_state, self.ema, ms = self.chunk_step(
+                    self.params, self.opt_state, self.ema, step0, batches,
+                    jnp.asarray(masks))
+                if self._obs:
+                    self._fence()
+        self._observe_chunk(k, t0, data_s)
         self._sel_count += k
         # metrics sync only when a log record falls inside this chunk
         logged = [i for i in range(k)
@@ -1005,8 +1123,8 @@ def run_experiment(cfg: TrainConfig, *, latency: Optional[LatencyModel] = None,
                    resume: bool = False, save_final: bool = False,
                    kill_worker_at: Optional[Dict[int, Any]] = None,
                    min_alive_behavior: str = "rescale",
-                   injector: Optional[faults_lib.FaultInjector] = None
-                   ) -> TrainResult:
+                   injector: Optional[faults_lib.FaultInjector] = None,
+                   tracer=None, metrics=None) -> TrainResult:
     """Run any coordination regime — full_sync, backup, timeout,
     dynamic_backup, async, softsync, staleness — from ``cfg.aggregation``
     alone.
@@ -1027,7 +1145,8 @@ def run_experiment(cfg: TrainConfig, *, latency: Optional[LatencyModel] = None,
             getattr(cfg, "faults", None), num_steps=cfg.total_steps,
             num_workers=cfg.aggregation.total_workers)
     tr = Trainer(cfg, latency=latency, data_cfg=data_cfg, model=model,
-                 batch_fn=batch_fn, injector=injector)
+                 batch_fn=batch_fn, injector=injector, tracer=tracer,
+                 metrics=metrics)
     if resume and ckpt_lib.latest_step(cfg.checkpoint.directory) is not None:
         tr.restore_checkpoint()
         if injector is not None:

@@ -48,8 +48,8 @@ def run_supervised(cfg: TrainConfig, *,
                    model=None, batch_fn: Optional[Callable] = None,
                    injector: Optional[faults_lib.FaultInjector] = None,
                    max_restarts: Optional[int] = None,
-                   recover_times: Optional[List[float]] = None
-                   ) -> TrainResult:
+                   recover_times: Optional[List[float]] = None,
+                   tracer=None, metrics=None) -> TrainResult:
     """Run ``cfg`` to ``cfg.total_steps``, restarting through failures.
 
     Mirrors :func:`repro.train.loop.run_experiment`'s keyword surface;
@@ -68,7 +68,8 @@ def run_supervised(cfg: TrainConfig, *,
     crash_t: Optional[float] = None
     while True:
         tr = Trainer(cfg, latency=latency, data_cfg=data_cfg, model=model,
-                     batch_fn=batch_fn, injector=injector)
+                     batch_fn=batch_fn, injector=injector, tracer=tracer,
+                     metrics=metrics)
         if resume:
             good = ckpt_lib.find_good_step(cfg.checkpoint.directory)
             if good is not None:

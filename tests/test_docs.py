@@ -74,6 +74,33 @@ def test_every_recovery_event_documented_in_api_md():
 
 
 # ---------------------------------------------------------------------------
+# Telemetry registries <-> docs/observability.md
+# ---------------------------------------------------------------------------
+
+
+def test_every_span_name_documented_in_observability_md():
+    from repro.obs.trace import SPAN_NAMES
+
+    doc = _read("docs", "observability.md")
+    missing = [s for s in SPAN_NAMES if f"`{s}`" not in doc]
+    assert not missing, (
+        f"span names {missing} exist in repro.obs.trace.SPAN_NAMES but "
+        f"are not documented in docs/observability.md (the span taxonomy "
+        f"table)")
+
+
+def test_every_metric_name_documented_in_observability_md():
+    from repro.obs.metrics import METRIC_NAMES
+
+    doc = _read("docs", "observability.md")
+    missing = [m for m in METRIC_NAMES if f"`{m}`" not in doc]
+    assert not missing, (
+        f"metric names {missing} exist in repro.obs.metrics.METRIC_NAMES "
+        f"but are not documented in docs/observability.md (the metric "
+        f"schema table)")
+
+
+# ---------------------------------------------------------------------------
 # BENCH_*.json <-> docs/perf.md schema section
 # ---------------------------------------------------------------------------
 
@@ -97,7 +124,8 @@ def test_bench_files_exist():
     names = {os.path.basename(p) for p in _bench_files()}
     assert {"BENCH_loop.json", "BENCH_events.json",
             "BENCH_spmd.json", "BENCH_recovery.json",
-            "BENCH_serve.json", "BENCH_router.json"} <= names
+            "BENCH_serve.json", "BENCH_router.json",
+            "BENCH_obs.json"} <= names
 
 
 @pytest.mark.parametrize("path", _bench_files(),

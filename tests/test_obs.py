@@ -1,0 +1,443 @@
+"""Telemetry layer: tracer, metrics registry, measured straggler tails.
+
+Covers the docs/observability.md contracts:
+
+* the disabled-tracing path is a no-op (< 2% of the chunked loop);
+* span nesting survives a Chrome-trace export round-trip;
+* the windowed-quantile extraction matches the legacy SLO estimator;
+* ``EmpiricalLatencyModel`` rides dynamic_backup's state_dict through a
+  real checkpoint save/restore;
+* the engine-level wall-clock SLO gate trips under a slowdown fault;
+* latency_source='measured' closes the loop on the SPMD backend
+  (subprocess, forced host devices — conftest keeps 1 device here).
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import (NULL, SPAN_NAMES, METRIC_NAMES,
+                       EmpiricalLatencyModel, MetricsRegistry, Tracer,
+                       WindowedQuantile, as_tracer, load_jsonl, load_trace,
+                       span_tree, windowed_quantile)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# Windowed quantile: the estimator extracted from serve/slo.py
+# ---------------------------------------------------------------------------
+
+
+def test_windowed_quantile_matches_percentile():
+    rng = np.random.default_rng(0)
+    vals = list(rng.exponential(1.0, size=200))
+    for q in (50.0, 95.0, 99.0):
+        assert windowed_quantile(vals, q) == pytest.approx(
+            float(np.percentile(np.asarray(vals, np.float64), q)))
+
+
+def test_windowed_quantile_warmup_default():
+    assert windowed_quantile([], 99.0) == 0.0
+    assert windowed_quantile([1.0, 2.0], 99.0, min_samples=8,
+                             default=-1.0) == -1.0
+    # the router's hedge-threshold convention: -inf under warmup so
+    # max(est, hedge_after) degrades to the static threshold
+    assert windowed_quantile([], 95.0,
+                             default=float("-inf")) == float("-inf")
+
+
+def test_windowed_quantile_class_roundtrip():
+    wq = WindowedQuantile(window=8, quantile=95.0, min_samples=2)
+    for v in range(20):
+        wq.observe(float(v))
+    assert len(wq.values) == 8                     # FIFO trimmed
+    est = wq.estimate()
+    w2 = WindowedQuantile(window=8, quantile=95.0, min_samples=2)
+    w2.load_state_dict(wq.state_dict())
+    assert w2.estimate() == est
+
+
+# ---------------------------------------------------------------------------
+# Tracer: spans, ring buffer, Chrome-trace export
+# ---------------------------------------------------------------------------
+
+
+def test_span_registry_well_formed():
+    assert len(set(SPAN_NAMES)) == len(SPAN_NAMES)
+    assert len(set(METRIC_NAMES)) == len(METRIC_NAMES)
+    for name in SPAN_NAMES + METRIC_NAMES:
+        cat, _, rest = name.partition("/")
+        assert cat in ("train", "spmd", "serve", "router") and rest, name
+
+
+def test_tracer_export_roundtrip_and_nesting(tmp_path):
+    tr = Tracer()
+    with tr.span("train/chunk", k=4):
+        with tr.span("train/data_wait"):
+            time.sleep(0.001)
+        with tr.span("train/device_wait"):
+            time.sleep(0.001)
+    tr.instant("router/hedge", rid=7)
+    tr.counter("train/steps", 4)
+    path = tmp_path / "trace.json"
+    tr.export(str(path))
+
+    data = load_trace(str(path))
+    assert data["otherData"]["dropped"] == 0
+    phases = {e["ph"] for e in data["traceEvents"]}
+    assert phases == {"X", "i", "C"}
+    roots = span_tree(data["traceEvents"])
+    assert [r["name"] for r in roots] == ["train/chunk"]
+    kids = [c["name"] for c in roots[0]["children"]]
+    assert kids == ["train/data_wait", "train/device_wait"]
+    assert roots[0]["args"] == {"k": 4}
+
+
+def test_tracer_ring_drops_oldest(tmp_path):
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.instant("serve/evict", i=i)
+    assert len(tr) == 4 and tr.dropped == 6
+    assert [e["args"]["i"] for e in tr.events] == [6, 7, 8, 9]
+    path = tmp_path / "t.json"
+    tr.export(str(path))
+    assert load_trace(str(path))["otherData"]["dropped"] == 6
+
+
+def test_load_trace_rejects_malformed(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"traceEvents": [{"name": "x", "ph": "X",
+                                                "ts": 0.0}]}))
+    with pytest.raises(ValueError, match="dur"):
+        load_trace(str(bad))
+    bad.write_text(json.dumps([1, 2]))
+    with pytest.raises(ValueError, match="traceEvents"):
+        load_trace(str(bad))
+
+
+def test_null_tracer_is_shared_noop():
+    assert as_tracer(None) is NULL and not NULL.enabled
+    s1, s2 = NULL.span("train/chunk", k=1), NULL.span("serve/decode")
+    assert s1 is s2                                # no per-call allocation
+    with s1:
+        pass
+    NULL.instant("router/timeout")
+    NULL.export("/nonexistent/dir/never_written.json")
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_registry_kinds_and_jsonl(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("serve/completed").inc(3)
+    reg.gauge("train/wall_time_s").set(1.5)
+    h = reg.histogram("router/latency")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert h.summary()["count"] == 4
+    assert h.summary()["mean"] == pytest.approx(2.5)
+    assert h.quantile(50.0) == pytest.approx(2.5)
+    with pytest.raises(ValueError, match="counter"):
+        reg.gauge("serve/completed")               # kind mismatch
+
+    path = tmp_path / "metrics.jsonl"
+    reg.dump_jsonl(str(path))
+    rows = load_jsonl(str(path))
+    by_name = {r["name"]: r for r in rows}
+    assert by_name["serve/completed"]["value"] == 3
+    assert by_name["router/latency"]["p99"] == pytest.approx(
+        float(np.percentile([1.0, 2.0, 3.0, 4.0], 99.0)))
+
+
+# ---------------------------------------------------------------------------
+# EmpiricalLatencyModel: measured tails for dynamic_backup
+# ---------------------------------------------------------------------------
+
+
+def test_empirical_latency_model_records_and_samples():
+    m = EmpiricalLatencyModel(num_workers=3, window=16)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        m.record([1.0, 2.0, np.inf])               # worker 2 dead this row
+    assert m.rows == 8 and m.dropped == 8
+    out = m.sample(rng, (5, 3))
+    assert out.shape == (5, 3) and np.isfinite(out).all()
+    assert set(np.unique(out[:, 0])) <= {1.0}
+    # worker 2 never contributed a finite sample: pooled fallback
+    assert set(np.unique(out[:, 2])) <= {1.0, 2.0}
+    assert m.quantile(50.0, worker=1) == pytest.approx(2.0)
+
+    m2 = EmpiricalLatencyModel(num_workers=3)
+    m2.load_state_dict(m.state_dict())
+    assert m2.rows == 8
+    assert m2.mean_row() == pytest.approx(m.mean_row())
+
+
+def test_empirical_latency_model_fallback_before_data():
+    m = EmpiricalLatencyModel(num_workers=2, fallback_s=0.5)
+    out = m.sample(np.random.default_rng(0), (4, 2))
+    assert (out == 0.5).all()
+
+
+# ---------------------------------------------------------------------------
+# dynamic_backup measured mode
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_backup_measured_state_roundtrip():
+    from repro.core.coordination import DynamicBackup
+
+    db = DynamicBackup(4, 2, window=4, latency_source="measured")
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        db.observe_measured(rng.exponential(1.0, size=6))
+    sd = db.state_dict()
+    assert sd["latency_source"] == "measured"
+    assert sd["measured"]["rows"] == 6
+
+    db2 = DynamicBackup(4, 2, window=4, latency_source="measured")
+    db2.load_state_dict(sd)
+    assert db2.n == db.n and db2.measured.rows == 6
+
+    # pre-telemetry checkpoints (no 'measured' key) still load
+    db3 = DynamicBackup(4, 2, window=4, latency_source="measured")
+    db3.load_state_dict({"n": 5, "history": sd["history"]})
+    assert db3.n == 5 and db3.measured.rows == 0
+
+
+def test_dynamic_backup_sim_mode_rejects_measured_feed():
+    from repro.core.coordination import DynamicBackup
+
+    db = DynamicBackup(4, 2)
+    assert db.latency_source == "sim" and db.measured is None
+    with pytest.raises(RuntimeError, match="measured"):
+        db.observe_measured(np.ones(6))
+    with pytest.raises(ValueError, match="latency_source"):
+        DynamicBackup(4, 2, latency_source="oracle")
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration: spans, phases, measured feed through a checkpoint
+# ---------------------------------------------------------------------------
+
+
+def _train_cfg(tmp_path, **kw):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.common import tiny_lm_config
+    from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                    OptimizerConfig, ShapeConfig,
+                                    TrainConfig)
+    agg = dict(strategy="full_sync", num_workers=4)
+    agg.update(kw.pop("agg", {}))
+    defaults = dict(
+        model=tiny_lm_config(),
+        shape=ShapeConfig("t", 16, 8, "train"),
+        aggregation=AggregationConfig(**agg),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.05,
+                                  scale_lr_with_workers=False),
+        checkpoint=CheckpointConfig(directory=str(tmp_path), every_steps=0),
+        log_every=100, chunk_size=4, straggler_backend="host")
+    defaults.update(kw)
+    return TrainConfig(**defaults)
+
+
+def test_trainer_traced_run_emits_spans_and_phases(tmp_path):
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    tracer, reg = Tracer(), MetricsRegistry()
+    tr = Trainer(_train_cfg(tmp_path), latency=Uniform(1.0, 2.0),
+                 tracer=tracer, metrics=reg)
+    tr.init_state()
+    res = tr.run(8)
+
+    names = {e["name"] for e in tracer.events}
+    assert names <= set(SPAN_NAMES)
+    assert {"train/chunk", "train/device_wait",
+            "train/data_wait"} <= names
+    roots = span_tree(list(tracer.events))
+    chunk_roots = [r for r in roots if r["name"] == "train/chunk"]
+    assert len(chunk_roots) == 2                   # 8 steps / chunk_size 4
+    assert res.wall_time_s > 0
+    assert set(res.phase_times) == {"dispatch_s", "data_s", "ckpt_s"}
+    assert res.phase_times["dispatch_s"] > 0
+    assert reg.counter("train/steps").value == 8
+    assert reg.histogram("train/chunk_time_s").count == 2
+
+
+def test_trainer_untraced_result_has_no_phase_breakdown(tmp_path):
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    tr = Trainer(_train_cfg(tmp_path), latency=Uniform(1.0, 2.0))
+    tr.init_state()
+    res = tr.run(4)
+    assert res.phase_times == {}                   # observability off
+    assert res.wall_time_s > 0                     # wall clock is free
+
+
+def test_measured_feed_rides_checkpoint(tmp_path):
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    cfg = _train_cfg(tmp_path, agg=dict(
+        strategy="dynamic_backup", num_workers=4, backup_workers=2,
+        dynamic_window=4, latency_source="measured"))
+    tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    tr.init_state()
+    tr.run(8)
+    assert tr.strategy.measured.rows == 2          # one row per chunk
+    path = tr.save_checkpoint()
+    assert os.path.exists(path)
+
+    tr2 = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    tr2.init_state()
+    tr2.restore_checkpoint()
+    assert tr2.strategy.measured.rows == 2
+    assert tr2.strategy.measured.mean_row() == pytest.approx(
+        tr.strategy.measured.mean_row())
+    assert tr2.strategy.n == tr.strategy.n
+
+
+def test_null_path_overhead_under_two_percent(tmp_path):
+    """ISSUE acceptance: disabled tracing costs < 2% of the chunked loop.
+
+    Non-flaky by construction: the no-op hook cost is measured in a
+    tight loop (sub-µs) and compared against the *measured* wall time of
+    one chunk_size=32 fused dispatch (tens of ms) — a ~3 orders of
+    magnitude margin."""
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    tr = Trainer(_train_cfg(tmp_path, chunk_size=32),
+                 latency=Uniform(1.0, 2.0))
+    tr.init_state()
+    tr.run(32)                                     # compile + warm
+    t0 = time.perf_counter()
+    tr.run(32)
+    chunk_s = time.perf_counter() - t0
+
+    n = 100_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with NULL.span("train/chunk"):
+            pass
+    hook_s = (time.perf_counter() - t0) / n
+    hooks_per_chunk = 5        # chunk + data_wait + device_wait + 2 clock
+    overhead = hooks_per_chunk * hook_s / chunk_s
+    assert overhead < 0.02, (
+        f"no-op tracing hooks cost {overhead:.2%} of a chunk "
+        f"({hook_s * 1e6:.2f}us/hook, {chunk_s * 1e3:.1f}ms/chunk)")
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock SLO gate under a slowdown fault (serve engine)
+# ---------------------------------------------------------------------------
+
+
+def test_wall_clock_slo_trips_under_slowdown():
+    import jax
+
+    from repro import configs
+    from repro.models import get_model
+    from repro.serve.engine import ServeEngine
+    from repro.serve.slo import SLOConfig
+    from repro.serve.trace import Request
+
+    cfg = configs.get_smoke_config("qwen3-0.6b")
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    def req(rid, arrival):
+        return Request(rid=rid, arrival=arrival,
+                       prompt=rng.integers(0, cfg.vocab_size, size=4,
+                                           dtype=np.int32).astype(np.int32),
+                       max_new=5)
+
+    kw = dict(num_slots=2, page_size=4, max_prompt_len=8, max_new_cap=8,
+              clock="wall")
+    warm = [req(100 + i, 0.0) for i in range(2)]   # pay jit compile
+    early = [req(i, 0.0) for i in range(6)]
+
+    eng = ServeEngine(cfg, params, **kw)
+    eng.run(warm)
+    base = eng.run(early)
+    p99_base = base.metrics["p99_latency"]
+    assert base.metrics["completed"] == len(early)
+
+    # calibrate the SLO to 3x the healthy tail and slow decode 30x: the
+    # early burst's measured latencies blow through the target, and the
+    # late burst arrives only after the slowed early completions (its
+    # arrival scales with the measured baseline, so there is no
+    # machine-speed race) — the wall-clock gate must have tripped by then
+    t_late = max(2.0, 60.0 * p99_base)
+    trace = early + [req(6 + i, t_late) for i in range(10)]
+    slo = SLOConfig(target_p99=max(3.0 * p99_base, 1e-3), mode="shed",
+                    window=32, min_samples=4, probe_every=0)
+    hit_eng = ServeEngine(cfg, params, slo=slo,
+                          faults="slowdown@1:x30:d1000000", **kw)
+    hit_eng.run(warm)
+    hit = hit_eng.run(trace)
+    assert hit.metrics["slo_trips"] >= 1
+    assert hit.metrics["rejected_slo_shed"] >= 1
+    assert hit.metrics["completed"] + hit.metrics["rejected"] == len(trace)
+    assert hit.metrics["wall_time_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Measured mode on the SPMD backend (subprocess: forced host devices)
+# ---------------------------------------------------------------------------
+
+
+def test_measured_dynamic_backup_on_spmd_backend():
+    code = r"""
+import numpy as np
+from benchmarks.common import tiny_lm_config
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                ExecutionConfig, OptimizerConfig,
+                                ShapeConfig, TrainConfig)
+from repro.core.straggler import Uniform
+from repro.train.loop import Trainer
+
+import tempfile
+with tempfile.TemporaryDirectory() as tmp:
+    cfg = TrainConfig(
+        model=tiny_lm_config(),
+        shape=ShapeConfig("t", 16, 12, "train"),
+        aggregation=AggregationConfig(
+            strategy="dynamic_backup", num_workers=4, backup_workers=2,
+            dynamic_window=4, latency_source="measured"),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.05,
+                                  scale_lr_with_workers=False),
+        checkpoint=CheckpointConfig(directory=tmp, every_steps=0),
+        execution=ExecutionConfig(backend="spmd", mesh_data=2),
+        log_every=100, chunk_size=4, straggler_backend="host")
+    tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    tr.init_state()
+    res = tr.run(8)
+    assert tr._spmd, "expected the SPMD execution backend"
+    assert tr.strategy.measured.rows == 2, tr.strategy.measured.rows
+    row = tr.strategy.measured.mean_row()
+    assert np.isfinite(row).all() and (np.asarray(row) > 0).all()
+    sd = tr.strategy.state_dict()
+    assert sd["latency_source"] == "measured"
+    assert sd["measured"]["rows"] == 2
+    print("measured-on-spmd OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [SRC, root, env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "measured-on-spmd OK" in out.stdout
