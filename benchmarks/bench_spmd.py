@@ -22,6 +22,13 @@ parallelize. Tracking the overhead ratio per commit is the point: it is
 the price of mesh execution at a given (W, K, M), and regressions here
 are regressions on real hardware too.
 
+Each cell also reports a BYTES-MOVED axis: per-step collective wire
+traffic parsed from the optimized HLO (launch.dryrun.parse_collectives,
+while-loop bodies multiplied by trip count) — after the fused bucketed
+reduce-then-psum rework one psum per bucket carries gradient plus
+monitoring scalars, so the axis makes the collective-count win (3 ->
+1 per step at bucket_size=0) directly visible next to the wall-clock.
+
 Writes experiments/bench/BENCH_spmd.json and mirrors the headline
 summary to the repo-root BENCH_spmd.json.
 """
@@ -59,7 +66,7 @@ MESH_MODELS = (1, 2)
 
 
 def build_trainer(backend: str, workers: int, chunk_size: int,
-                  mesh_model: int = 1):
+                  mesh_model: int = 1, tracer=None, metrics=None):
     from repro import configs
     from repro.configs.base import (AggregationConfig, CheckpointConfig,
                                     ExecutionConfig, OptimizerConfig,
@@ -86,18 +93,56 @@ def build_trainer(backend: str, workers: int, chunk_size: int,
         execution=ExecutionConfig(backend=backend, mesh_data=workers,
                                   mesh_model=mesh_model),
         log_every=1, chunk_size=chunk_size)
-    tr = Trainer(cfg, latency=Uniform(1.0, 2.0))
+    tr = Trainer(cfg, latency=Uniform(1.0, 2.0), tracer=tracer,
+                 metrics=metrics)
     tr.init_state()
     return tr
 
 
-def measure_all(specs, steps: int, reps: int = 3):
+def collective_bytes_per_step(tr) -> dict:
+    """The bytes-moved axis: lower the trainer's installed step (the
+    chunked scan when chunk_size > 1), parse the optimized HLO with
+    ``launch.dryrun.parse_collectives`` (while-loop bodies multiplied by
+    trip count), and report per-STEP collective traffic. 'sim' cells are
+    single-device and report zeros — the axis prices exactly what the
+    mesh engine puts on the wire (one fused psum per bucket after the
+    bucketed reduce-then-psum rework; docs/spmd.md)."""
+    import jax.numpy as jnp
+
+    from repro.launch.dryrun import parse_collectives
+
+    cfg = tr.cfg
+    K = cfg.chunk_size
+    B, S = cfg.shape.global_batch, cfg.shape.seq_len
+    W = cfg.aggregation.total_workers
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+             "labels": jnp.zeros((B, S), jnp.int32)}
+    if K > 1:
+        stack = {k: jnp.zeros((K,) + v.shape, v.dtype)
+                 for k, v in batch.items()}
+        lowered = tr.chunk_step.lower(
+            tr.params, tr.opt_state, tr.ema, jnp.int32(0), stack,
+            jnp.ones((K, W), jnp.float32))
+    else:
+        lowered = tr.train_step.lower(
+            tr.params, tr.opt_state, tr.ema, jnp.int32(0), batch,
+            jnp.ones((W,), jnp.float32))
+    coll = parse_collectives(lowered.compile().as_text())
+    return {"collective_bytes_per_step": coll["total_wire_bytes"] / K,
+            "collective_ops_per_step": coll["num_ops"] / K}
+
+
+def measure_all(specs, steps: int, reps: int = 5, tracer=None, metrics=None):
     """Build+compile every config first, then interleave the timed reps
     so CPU thermal drift doesn't systematically penalize whichever
-    config is measured last."""
+    config is measured last. Best-of-5 per config: the fast chunk=1
+    cells step in ~3ms, so best-of-3 still carries visible scheduler
+    noise into the ratios. The bytes-moved axis is read from each
+    trainer's lowered HLO after the timed reps (untimed)."""
     trainers = []
     for backend, workers, chunk, mesh_model in specs:
-        tr = build_trainer(backend, workers, chunk, mesh_model)
+        tr = build_trainer(backend, workers, chunk, mesh_model,
+                           tracer=tracer, metrics=metrics)
         tr.run(max(chunk, 8))                      # compile + warm caches
         trainers.append(tr)
     best = [None] * len(specs)
@@ -108,21 +153,44 @@ def measure_all(specs, steps: int, reps: int = 3):
             dt = time.perf_counter() - t0
             best[i] = dt if best[i] is None or dt < best[i] else best[i]
     return [{"backend": b, "workers": w, "chunk_size": c, "mesh_model": m,
-             "steps": steps, "wall_s": wall, "steps_per_s": steps / wall}
-            for (b, w, c, m), wall in zip(specs, best)]
+             "steps": steps, "wall_s": wall, "steps_per_s": steps / wall,
+             **collective_bytes_per_step(tr)}
+            for (b, w, c, m), wall, tr in zip(specs, best, trainers)]
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer timed steps (CI)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record host-side spans across every measured "
+                         "trainer and export a Chrome trace here (adds "
+                         "dispatch fences — numbers will be slower)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="dump the unified metrics registry as JSONL here")
+    ap.add_argument("--platform", default=None, choices=("cpu", "gpu"),
+                    help="pin the jax platform and apply its XLA flag "
+                         "recipe (gpu: the latency-hiding flags the "
+                         "bucketed psum overlap is shaped for)")
     args = ap.parse_args(argv)
+    if args.platform:
+        from repro.launch import mesh as mesh_lib
+        added = mesh_lib.set_platform(args.platform)
+        if added:
+            print(f"[bench_spmd] XLA flags: {' '.join(added)}")
+    tracer = metrics = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
 
     steps = 32 if args.quick else 96
     specs = [("sim", w, c, 1) for w in WORKER_COUNTS for c in CHUNK_SIZES]
     specs += [("spmd", w, c, m) for w in WORKER_COUNTS for c in CHUNK_SIZES
               for m in MESH_MODELS]
-    results = measure_all(specs, steps)
+    results = measure_all(specs, steps, tracer=tracer, metrics=metrics)
 
     def rate(backend, workers, chunk, mesh_model):
         return next(r["steps_per_s"] for r in results
@@ -137,6 +205,12 @@ def main(argv=None) -> dict:
               rate("spmd", w, c, m) / rate("sim", w, c, 1)
               for w in WORKER_COUNTS for c in CHUNK_SIZES
               for m in MESH_MODELS}
+    # bytes-moved axis: per-step collective wire traffic of each spmd
+    # cell (sim cells are single-device, identically zero)
+    bytes_moved = {
+        f"spmd_bytes_per_step_w{r['workers']}_chunk{r['chunk_size']}"
+        f"_m{r['mesh_model']}": r["collective_bytes_per_step"]
+        for r in results if r["backend"] == "spmd"}
     payload = {
         "bench": "spmd",
         "model": "qwen3-0.6b tiny (1L, d32)",
@@ -145,15 +219,25 @@ def main(argv=None) -> dict:
         "steps": steps,
         "results": results,
         **ratios,
+        **bytes_moved,
     }
     path = write_bench("BENCH_spmd", payload,
-                       mirror={"bench": "spmd", **ratios})
+                       mirror={"bench": "spmd", **ratios, **bytes_moved})
     for r in results:
         print(f"backend={r['backend']:<5} W={r['workers']} "
               f"chunk={r['chunk_size']:>3} m={r['mesh_model']} "
-              f"{r['steps_per_s']:8.1f} steps/s")
+              f"{r['steps_per_s']:8.1f} steps/s "
+              f"{r['collective_bytes_per_step'] / 1024:8.1f} KiB/step "
+              f"({r['collective_ops_per_step']:.0f} colls)")
     for k, v in ratios.items():
         print(f"{k}: {v:.3f}")
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"[bench_spmd] trace: {args.trace} ({len(tracer)} events)")
+    if metrics is not None:
+        metrics.dump_jsonl(args.metrics)
+        print(f"[bench_spmd] metrics: {args.metrics} "
+              f"({len(metrics)} series)")
     print(f"-> {path} (+ root BENCH_spmd.json)")
     return payload
 
@@ -163,11 +247,21 @@ def run(quick: bool = True):
 
     Executed in a fresh subprocess: the forced host device count must be
     set before jax initializes, which the harness process already did.
+    Trace / metrics / platform requests reach the child through the
+    ``REPRO_BENCH_TRACE`` / ``REPRO_BENCH_METRICS`` /
+    ``REPRO_BENCH_PLATFORM`` env vars (the ``run(quick)`` signature is
+    fixed by the harness), forwarded as the child's own CLI flags.
     """
     import json
     cmd = [sys.executable, os.path.abspath(__file__)]
     if quick:
         cmd.append("--quick")
+    for var, flag in (("REPRO_BENCH_TRACE", "--trace"),
+                      ("REPRO_BENCH_METRICS", "--metrics"),
+                      ("REPRO_BENCH_PLATFORM", "--platform")):
+        val = os.environ.get(var)
+        if val:
+            cmd += [flag, val]
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)        # let the module force its own devices
     subprocess.run(cmd, check=True, env=env,

@@ -318,10 +318,24 @@ class ExecutionConfig:
     mesh_data: int = 1                # 'data' axis size (devices); W % it == 0
     mesh_model: int = 1               # 'model' (tensor-parallel) axis size
     # in-shard reduce: the kernels/backup_reduce Pallas kernel (True) or
-    # the jnp reference reduction (False)
-    use_kernel: bool = True
+    # the jnp reference reduction (False). None = auto: the kernel on
+    # TPU (where it runs natively), the jnp dot elsewhere — interpret-
+    # mode Pallas is pure overhead off-TPU (docs/spmd.md, BENCH_spmd)
+    use_kernel: Optional[bool] = None
     # Pallas interpret mode: None = auto (interpret off TPU), or forced
     interpret: Optional[bool] = None
+    # per-worker gradient batching inside each 'data' shard: 0 = vmap ALL
+    # local workers (one fused program, the fast path when activation
+    # memory allows), 1 = sequential lax.map (one worker's activations at
+    # a time), k = microbatches of k vmapped workers (k must divide
+    # total_workers / mesh_data — validated with a structured error)
+    grad_batch: int = 0
+    # fused bucketed reduce-then-psum (kernels/bucketed_reduce): lanes of
+    # the flattened gradient per collective. 0 = one bucket (a single
+    # psum carries gradient + monitoring scalars); >0 cuts the flatten
+    # into fixed-size buckets whose psums overlap the remaining reduce
+    # compute under the latency-hiding XLA recipe (docs/spmd.md)
+    bucket_size: int = 0
 
     @property
     def num_devices(self) -> int:

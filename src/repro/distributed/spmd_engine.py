@@ -68,10 +68,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import ema as ema_lib
-from repro.core import sync_backup
 from repro.distributed import sharding as sharding_lib
 from repro.distributed import tp
-from repro.kernels.backup_reduce import backup_reduce
+from repro.kernels.bucketed_reduce import reduce_then_psum
 from repro.launch.mesh import make_host_mesh
 from repro.optim import optimizers as opt_lib
 
@@ -129,6 +128,41 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is not None:
         return interpret
     return jax.default_backend() != "tpu"
+
+
+def _auto_use_kernel(use_kernel: Optional[bool]) -> bool:
+    """Default reduce implementation: the Pallas kernel where it compiles
+    natively (TPU), the jnp dot elsewhere — interpret-mode Pallas is pure
+    overhead on CPU/GPU (measured in BENCH_spmd; docs/spmd.md)."""
+    if use_kernel is not None:
+        return use_kernel
+    return jax.default_backend() == "tpu"
+
+
+def validate_grad_batch(grad_batch: int, w_local: int) -> int:
+    """Resolve ``ExecutionConfig.grad_batch`` against the local worker
+    count; returns the effective batch size.
+
+    ``0`` (the default) batches ALL local workers through one ``vmap`` —
+    the fast path whenever activation memory allows, since every worker's
+    forward/backward fuses into one program with no inner loop. ``1``
+    recovers the sequential ``lax.map`` (one worker's activations live at
+    a time — the per-machine footprint of the paper's setup). Any other
+    value microbatches: groups of ``grad_batch`` workers are vmapped and
+    the groups run sequentially, so it must divide ``W_local``.
+    """
+    if grad_batch < 0:
+        raise ValueError(
+            f"grad_batch: expected a non-negative worker-batch size, got "
+            f"{grad_batch} (0 = vmap all local workers, 1 = sequential "
+            f"lax.map, k = microbatches of k workers)")
+    if grad_batch and w_local % grad_batch:
+        divisors = [d for d in range(1, w_local + 1) if w_local % d == 0]
+        raise ValueError(
+            f"grad_batch: {grad_batch} does not divide the per-shard "
+            f"worker count W_local={w_local} (total_workers / mesh_data); "
+            f"valid values here: 0 (vmap all) or one of {divisors}")
+    return grad_batch or w_local
 
 
 # ---------------------------------------------------------------------------
@@ -222,8 +256,10 @@ def _params_template(model):
 def build_spmd_step(model, optimizer: opt_lib.Optimizer, mesh: Mesh, *,
                     num_workers: int, n_aggregate: int,
                     ema_decay: float = 0.0, clip_norm: float = 0.0,
-                    use_kernel: bool = True, interpret: Optional[bool] = None,
-                    block: int = 4096, model_cfg=None) -> Callable:
+                    use_kernel: Optional[bool] = None,
+                    interpret: Optional[bool] = None,
+                    block: int = 4096, grad_batch: int = 0,
+                    bucket_size: int = 0, model_cfg=None) -> Callable:
     """Mesh twin of ``train_step.build_train_step`` — same signature:
 
         step(params, opt_state, ema, step, batch, mask)
@@ -232,10 +268,17 @@ def build_spmd_step(model, optimizer: opt_lib.Optimizer, mesh: Mesh, *,
     ``batch`` rows are worker-contiguous (the data-pipeline layout), so
     sharding axis 0 over ``'data'`` gives each shard exactly its local
     workers' rows; ``mask`` is the host-planned [W] selection, sharded to
-    [W_local] per shard. Aggregation is in-shard masked reduce (Pallas
-    ``backup_reduce`` over the local [W_local, P_local] stack, or the jnp
-    reference) + one ``psum`` over ``'data'``; optimizer/EMA run outside
-    the shard_map.
+    [W_local] per shard. Per-worker gradients are BATCHED per
+    ``grad_batch`` (0 = one ``vmap`` over all local workers — the fast
+    path; 1 = the sequential ``lax.map``, one worker's activations at a
+    time; k = microbatches of k vmapped workers run sequentially).
+    Aggregation is the fused bucketed reduce-then-psum
+    (``kernels.bucketed_reduce``): the in-shard masked reduce (Pallas
+    ``backup_reduce`` or the jnp dot, per ``use_kernel``) runs per
+    ``bucket_size`` lanes and each bucket's ``psum`` over ``'data'`` is
+    issued as soon as that bucket reduces, with the step's monitoring
+    scalars packed into the last bucket — one collective per bucket
+    covers gradient + metrics. Optimizer/EMA run outside the shard_map.
 
     With ``model_cfg`` given and a non-trivial TP plan (mesh 'model' axis
     > 1, shardable groups), params/opt/EMA enter SHARDED over 'model':
@@ -254,7 +297,9 @@ def build_spmd_step(model, optimizer: opt_lib.Optimizer, mesh: Mesh, *,
             f"total_workers ({num_workers}) must be divisible by the "
             f"'{WORKER_AXIS}' axis size ({mesh_data})")
     w_local = num_workers // mesh_data
+    gb = validate_grad_batch(grad_batch, w_local)
     interp = _auto_interpret(interpret)
+    use_kernel = _auto_use_kernel(use_kernel)
     plan = resolve_tp(model_cfg, mesh)
     if plan.any:
         from repro.models import get_model
@@ -280,28 +325,44 @@ def build_spmd_step(model, optimizer: opt_lib.Optimizer, mesh: Mesh, *,
                 worker_loss, has_aux=True)(params, worker_batch)
             return g, mean_loss, aux
 
-        # sequential over local workers: one worker's activations at a
-        # time — the per-machine memory footprint of the paper's setup.
-        # The tp context is entered here (inside the traced body) so the
-        # f/g psum hooks fire exactly for engine-built computations.
+        # per-worker gradients, batched per grad_batch: the full vmap is
+        # one fused program with no inner loop (the fast path); lax.map
+        # keeps one worker's activations live at a time — the per-machine
+        # memory footprint of the paper's setup; k-sized microbatches
+        # interpolate. The tp context is entered here (inside the traced
+        # body) so the f/g psum hooks fire exactly for engine-built
+        # computations.
         with tp.tensor_parallel(tp_ctx) if tp_ctx else contextlib.nullcontext():
-            grads, losses, auxes = jax.lax.map(one_worker, shards)
+            if gb == w_local:
+                grads, losses, auxes = jax.vmap(one_worker)(shards)
+            elif gb == 1:
+                grads, losses, auxes = jax.lax.map(one_worker, shards)
+            else:
+                groups = jax.tree_util.tree_map(
+                    lambda x: x.reshape((w_local // gb, gb) + x.shape[1:]),
+                    shards)
+                grads, losses, auxes = jax.lax.map(
+                    lambda g: jax.vmap(one_worker)(g), groups)
+                grads, losses, auxes = jax.tree_util.tree_map(
+                    lambda x: x.reshape((w_local,) + x.shape[2:]),
+                    (grads, losses, auxes))
         mf = mask.astype(jnp.float32)
-        if use_kernel:
-            flat, spec = flatten_stacked(grads)     # [W_local, P_local] f32
-            red = backup_reduce(flat, mask, n_aggregate, block=block,
-                                interpret=interp)   # [P_local] local sum / N
-            agg = unflatten_vector(jax.lax.psum(red, WORKER_AXIS), spec)
-        else:
-            agg = sync_backup.aggregate_masked(grads, mask, n_aggregate)
-            agg = jax.tree_util.tree_map(
-                lambda g: jax.lax.psum(g, WORKER_AXIS), agg)
-        # masked mean of per-worker losses, matching the sim backend's
-        # monitoring metric: sel = (1/N) sum_w mask_w * mean_loss_w.
-        # Losses are replicated over 'model' (the CE ends in psums), so
-        # only the 'data' reduction is collective.
-        sel = jax.lax.psum(jnp.sum(losses * mf), WORKER_AXIS) / n_aggregate
-        aux = jax.lax.psum(jnp.sum(auxes), WORKER_AXIS) / num_workers
+        # fused bucketed reduce-then-psum (kernels.bucketed_reduce): the
+        # in-shard masked reduce runs per bucket and each bucket's psum
+        # over 'data' is issued immediately, with the two monitoring
+        # scalars riding the last bucket — ceil(P/bucket) collectives
+        # (ONE by default) cover Alg. 4 line 7 plus the metrics. Losses
+        # are replicated over 'model' (the CE ends in psums), so only
+        # the 'data' reduction is collective.
+        flat, spec = flatten_stacked(grads)         # [W_local, P_local] f32
+        tail = jnp.stack([jnp.sum(losses * mf), jnp.sum(auxes)])
+        red, tail = reduce_then_psum(
+            flat, mask, n_aggregate, axis_name=WORKER_AXIS,
+            bucket=bucket_size, tail=tail, use_kernel=use_kernel,
+            interpret=interp, block=block)
+        agg = unflatten_vector(red, spec)
+        sel = tail[0] / n_aggregate
+        aux = tail[1] / num_workers
         return agg, sel, aux
 
     mapped = _shard_map(

@@ -1,4 +1,4 @@
-"""Production mesh builders.
+"""Production mesh builders + the platform / XLA-flag recipe.
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state (the dry-run sets XLA_FLAGS before any jax import; everything else
@@ -6,12 +6,62 @@ sees the real single device).
 """
 from __future__ import annotations
 
+import os
+from typing import List, Optional
+
 import jax
 
 try:                                   # jax >= 0.5: explicit axis types
     from jax.sharding import AxisType
 except ImportError:                    # older jax: Auto is the only mode
     AxisType = None
+
+
+# The latency-hiding recipe (docs/spmd.md): async collectives + the
+# latency-hiding scheduler let each bucket's psum from the fused
+# bucketed reduce (kernels/bucketed_reduce) overlap the remaining
+# per-worker gradient compute instead of serializing behind it.
+# These are GPU flags: CPU/TPU XLA builds treat unknown --xla_gpu_*
+# flags as a FATAL parse error, so they are only ever applied when the
+# target platform is 'gpu' (or explicitly forced).
+LATENCY_HIDING_FLAGS = (
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+
+def enable_latency_hiding(*, platform: Optional[str] = None,
+                          force: bool = False) -> List[str]:
+    """Append the latency-hiding XLA flags to ``XLA_FLAGS`` (idempotent).
+
+    Only takes effect before the first jax device query (XLA parses the
+    env once at backend init), and only when ``platform == 'gpu'`` or
+    ``force=True`` — see ``LATENCY_HIDING_FLAGS``. Returns the flags
+    actually added, so callers can log what changed.
+    """
+    if platform != "gpu" and not force:
+        return []
+    flags = os.environ.get("XLA_FLAGS", "")
+    added = [f for f in LATENCY_HIDING_FLAGS
+             if f.split("=")[0] not in flags]
+    if added:
+        os.environ["XLA_FLAGS"] = " ".join([flags] + added).strip()
+    return added
+
+
+def set_platform(platform: str = "cpu", *,
+                 latency_hiding: bool = True) -> List[str]:
+    """Pin the jax platform and apply its XLA flag recipe.
+
+    Call before any jax computation (the platform pin and ``XLA_FLAGS``
+    both only take effect at backend init). On ``'gpu'`` this applies
+    the latency-hiding flags the fused bucketed reduce-then-psum is
+    shaped for; on ``'cpu'``/``'tpu'`` the flag recipe is a no-op (the
+    flags are unknown to those XLA builds). Returns the flags added.
+    """
+    jax.config.update("jax_platform_name", platform)
+    return enable_latency_hiding(platform=platform) if latency_hiding else []
 
 
 def _mesh(shape, axes):

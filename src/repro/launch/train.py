@@ -81,7 +81,9 @@ def build_config(args) -> TrainConfig:
                                     every_steps=args.ckpt_every),
         execution=ExecutionConfig(backend=args.execution,
                                   mesh_data=args.mesh_data or 1,
-                                  mesh_model=args.mesh_model or 1),
+                                  mesh_model=args.mesh_model or 1,
+                                  grad_batch=args.grad_batch or 0,
+                                  bucket_size=args.bucket_size or 0),
         seed=args.seed, total_steps=args.steps, log_every=10,
         chunk_size=args.chunk_size,
         straggler_backend=args.straggler_backend,
@@ -125,7 +127,9 @@ def _validate(ap: argparse.ArgumentParser, args) -> None:
         ap.error(f"--straggler-backend device only applies to mask "
                  f"strategies (got --strategy {args.strategy})")
     for flag, value in (("--mesh-data", args.mesh_data),
-                        ("--mesh-model", args.mesh_model)):
+                        ("--mesh-model", args.mesh_model),
+                        ("--grad-batch", args.grad_batch),
+                        ("--bucket-size", args.bucket_size)):
         if value is not None and args.execution != "spmd":
             ap.error(f"{flag} only applies to --execution spmd")
     if args.execution == "spmd":
@@ -139,6 +143,13 @@ def _validate(ap: argparse.ArgumentParser, args) -> None:
         if total % (args.mesh_data or 1):
             ap.error(f"total workers ({total}) must be divisible by "
                      f"--mesh-data ({args.mesh_data})")
+        if args.grad_batch is not None:
+            from repro.distributed.spmd_engine import validate_grad_batch
+            try:
+                validate_grad_batch(args.grad_batch,
+                                    total // (args.mesh_data or 1))
+            except ValueError as e:
+                ap.error(f"--grad-batch: {e}")
 
 
 def main(argv=None) -> None:
@@ -188,6 +199,24 @@ def main(argv=None) -> None:
                          "worker's gradient tensor-parallel (docs/spmd.md); "
                          "model dims must divide or the axis is carried "
                          "replicated")
+    ap.add_argument("--grad-batch", type=int, default=None,
+                    help="per-shard worker-gradient batching (spmd only): "
+                         "0 = vmap all local workers (fast path), 1 = "
+                         "sequential lax.map (lowest activation memory), "
+                         "k = microbatches of k workers (must divide "
+                         "total workers / mesh-data)")
+    ap.add_argument("--bucket-size", type=int, default=None,
+                    help="lanes of the flattened gradient per collective "
+                         "in the fused bucketed reduce-then-psum (spmd "
+                         "only; 0 = one psum carries gradient + metrics, "
+                         "docs/spmd.md)")
+    ap.add_argument("--platform", choices=["cpu", "gpu", "tpu"],
+                    default=None,
+                    help="pin the jax platform and apply its XLA flag "
+                         "recipe before backend init (launch.mesh."
+                         "set_platform; on gpu this enables async "
+                         "collectives + the latency-hiding scheduler the "
+                         "bucketed reduce-then-psum overlaps under)")
     ap.add_argument("--prefetch-depth", type=int, default=1,
                     help="chunks speculatively built ahead of the device "
                          "dispatch (chunked loop; 1 = double buffering)")
@@ -223,6 +252,11 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     _validate(ap, args)
 
+    if args.platform:
+        from repro.launch import mesh as mesh_lib
+        added = mesh_lib.set_platform(args.platform)
+        if added:
+            print(f"[train] XLA latency-hiding flags: {' '.join(added)}")
     cfg = build_config(args)
     tracer = metrics = None
     if args.trace:

@@ -264,6 +264,8 @@ class Trainer:
             engine_kwargs = dict(step_kwargs,
                                  use_kernel=cfg.execution.use_kernel,
                                  interpret=cfg.execution.interpret,
+                                 grad_batch=cfg.execution.grad_batch,
+                                 bucket_size=cfg.execution.bucket_size,
                                  model_cfg=(None if self._model_override
                                             else cfg.model))
             engine_tracer = (self.tracer

@@ -5,10 +5,14 @@ Mesh semantics run in subprocesses with xla_force_host_platform_device_count
 tests/conftest.py); the engine's degenerate mesh_data=1 case and the pure
 helpers run in process so tier-1 covers the engine on every change.
 """
+from pathlib import Path
+
 import numpy as np
 import pytest
 
 from test_spmd_subprocess import run_py as _run_py
+
+_ROOT = Path(__file__).resolve().parents[1]
 
 
 def run_py(code: str, devices: int = 8, timeout: int = 600) -> str:
@@ -77,7 +81,7 @@ def _tiny_model_cfg():
 
 def _train_cfg(backend, tmp_path, *, strategy="backup", workers=6, backups=2,
                deadline=0.5, mesh_data=1, mesh_model=1, chunk=1, every=0,
-               use_kernel=True):
+               use_kernel=True, grad_batch=0, bucket_size=0):
     from repro.configs.base import (AggregationConfig, CheckpointConfig,
                                     ExecutionConfig, OptimizerConfig,
                                     ShapeConfig, TrainConfig)
@@ -94,7 +98,9 @@ def _train_cfg(backend, tmp_path, *, strategy="backup", workers=6, backups=2,
         checkpoint=CheckpointConfig(directory=str(tmp_path), every_steps=every),
         execution=ExecutionConfig(backend=backend, mesh_data=mesh_data,
                                   mesh_model=mesh_model,
-                                  use_kernel=use_kernel),
+                                  use_kernel=use_kernel,
+                                  grad_batch=grad_batch,
+                                  bucket_size=bucket_size),
         seed=0, total_steps=6, log_every=1, chunk_size=chunk)
 
 
@@ -128,6 +134,70 @@ def test_spmd_single_device_mesh_matches_sim(tmp_path, chunk):
     assert ra.sim_time == rb.sim_time
     assert [m["selected"] for m in ra.metrics] == \
         [m["selected"] for m in rb.metrics]
+
+
+def test_grad_batch_validation_errors():
+    """ExecutionConfig.grad_batch: structured errors on bad worker-batch
+    sizes — negatives and non-divisors of W_local (listing the valid
+    divisors), with 0 resolving to the full-vmap fast path."""
+    from repro.distributed.spmd_engine import validate_grad_batch
+
+    assert validate_grad_batch(0, 4) == 4       # vmap ALL local workers
+    assert validate_grad_batch(1, 4) == 1       # sequential lax.map
+    assert validate_grad_batch(2, 4) == 2       # microbatches of 2
+    assert validate_grad_batch(6, 6) == 6
+    with pytest.raises(ValueError, match="non-negative"):
+        validate_grad_batch(-1, 4)
+    with pytest.raises(ValueError, match=r"0 \(vmap all\) or one of "
+                                         r"\[1, 2, 3, 6\]"):
+        validate_grad_batch(4, 6)
+    with pytest.raises(ValueError, match="does not divide"):
+        validate_grad_batch(8, 4)
+
+
+@pytest.mark.parametrize("grad_batch", [1, 2, 4])
+def test_spmd_grad_batch_paths_match_vmap(tmp_path, grad_batch):
+    """The three per-worker batching strategies (full vmap, sequential
+    lax.map, vmapped microbatches) are the SAME function: identical
+    trajectories on the single-device mesh, in-process for tier-1.
+    W_local = 8 here (6 workers + 2 backups on mesh_data=1), so
+    grad_batch=2 and 4 are genuine microbatches."""
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    lat = Uniform(1.0, 2.0)
+    tv = Trainer(_train_cfg("spmd", tmp_path / "v", chunk=2, grad_batch=0),
+                 latency=lat)
+    tv.init_state()
+    rv = tv.run(4)
+    tb = Trainer(_train_cfg("spmd", tmp_path / "b", chunk=2,
+                            grad_batch=grad_batch), latency=lat)
+    tb.init_state()
+    rb = tb.run(4)
+    _assert_close_trees(rv.params, rb.params, rtol=1e-5, atol=1e-6)
+    _assert_close_trees(rv.ema, rb.ema, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose([m["loss"] for m in rv.metrics],
+                               [m["loss"] for m in rb.metrics],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_spmd_bucketed_psum_matches_single_bucket(tmp_path):
+    """bucket_size > 0 cuts the fused flatten into several collectives
+    (the tail scalars riding the last); the trajectory must not move."""
+    from repro.core.straggler import Uniform
+    from repro.train.loop import Trainer
+
+    lat = Uniform(1.0, 2.0)
+    t1 = Trainer(_train_cfg("spmd", tmp_path / "one", chunk=2),
+                 latency=lat)
+    t1.init_state()
+    r1 = t1.run(4)
+    t2 = Trainer(_train_cfg("spmd", tmp_path / "many", chunk=2,
+                            bucket_size=5000), latency=lat)
+    t2.init_state()
+    r2 = t2.run(4)
+    _assert_close_trees(r1.params, r2.params, rtol=1e-5, atol=1e-6)
+    _assert_close_trees(r1.ema, r2.ema, rtol=1e-5, atol=1e-6)
 
 
 def test_spmd_kernel_and_jnp_reduce_agree(tmp_path):
@@ -250,6 +320,116 @@ def test_spmd_parity_mesh_8x1():
     assert "resume-through-chunk parity OK" in out
 
 
+def test_spmd_grad_batch_parity_matrix():
+    """The acceptance matrix on a real TP (2, 2) mesh (W_local = 4):
+    for every mask strategy, the vmapped (grad_batch=0), sequential
+    (grad_batch=1) and microbatched (grad_batch=2, with a multi-bucket
+    fused psum) engines all match the single-device sim trajectory —
+    batching and bucketing are execution detail, never semantics."""
+    run_py(r"""
+import numpy as np, jax
+from repro import configs
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                ExecutionConfig, OptimizerConfig, ShapeConfig,
+                                TrainConfig, replace)
+from repro.core.straggler import Uniform
+from repro.train.loop import Trainer
+
+model_cfg = replace(configs.get_smoke_config("qwen3-0.6b"), num_layers=1,
+                    d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                    d_ff=64, vocab_size=64, vocab_pad_multiple=16)
+
+def cfg(backend, strategy, ck, workers, backups, grad_batch=0, bucket=0):
+    return TrainConfig(
+        model=model_cfg, shape=ShapeConfig("t", 16, 16, "train"),
+        aggregation=AggregationConfig(strategy=strategy, num_workers=workers,
+                                      backup_workers=backups, deadline_s=0.5),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.05,
+                                  scale_lr_with_workers=False, ema_decay=0.99),
+        checkpoint=CheckpointConfig(directory=ck, every_steps=0),
+        execution=ExecutionConfig(backend=backend, mesh_data=2, mesh_model=2,
+                                  grad_batch=grad_batch, bucket_size=bucket),
+        seed=0, total_steps=6, log_every=1, chunk_size=3)
+
+def close(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=2e-4, atol=2e-5)
+
+lat = Uniform(1.0, 2.0)
+for strategy, workers, backups in (("full_sync", 8, 0), ("backup", 6, 2),
+                                   ("timeout", 8, 0)):
+    ref = Trainer(cfg("sim", strategy, f"/tmp/gbm_sim_{strategy}", workers,
+                      backups), latency=lat)
+    ref.init_state(); rr = ref.run(6)
+    for gb, bucket in ((0, 0), (1, 0), (2, 5000)):
+        tr = Trainer(cfg("spmd", strategy, f"/tmp/gbm_{strategy}_{gb}",
+                         workers, backups, gb, bucket), latency=lat)
+        tr.init_state(); rt = tr.run(6)
+        close(rr.params, rt.params)
+        close(rr.ema, rt.ema)
+        np.testing.assert_allclose([m["loss"] for m in rr.metrics],
+                                   [m["loss"] for m in rt.metrics],
+                                   rtol=2e-4, atol=2e-5)
+        assert rr.sim_time == rt.sim_time
+        assert [m["selected"] for m in rr.metrics] == \
+            [m["selected"] for m in rt.metrics]
+        print(strategy, "gb", gb, "bucket", bucket, "parity OK")
+print("grad-batch matrix OK")
+""")
+
+
+def test_spmd_grad_batch_resume_through_chunk_tp():
+    """Checkpoint/resume THROUGH a mesh chunk with grad_batch=2 on the
+    TP (4, 2) mesh: the batched-gradient engine rejoins the
+    uninterrupted sim trajectory exactly like the default engine."""
+    run_py(r"""
+import numpy as np, jax
+from repro import configs
+from repro.configs.base import (AggregationConfig, CheckpointConfig,
+                                ExecutionConfig, OptimizerConfig, ShapeConfig,
+                                TrainConfig, replace)
+from repro.core.straggler import Uniform
+from repro.train.loop import Trainer
+
+model_cfg = replace(configs.get_smoke_config("qwen3-0.6b"), num_layers=1,
+                    d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                    d_ff=64, vocab_size=64, vocab_pad_multiple=16)
+
+def cfg(backend, ck, mesh=(1, 1), grad_batch=0, every=0):
+    return TrainConfig(
+        model=model_cfg, shape=ShapeConfig("t", 16, 16, "train"),
+        aggregation=AggregationConfig(strategy="backup", num_workers=6,
+                                      backup_workers=2),
+        optimizer=OptimizerConfig(name="momentum", learning_rate=0.05,
+                                  scale_lr_with_workers=False, ema_decay=0.99),
+        checkpoint=CheckpointConfig(directory=ck, every_steps=every),
+        execution=ExecutionConfig(backend=backend, mesh_data=mesh[0],
+                                  mesh_model=mesh[1], grad_batch=grad_batch),
+        seed=0, total_steps=8, log_every=1, chunk_size=2)
+
+def close(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=2e-4, atol=2e-5)
+
+lat = Uniform(1.0, 2.0)
+ck = "/tmp/gb_resume"
+t1 = Trainer(cfg("spmd", ck, (4, 2), grad_batch=2, every=3), latency=lat)
+t1.init_state(); t1.run(3)                       # checkpoints at step 3
+t2 = Trainer(cfg("spmd", ck, (4, 2), grad_batch=2, every=3), latency=lat)
+t2.restore_checkpoint()
+assert t2.step == 3
+r2 = t2.run(5)                                   # -> step 8
+ref = Trainer(cfg("sim", "/tmp/gb_resume_ref"), latency=lat)
+ref.init_state(); rr = ref.run(8)
+close(rr.params, r2.params)
+close(rr.ema, r2.ema)
+assert rr.sim_time == r2.sim_time
+print("grad-batch resume-through-chunk parity OK")
+""")
+
+
 def test_spmd_rescale_shrinks_worker_axis():
     """When failures push alive below N, the elastic rescale shrinks the
     mesh 'data' axis to the largest size the new worker count divides —
@@ -312,11 +492,121 @@ print("spmd cli OK")
      "--straggler-backend", "device"],                         # device masks
     ["--strategy", "backup", "--workers", "3", "--backups", "0",
      "--execution", "spmd", "--mesh-data", "2"],               # 3 % 2 != 0
+    ["--strategy", "backup", "--grad-batch", "2"],             # no spmd
+    ["--strategy", "backup", "--bucket-size", "4096"],         # no spmd
+    ["--strategy", "backup", "--workers", "6", "--backups", "2",
+     "--execution", "spmd", "--mesh-data", "2",
+     "--grad-batch", "3"],                                     # 4 % 3 != 0
+    ["--strategy", "backup", "--execution", "spmd",
+     "--grad-batch", "-1"],                                    # negative
 ])
 def test_spmd_cli_rejects_mismatched_args(argv):
     from repro.launch import train as train_cli
     with pytest.raises(SystemExit):
         train_cli.main(argv + ["--smoke", "--steps", "1"])
+
+
+def test_grad_batch_cli_error_names_valid_divisors(capsys):
+    """The argparse error surfaces the engine's structured message: the
+    offending value AND the divisors that would work."""
+    from repro.launch import train as train_cli
+    with pytest.raises(SystemExit):
+        train_cli.main(["--strategy", "backup", "--workers", "6",
+                        "--backups", "2", "--execution", "spmd",
+                        "--mesh-data", "2", "--grad-batch", "3",
+                        "--smoke", "--steps", "1"])
+    err = capsys.readouterr().err
+    assert "--grad-batch: grad_batch: 3 does not divide" in err
+    assert "W_local=4" in err
+    assert "[1, 2, 4]" in err
+
+
+def test_spmd_grad_batch_cli_smoke():
+    """--grad-batch / --bucket-size thread from argv to the engine."""
+    run_py(r"""
+from repro.launch import train as train_cli
+train_cli.main(["--arch", "qwen3-0.6b", "--smoke", "--steps", "4",
+                "--workers", "3", "--backups", "1", "--batch-per-worker", "2",
+                "--seq", "16", "--ckpt", "/tmp/gb_cli_ck",
+                "--optimizer", "momentum", "--lr", "0.05",
+                "--execution", "spmd", "--mesh-data", "2",
+                "--grad-batch", "2", "--bucket-size", "4096",
+                "--chunk-size", "2"])
+import os
+assert os.path.exists(os.path.join("/tmp/gb_cli_ck", "LATEST"))
+print("grad-batch cli OK")
+""", devices=4)
+
+
+def test_spmd_regression_guard(tmp_path):
+    """check_spmd_regression: ratios guard against DROPS, the bytes axis
+    against GROWTH, small drift passes, >20% fails with exit 1."""
+    import importlib
+    import json
+    import sys as _sys
+
+    _sys.path.insert(0, str(_ROOT / "benchmarks"))
+    guard = importlib.import_module("check_spmd_regression")
+
+    base = {"bench": "spmd",
+            "spmd_vs_sim_w8_chunk32_m1": 0.50,
+            "spmd_bytes_per_step_w8_chunk32_m1": 50000.0}
+
+    def check(fresh):
+        b, f = tmp_path / "base.json", tmp_path / "fresh.json"
+        b.write_text(json.dumps(base))
+        f.write_text(json.dumps({"bench": "spmd", **fresh}))
+        return guard.main([str(b), str(f)])
+
+    assert check({"spmd_vs_sim_w8_chunk32_m1": 0.45,          # -10%: ok
+                  "spmd_bytes_per_step_w8_chunk32_m1": 55000.0}) == 0
+    assert check({"spmd_vs_sim_w8_chunk32_m1": 0.65,          # improvement
+                  "spmd_bytes_per_step_w8_chunk32_m1": 30000.0}) == 0
+    assert check({"spmd_vs_sim_w8_chunk32_m1": 0.39,          # -22%: fail
+                  "spmd_bytes_per_step_w8_chunk32_m1": 50000.0}) == 1
+    assert check({"spmd_vs_sim_w8_chunk32_m1": 0.50,
+                  "spmd_bytes_per_step_w8_chunk32_m1": 65000.0}) == 1  # +30%
+    # new cells in fresh / cells only in baseline never fail the guard
+    assert check({"spmd_vs_sim_w8_chunk32_m1": 0.50,
+                  "spmd_vs_sim_w16_chunk64_m4": 0.9}) == 0
+
+
+def test_bench_run_forwards_flags(monkeypatch, tmp_path):
+    """bench_spmd.run() re-execs itself in a fresh subprocess (the forced
+    device count must precede jax init); trace/metrics/platform requests
+    must survive that hop — forwarded from env to the child's argv."""
+    import importlib
+    import os as _os
+    import subprocess as _sp
+    import sys as _sys
+
+    saved = _os.environ.get("XLA_FLAGS")
+    _sys.path.insert(0, str(_ROOT / "benchmarks"))
+    try:
+        bench_spmd = importlib.import_module("bench_spmd")
+    finally:
+        if saved is None:
+            _os.environ.pop("XLA_FLAGS", None)
+        else:
+            _os.environ["XLA_FLAGS"] = saved
+    calls = []
+
+    def fake_run(cmd, **kw):
+        calls.append(cmd)
+        return _sp.CompletedProcess(cmd, 0)
+
+    monkeypatch.setattr(bench_spmd.subprocess, "run", fake_run)
+    monkeypatch.setenv("REPRO_BENCH_TRACE", str(tmp_path / "t.json"))
+    monkeypatch.setenv("REPRO_BENCH_METRICS", str(tmp_path / "m.jsonl"))
+    monkeypatch.setenv("REPRO_BENCH_PLATFORM", "cpu")
+    rows = bench_spmd.run(quick=True)
+    (cmd,) = calls
+    assert "--quick" in cmd
+    assert cmd[cmd.index("--trace") + 1] == str(tmp_path / "t.json")
+    assert cmd[cmd.index("--metrics") + 1] == str(tmp_path / "m.jsonl")
+    assert cmd[cmd.index("--platform") + 1] == "cpu"
+    # rows come from the committed BENCH payload (the child was faked)
+    assert any(name.startswith("spmd.spmd_vs_sim") for name, _, _ in rows)
 
 
 # ---------------------------------------------------------------------------
